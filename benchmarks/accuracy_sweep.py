@@ -1,0 +1,40 @@
+"""B4 — error-bound guarantee sweep: for φ ∈ {1%, 5%, 10%}, every query's
+observed relative error must be ≤ the reported bound ≤ φ (or the answer
+became exact). Also reports the observed-error distribution — typically
+far inside the deterministic bound."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, fresh_engine, workload
+
+
+def main():
+    results = {}
+    for phi in (0.01, 0.05, 0.10):
+        eng = fresh_engine()
+        wins = workload(eng.dataset, 30)
+        errs, bounds, viol = [], [], 0
+        t0 = 0.0
+        for w in wins:
+            for agg in ("sum", "mean"):
+                r = eng.query(w, agg, "a0", phi=phi)
+                truth = eng.oracle(w, agg, "a0")
+                err = abs(r.value - truth) / max(abs(truth), 1e-12)
+                errs.append(err)
+                bounds.append(r.bound)
+                t0 += r.eval_time_s
+                if not (r.exact or r.bound <= phi + 1e-9):
+                    viol += 1
+                if err > r.bound + 1e-6:
+                    viol += 1
+        errs = np.array(errs)
+        emit(f"accuracy_phi{int(phi*100)}", t0 * 1e6 / len(errs),
+             f"violations={viol};median_err={np.median(errs):.5f};"
+             f"p99_err={np.quantile(errs, 0.99):.5f};phi={phi}")
+        results[phi] = viol
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""B5 — partial vs full adaptation cost: tiles split, objects
+reorganized, and index growth along the workload (the paper's "reduce
+the costs associated with ... refining the index" claim)."""
+from __future__ import annotations
+
+from .common import emit, fresh_engine, workload
+
+
+def main():
+    out = {}
+    for name, phi in (("exact", 0.0), ("phi1", 0.01), ("phi5", 0.05)):
+        eng = fresh_engine()
+        wins = workload(eng.dataset, 30)
+        t = 0.0
+        for w in wins:
+            t += eng.query(w, "mean", "a0", phi=phi).eval_time_s
+        a = eng.adapt_stats
+        emit(f"adaptation_{name}", t * 1e6 / len(wins),
+             f"tiles_split={a.tiles_split};"
+             f"objects_reorganized={a.objects_reorganized};"
+             f"active_tiles={eng.index.n_active}")
+        out[name] = a.tiles_split
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""B3 — data-plane kernel microbenchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode
+(correctness path); their wall time is NOT the TPU number. We therefore
+benchmark (a) the jnp oracle under jit — the CPU stand-in whose data
+movement matches the kernel — at full size, and (b) the Pallas kernels in
+interpret mode at reduced size to document the validation cost. The
+structural VMEM analysis (block sizes vs the ~16 MiB budget) is printed
+alongside; TPU wall-clock belongs to the roofline table.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.kernels import ops
+from repro.kernels.window_agg import DEFAULT_BLOCK_ROWS, LANES
+
+from .common import emit
+
+
+def _time(fn, *args, reps=5, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    np.asarray(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n = 1_000_000
+    xs = rng.uniform(0, 1000, n).astype(np.float32)
+    ys = rng.uniform(0, 1000, n).astype(np.float32)
+    vs = rng.normal(0, 10, n).astype(np.float32)
+    win = np.array([200, 200, 600, 600], np.float32)
+    bbox = np.array([0, 0, 1000, 1000], np.float32)
+
+    t = _time(ops.window_agg, xs, ys, vs, win, backend="jnp")
+    gbps = 3 * n * 4 / t / 1e9
+    emit("window_agg_jnp_1M", t * 1e6, f"GB_s={gbps:.2f}")
+
+    t = _time(ops.bin_agg, xs, ys, vs, bbox, gx=2, gy=2, backend="jnp")
+    emit("bin_agg_jnp_1M_2x2", t * 1e6, f"GB_s={3*n*4/t/1e9:.2f}")
+
+    t = _time(ops.window_agg, xs, ys, vs, win, backend="np")
+    emit("window_agg_np_1M", t * 1e6, f"GB_s={3*n*4/t/1e9:.2f}")
+
+    n2 = 65_536
+    t = _time(ops.window_agg, xs[:n2], ys[:n2], vs[:n2], win,
+              backend="pallas", reps=2)
+    emit("window_agg_pallas_interpret_64K", t * 1e6, "validation_path")
+
+    vmem = 3 * DEFAULT_BLOCK_ROWS * LANES * 4 + 4 * DEFAULT_BLOCK_ROWS * \
+        LANES
+    emit("window_agg_vmem_per_step", 0.0,
+         f"bytes={vmem};fits_16MiB={vmem < 16*2**20}")
+    return None
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark harness — one entry per paper table/figure/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows (B1–B5), then the roofline
+table (§Roofline) if dry-run artifacts exist under experiments/dryrun.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import os
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import (accuracy_sweep, adaptation_cost, fig2_exploration,
+                   kernels_bench, objects_read)
+    os.makedirs("experiments", exist_ok=True)
+    fig2_exploration.main(save_csv="experiments/fig2.csv")
+    objects_read.main()
+    kernels_bench.main()
+    accuracy_sweep.main()
+    adaptation_cost.main()
+
+    dd = "experiments/dryrun"
+    if os.path.isdir(dd) and any(f.endswith(".json")
+                                 for f in os.listdir(dd)):
+        print()
+        from repro.launch import roofline
+        roofline.print_table(dd)
+    else:
+        print("# roofline: no dry-run artifacts under experiments/dryrun "
+              "(run: PYTHONPATH=src python -m repro.launch.dryrun)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the full runtime (microbatching, checkpointing/restart, watchdog).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+The model is a scaled granite-family config (~100M params). Data is the
+deterministic synthetic token pipeline; loss should fall well below the
+ln(vocab) random floor within a few hundred steps (order emerges from the
+synthetic bigram structure).
+"""
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import ModelConfig, init_params, param_count
+from repro.optim import OptConfig
+from repro.runtime.train_loop import TrainLoopConfig, train_loop
+
+
+def make_config():
+    return ModelConfig(
+        name="granite-100m", family="dense",
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=4,
+        d_ff=2048, vocab=8192, dtype="float32", remat=False)
+
+
+def token_pipeline(cfg, batch=8, seq=256):
+    """Deterministic-by-step synthetic bigram language."""
+    trans = np.random.default_rng(0).integers(
+        0, cfg.vocab, size=(cfg.vocab, 4))
+
+    def batch_fn(step):
+        rng = np.random.default_rng(step)          # replayable (FT)
+        toks = np.empty((batch, seq + 1), np.int32)
+        toks[:, 0] = rng.integers(0, cfg.vocab, batch)
+        for t in range(seq):
+            choice = rng.integers(0, 4, batch)
+            noise = rng.random(batch) < 0.05
+            nxt = trans[toks[:, t], choice]
+            toks[:, t + 1] = np.where(
+                noise, rng.integers(0, cfg.vocab, batch), nxt)
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+
+    return batch_fn
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = make_config()
+    print(f"model {cfg.name}: {param_count(cfg)/1e6:.1f}M params")
+    params = init_params(cfg, jax.random.key(0))
+    ocfg = OptConfig(lr=3e-4, warmup_steps=30, total_steps=args.steps)
+    lcfg = TrainLoopConfig(steps=args.steps, microbatches=2,
+                           ckpt_every=100, ckpt_dir=args.ckpt,
+                           log_every=20)
+
+    def on_log(row):
+        print(f"step {row['step']:4d}  loss {row['loss']:.4f}  "
+              f"lr {row['lr']:.2e}  {row['time_s']*1e3:.0f} ms")
+
+    params, _, info = train_loop(cfg, ocfg, lcfg, params,
+                                 token_pipeline(cfg),
+                                 hooks={"on_log": on_log})
+    losses = [r["loss"] for r in info["history"]]
+    print(f"\nloss: {losses[0]:.3f} → {losses[-1]:.3f} "
+          f"(random floor ln({cfg.vocab}) = {np.log(cfg.vocab):.2f})")
+    print(f"stragglers flagged: {len(info['stragglers'])}")
+    print(f"checkpoints under {args.ckpt}: kill and re-run to resume.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .ckpt import (save_checkpoint, load_checkpoint, latest_step,
+                   CheckpointManager)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "CheckpointManager"]

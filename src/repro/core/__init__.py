@@ -1,0 +1,12 @@
+# The paper's primary contribution: partial adaptive indexing for
+# approximate query answering (Maroulis et al., BigVis@VLDB 2024).
+from .bounds import PendingTile, QueryAccumulator, QueryResult
+from .engine import AQPEngine, EngineTrace
+from .index import AdaptStats, IndexConfig, TileIndex
+from .query import evaluate, evaluate_oracle
+
+__all__ = [
+    "AQPEngine", "EngineTrace", "TileIndex", "IndexConfig", "AdaptStats",
+    "QueryResult", "QueryAccumulator", "PendingTile",
+    "evaluate", "evaluate_oracle",
+]

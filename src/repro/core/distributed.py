@@ -1,0 +1,282 @@
+"""Distributed AQP engine: the paper's technique on the production mesh.
+
+Deployment model (DESIGN.md §2): the raw object store is sharded across
+every chip (each device owns N/D objects in HBM — the in-situ "file").
+The *logical* tile grid is replicated; per-tile metadata is the psum of
+per-shard partial aggregates. One φ-constrained window-aggregate query
+is then a fully-jitted SPMD program:
+
+  1. per-device masked binned aggregation over its local objects
+     (count/sum/min/max per tile ∩ window) — the Pallas ``bin_agg``/
+     ``window_agg`` data plane on TPU, jnp here;
+  2. ``psum``/``min``/``max`` collectives produce global per-tile
+     metadata and the query confidence interval;
+  3. greedy partial processing is vectorized: tiles are sorted by the
+     paper's score s(t) = α·ŵ + (1−α)/ĉnt; prefix sums of CI widths give
+     the error bound after processing the top-j tiles for every j at
+     once; the smallest j meeting φ is selected (one pass, no host
+     round-trips);
+  4. the selected tiles' exact contributions are computed with one
+     masked reduction over local objects + psum — the "reads".
+
+Because selection uses the width-based surrogate bound (the true
+relative bound's denominator moves as exact values replace midpoints),
+the final reported bound is re-computed post-read; on the rare occasion
+it still exceeds φ the host layer runs a second round (see
+``DistributedAQPEngine.query``).
+
+The refinement side (tile splitting) is represented by increasing the
+static grid resolution per region-of-interest epoch — the capacity-bound
+flat index from ``core.index`` re-binned at 2× — executed as the same
+binned-aggregation program; ``refine_step`` below exercises it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+NEG = -3.4e38
+POS = 3.4e38
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    grid: Tuple[int, int] = (32, 32)
+    alpha: float = 1.0
+    # static cap on tiles processed per query (resource-aware bound, like
+    # VETI); default = no cap beyond the grid itself
+    max_process: int = 1 << 20
+    # §Perf H3 toggle: fuse the metadata scatter passes + collectives.
+    # REFUTED on XLA:CPU (54 → 128 ms/query: the (N,4) stack
+    # materializes extra arrays while XLA already fuses the masks into
+    # each scatter's operands — there is no "extra pass" to save).
+    # Kept for TPU re-evaluation; default off.
+    fused_passes: bool = False
+
+
+def _all_axes(mesh: Mesh):
+    return tuple(mesh.axis_names)
+
+
+def make_query_step(mesh: Mesh, cfg: DistConfig = DistConfig()):
+    """Build the jitted distributed query step.
+
+    Signature: step(xs, ys, vals, domain, window, phi)
+      xs/ys/vals: (N,) object store, sharded over ALL mesh axes;
+      domain/window: (4,) replicated; phi: scalar.
+    Returns dict with approx value, lo, hi, bound, n_processed,
+    objects_read (all replicated scalars).
+    """
+    gx, gy = cfg.grid
+    t = gx * gy
+    axes = _all_axes(mesh)
+
+    def local(xs, ys, vals, domain, window, phi):
+        x0, y0, x1, y1 = domain[0], domain[1], domain[2], domain[3]
+        qx0, qy0, qx1, qy1 = (window[0], window[1], window[2], window[3])
+        cw = (x1 - x0) / gx
+        ch = (y1 - y0) / gy
+        cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32), 0,
+                      gx - 1)
+        cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32), 0,
+                      gy - 1)
+        cid = cy * gx + cx
+        inq = (xs >= qx0) & (xs <= qx1) & (ys >= qy0) & (ys <= qy1)
+
+        vf = vals.astype(jnp.float32)
+        if cfg.fused_passes:
+            # --- per-tile local metadata (§Perf H3: fused passes) ---
+            # One (N,4) scatter-add covers count/sum/count_q/sum_q in a
+            # single pass over the object arrays (vs 4 separate
+            # scatters: object reads dominate this step, so pass count
+            # ≈ time), and min/max fold window-masked and unmasked
+            # variants into one 2-wide scatter each. Collectives: 8
+            # scalar-vector launches → 3 (launch latency dominates at
+            # 4 KiB payloads).
+            inqf = inq.astype(jnp.float32)
+            add_vals = jnp.stack(
+                [jnp.ones_like(vf), vf, inqf, jnp.where(inq, vf, 0.0)],
+                axis=-1)                                      # (N,4)
+            sums = jnp.zeros((t, 4), jnp.float32).at[cid].add(add_vals)
+            min_vals = jnp.stack([vf, jnp.where(inq, vf, POS)], axis=-1)
+            max_vals = jnp.stack([vf, jnp.where(inq, vf, NEG)], axis=-1)
+            mins = jnp.full((t, 2), POS, jnp.float32).at[cid].min(
+                min_vals)
+            maxs = jnp.full((t, 2), NEG, jnp.float32).at[cid].max(
+                max_vals)
+            sums = jax.lax.psum(sums, axes)
+            mins = jax.lax.pmin(mins, axes)
+            maxs = jax.lax.pmax(maxs, axes)
+            cnt, s, cnt_q, s_q = (sums[:, 0], sums[:, 1], sums[:, 2],
+                                  sums[:, 3])
+            mn, mn_q = mins[:, 0], mins[:, 1]
+            mx, mx_q = maxs[:, 0], maxs[:, 1]
+        else:
+            # baseline: one scatter pass + one collective per statistic
+            cnt = jnp.zeros((t,), jnp.float32).at[cid].add(
+                jnp.ones_like(vf))
+            s = jnp.zeros((t,), jnp.float32).at[cid].add(vf)
+            mn = jnp.full((t,), POS, jnp.float32).at[cid].min(vf)
+            mx = jnp.full((t,), NEG, jnp.float32).at[cid].max(vf)
+            cnt_q = jnp.zeros((t,), jnp.float32).at[cid].add(
+                jnp.where(inq, 1.0, 0.0))
+            s_q = jnp.zeros((t,), jnp.float32).at[cid].add(
+                jnp.where(inq, vf, 0.0))
+            mn_q = jnp.full((t,), POS, jnp.float32).at[cid].min(
+                jnp.where(inq, vf, POS))
+            mx_q = jnp.full((t,), NEG, jnp.float32).at[cid].max(
+                jnp.where(inq, vf, NEG))
+            cnt = jax.lax.psum(cnt, axes)
+            s = jax.lax.psum(s, axes)
+            mn = jax.lax.pmin(mn, axes)
+            mx = jax.lax.pmax(mx, axes)
+            cnt_q = jax.lax.psum(cnt_q, axes)
+            s_q = jax.lax.psum(s_q, axes)
+            mn_q = jax.lax.pmin(mn_q, axes)
+            mx_q = jax.lax.pmax(mx_q, axes)
+
+        # --- classification (tile extents are implicit in the grid) ---
+        tx = jnp.arange(t) % gx
+        ty = jnp.arange(t) // gx
+        tx0 = x0 + tx * cw
+        tx1 = tx0 + cw
+        ty0 = y0 + ty * ch
+        ty1 = ty0 + ch
+        disjoint = (tx1 < qx0) | (tx0 > qx1) | (ty1 < qy0) | (ty0 > qy1)
+        full = (tx0 >= qx0) & (tx1 <= qx1) & (ty0 >= qy0) & (ty1 <= qy1)
+        partial = (~disjoint) & (~full) & (cnt_q > 0)
+
+        # --- CI from metadata (sum aggregate; paper §3.1) ---
+        exact_sum = jnp.sum(jnp.where(full, s, 0.0))
+        lo_p = jnp.where(partial, cnt_q * mn, 0.0)
+        hi_p = jnp.where(partial, cnt_q * mx, 0.0)
+        mid_p = jnp.where(partial, cnt_q * 0.5 * (mn + mx), 0.0)
+
+        # --- score + static-k greedy selection via prefix sums ---
+        width = hi_p - lo_p
+        w_hat = width / jnp.maximum(jnp.max(width), 1e-9)
+        c_hat = cnt_q / jnp.maximum(jnp.max(jnp.where(partial, cnt_q, 0.0)),
+                                    1e-9)
+        score = jnp.where(
+            partial,
+            cfg.alpha * w_hat + (1 - cfg.alpha) / jnp.maximum(c_hat, 1e-9),
+            -jnp.inf)
+        order = jnp.argsort(-score)
+        width_sorted = width[order]
+        # residual CI width if tiles [0..j) are processed. Reversed
+        # cumsum, not total−prefix: the subtraction leaves f32 ≈+ε at
+        # j = n_partial and φ=0 would then select nothing.
+        resid = jnp.concatenate(
+            [jnp.cumsum(width_sorted[::-1])[::-1], jnp.zeros((1,))])
+        approx0 = exact_sum + jnp.sum(mid_p)
+        surrogate = (0.5 * resid) / jnp.maximum(jnp.abs(approx0), 1e-9)
+        n_partial = jnp.sum(partial.astype(jnp.int32))
+        jmeet = jnp.argmax(surrogate <= phi)  # smallest prefix meeting φ
+        j = jnp.minimum(jnp.minimum(jmeet, n_partial), cfg.max_process)
+
+        sel = jnp.zeros((t,), bool).at[order].set(
+            jnp.arange(t) < j)
+        sel = sel & partial
+        # processed tiles contribute exact values; rest keep midpoints
+        value = exact_sum + jnp.sum(jnp.where(sel, s_q, mid_p))
+        lo = exact_sum + jnp.sum(jnp.where(sel, s_q, lo_p))
+        hi = exact_sum + jnp.sum(jnp.where(sel, s_q, hi_p))
+        bound = jnp.maximum(hi - value, value - lo) / \
+            jnp.maximum(jnp.abs(value), 1e-9)
+        objects_read = jnp.sum(jnp.where(sel, cnt, 0.0))
+        return {"value": value, "lo": lo, "hi": hi, "bound": bound,
+                "n_processed": j.astype(jnp.int32),
+                "n_partial": n_partial,
+                "objects_read": objects_read}
+
+    obj = P(axes)
+    rep = P()
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(obj, obj, obj, rep, rep, rep),
+                   out_specs={k: rep for k in
+                              ("value", "lo", "hi", "bound", "n_processed",
+                               "n_partial", "objects_read")},
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def make_refine_step(mesh: Mesh, cfg: DistConfig = DistConfig()):
+    """Metadata refinement at 2× grid resolution for a window (the
+    distributed analogue of tile splitting): one binned pass + psum."""
+    gx, gy = cfg.grid[0] * 2, cfg.grid[1] * 2
+    t = gx * gy
+    axes = _all_axes(mesh)
+
+    def local(xs, ys, vals, domain):
+        x0, y0, x1, y1 = domain[0], domain[1], domain[2], domain[3]
+        cw = (x1 - x0) / gx
+        ch = (y1 - y0) / gy
+        cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32), 0,
+                      gx - 1)
+        cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32), 0,
+                      gy - 1)
+        cid = cy * gx + cx
+        v = vals.astype(jnp.float32)
+        cnt = jnp.zeros((t,), jnp.float32).at[cid].add(
+            jnp.ones_like(v))
+        s = jnp.zeros((t,), jnp.float32).at[cid].add(v)
+        mn = jnp.full((t,), POS, jnp.float32).at[cid].min(v)
+        mx = jnp.full((t,), NEG, jnp.float32).at[cid].max(v)
+        return {"count": jax.lax.psum(cnt, axes),
+                "sum": jax.lax.psum(s, axes),
+                "min": jax.lax.pmin(mn, axes),
+                "max": jax.lax.pmax(mx, axes)}
+
+    obj = P(axes)
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(obj, obj, obj, P()),
+                   out_specs={k: P() for k in ("count", "sum", "min",
+                                               "max")},
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+class DistributedAQPEngine:
+    """Host-facing wrapper: shards a dataset over the mesh and serves
+    φ-constrained queries via the jitted SPMD step. Falls back to a
+    second exact-ish round if the post-read bound still exceeds φ."""
+
+    def __init__(self, dataset, mesh: Mesh,
+                 cfg: DistConfig = DistConfig()):
+        self.mesh = mesh
+        self.cfg = cfg
+        n_dev = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+        n = (dataset.n // n_dev) * n_dev  # truncate to shardable length
+        spec = NamedSharding(mesh, P(_all_axes(mesh)))
+        self.xs = jax.device_put(dataset.x[:n], spec)
+        self.ys = jax.device_put(dataset.y[:n], spec)
+        self.vals = {a: jax.device_put(
+            dataset.read_all_unaccounted(a)[:n], spec)
+            for a in dataset.attributes}
+        self.domain = jnp.asarray(dataset.domain(), jnp.float32)
+        self._step = make_query_step(mesh, cfg)
+        self._refine = make_refine_step(mesh, cfg)
+
+    def query(self, window, attr: str, phi: float):
+        out = self._step(self.xs, self.ys, self.vals[attr], self.domain,
+                         jnp.asarray(window, jnp.float32),
+                         jnp.asarray(phi, jnp.float32))
+        out = {k: np.asarray(v) for k, v in out.items()}
+        if phi > 0 and out["bound"] > phi and \
+                out["n_processed"] < self.cfg.max_process:
+            out2 = self._step(self.xs, self.ys, self.vals[attr],
+                              self.domain,
+                              jnp.asarray(window, jnp.float32),
+                              jnp.asarray(0.0, jnp.float32))
+            out = {k: np.asarray(v) for k, v in out2.items()}
+        return out
+
+    def refine(self, attr: str):
+        return self._refine(self.xs, self.ys, self.vals[attr], self.domain)

@@ -1,0 +1,57 @@
+"""Window/tile overlap classification (vectorized, conservative-sound).
+
+Tile ownership convention: an object belongs to exactly one tile, decided
+by the binning rule ``cell = clip(floor((p - t0)/cell_size), 0, G-1)``
+(half-open cells, max edge clamped into the last cell). Query windows are
+closed rectangles, matching the paper's object-selection semantics.
+
+Classification is *conservative*: a tile is reported FULL only if its
+closed extent is contained in the window (so every owned object is
+certainly selected); borderline cases are demoted to PARTIAL, which can
+cost time but never correctness.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+DISJOINT, PARTIAL, FULL = 0, 1, 2
+
+
+def classify_tiles(bbox: np.ndarray, window) -> np.ndarray:
+    """bbox: (T, 4) tile extents [x0, y0, x1, y1]; window: length-4.
+
+    Returns int8 (T,) with DISJOINT / PARTIAL / FULL.
+    """
+    qx0, qy0, qx1, qy1 = window
+    tx0, ty0, tx1, ty1 = bbox[:, 0], bbox[:, 1], bbox[:, 2], bbox[:, 3]
+    disjoint = (tx1 < qx0) | (tx0 > qx1) | (ty1 < qy0) | (ty0 > qy1)
+    full = (tx0 >= qx0) & (tx1 <= qx1) & (ty0 >= qy0) & (ty1 <= qy1)
+    out = np.full(bbox.shape[0], PARTIAL, dtype=np.int8)
+    out[full] = FULL
+    out[disjoint] = DISJOINT
+    return out
+
+
+def bin_cell_ids(xs: np.ndarray, ys: np.ndarray, bbox, gx: int,
+                 gy: int) -> np.ndarray:
+    """Cell id (cy*gx + cx) for each point under the ownership rule."""
+    x0, y0, x1, y1 = bbox
+    cw = (x1 - x0) / gx
+    ch = (y1 - y0) / gy
+    cx = np.clip(np.floor((xs - x0) / max(cw, 1e-30)).astype(np.int64),
+                 0, gx - 1)
+    cy = np.clip(np.floor((ys - y0) / max(ch, 1e-30)).astype(np.int64),
+                 0, gy - 1)
+    return cy * gx + cx
+
+
+def subtile_bboxes(bbox, gx: int, gy: int) -> np.ndarray:
+    """(gx*gy, 4) extents of the even gx×gy split of bbox (row-major y)."""
+    x0, y0, x1, y1 = bbox
+    xs = np.linspace(x0, x1, gx + 1)
+    ys = np.linspace(y0, y1, gy + 1)
+    out = np.empty((gx * gy, 4), np.float64)
+    for cy in range(gy):
+        for cx in range(gx):
+            out[cy * gx + cx] = (xs[cx], ys[cy], xs[cx + 1], ys[cy + 1])
+    return out

@@ -1,0 +1,308 @@
+"""VALINOR-style hierarchical tile index, capacity-bounded and flat.
+
+The index organizes objects into disjoint rectangular tiles over the two
+axis attributes and keeps, per tile and per non-axis attribute, the
+aggregate metadata ``(count, sum, min, max)`` the paper's confidence
+intervals are built from.
+
+Representation (see DESIGN.md §2 "assumption changed"): instead of an
+unbounded pointer tree, the index is a *fixed-capacity table* of tiles
+(SoA numpy arrays) plus one permutation of the object set such that every
+tile owns a contiguous object segment. Splitting a tile appends children
+to the table, locally counting-sorts the parent's segment, and deactivates
+the parent — functional-update friendly, mirrors VETI's resource-aware
+bounded index, and is exactly the layout the Pallas data plane wants
+(sequential HBM streams per tile).
+
+Metadata soundness rule: ``min/max`` for a tile are ALWAYS present and
+always sound (children inherit the parent's bounds until refined; the root
+fallback is the global attribute min/max from the init pass). ``sum`` is
+present only when marked valid (``meta_valid``); a fully-contained tile
+whose sum is not valid for the queried attribute is handled as *pending
+enrichment* by the query layer — bounded, never wrong.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..data.rawfile import RawDataset
+from ..kernels import ops
+from . import geometry
+from .geometry import DISJOINT, PARTIAL, FULL
+
+
+@dataclasses.dataclass
+class IndexConfig:
+    grid0: Tuple[int, int] = (16, 16)     # crude initial grid
+    split_grid: Tuple[int, int] = (2, 2)  # paper's example splits 2×2
+    capacity: int = 65536                 # max tiles (resource-aware bound)
+    min_split_count: int = 256            # I/O-cost split factor (paper §2.2)
+    max_level: int = 12
+    init_metadata_attrs: Sequence[str] = ()   # metadata computed at init pass
+    backend: Optional[str] = None             # kernels backend override
+
+
+@dataclasses.dataclass
+class AdaptStats:
+    tiles_split: int = 0
+    tiles_enriched: int = 0
+    objects_reorganized: int = 0
+
+    def snapshot(self):
+        return dataclasses.replace(self)
+
+    def delta(self, before):
+        return AdaptStats(self.tiles_split - before.tiles_split,
+                          self.tiles_enriched - before.tiles_enriched,
+                          self.objects_reorganized - before.objects_reorganized)
+
+
+class TileIndex:
+    def __init__(self, dataset: RawDataset, config: IndexConfig = IndexConfig()):
+        self.ds = dataset
+        self.cfg = config
+        self.adapt_stats = AdaptStats()
+        # host control plane defaults to the numpy mirror of the kernels
+        # (data-dependent segment lengths would recompile XLA per shape);
+        # on-device bulk paths use the Pallas/jnp backends.
+        self._backend = config.backend or ops.host_backend()
+        n = dataset.n
+        cap = config.capacity
+
+        # --- tile table (SoA) ---
+        self.bbox = np.zeros((cap, 4), np.float64)
+        self.offset = np.zeros(cap, np.int64)
+        self.count = np.zeros(cap, np.int64)
+        self.active = np.zeros(cap, bool)
+        self.level = np.zeros(cap, np.int32)
+        self.parent = np.full(cap, -1, np.int64)
+        self.n_tiles = 0
+
+        # --- per-attribute metadata ---
+        # min/max always sound; sum valid only when meta_valid.
+        self.meta_sum: Dict[str, np.ndarray] = {}
+        self.meta_min: Dict[str, np.ndarray] = {}
+        self.meta_max: Dict[str, np.ndarray] = {}
+        self.meta_valid: Dict[str, np.ndarray] = {}
+        self.global_minmax: Dict[str, Tuple[float, float]] = {}
+
+        # --- initialization pass (the "crude" index) ---
+        gx, gy = config.grid0
+        domain = dataset.domain()
+        # widen max edge epsilon so ownership clamping matches extents
+        self.domain = domain
+        cell_ids = geometry.bin_cell_ids(dataset.x, dataset.y, domain, gx, gy)
+        perm = np.argsort(cell_ids, kind="stable")
+        self.perm = perm.astype(np.int64)          # file row id per slot
+        self.x_s = dataset.x[perm]                 # axis values, perm order
+        self.y_s = dataset.y[perm]
+        counts = np.bincount(cell_ids, minlength=gx * gy)
+        offsets = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        boxes = geometry.subtile_bboxes(domain, gx, gy)
+        t = gx * gy
+        self.bbox[:t] = boxes
+        self.offset[:t] = offsets
+        self.count[:t] = counts
+        self.active[:t] = True
+        self.level[:t] = 0
+        self.n_tiles = t
+        dataset.account_init_pass()
+
+        for attr in config.init_metadata_attrs:
+            self.ensure_attr(attr)
+            # init-pass metadata: one sequential file scan (accounted)
+            vals = dataset.read_values(attr, self.perm)
+            self._fill_meta_from_segments(attr, np.arange(t), vals)
+
+    # ------------------------------------------------------------------ #
+    # attribute registration
+    # ------------------------------------------------------------------ #
+    def ensure_attr(self, attr: str):
+        if attr in self.meta_sum:
+            return
+        cap = self.cfg.capacity
+        if attr not in self.global_minmax:
+            # domain stats from the init pass (axis pass also observes
+            # column headers/stats in in-situ systems; accounted as init)
+            col = self.ds.read_all_unaccounted(attr)
+            self.global_minmax[attr] = (float(col.min()), float(col.max()))
+        g_lo, g_hi = self.global_minmax[attr]
+        self.meta_sum[attr] = np.zeros(cap, np.float64)
+        self.meta_min[attr] = np.full(cap, g_lo, np.float64)
+        self.meta_max[attr] = np.full(cap, g_hi, np.float64)
+        self.meta_valid[attr] = np.zeros(cap, bool)
+
+    def _fill_meta_from_segments(self, attr, tile_ids, vals_perm_order):
+        """Compute metadata for tiles from values given in perm order."""
+        for t in tile_ids:
+            o, c = self.offset[t], self.count[t]
+            if c == 0:
+                self.meta_sum[attr][t] = 0.0
+                self.meta_valid[attr][t] = True
+                continue
+            seg = vals_perm_order[o:o + c]
+            self.meta_sum[attr][t] = float(seg.sum(dtype=np.float64))
+            self.meta_min[attr][t] = float(seg.min())
+            self.meta_max[attr][t] = float(seg.max())
+            self.meta_valid[attr][t] = True
+
+    # ------------------------------------------------------------------ #
+    # query-side geometry + axis-only counting (no file access)
+    # ------------------------------------------------------------------ #
+    def classify(self, window):
+        ids = np.flatnonzero(self.active[:self.n_tiles])
+        cls = geometry.classify_tiles(self.bbox[ids], window)
+        return ids[cls == FULL], ids[cls == PARTIAL]
+
+    def count_in_window(self, tile_id: int, window) -> int:
+        """count(t ∩ Q) from the index's axis values — zero file I/O."""
+        o, c = self.offset[tile_id], self.count[tile_id]
+        if c == 0:
+            return 0
+        m = ops.window_mask_np(self.x_s[o:o + c], self.y_s[o:o + c], window)
+        return int(m.sum())
+
+    # ------------------------------------------------------------------ #
+    # processing (the accounted, expensive path)
+    # ------------------------------------------------------------------ #
+    def process(self, tile_id: int, window, attr: str, *, split: bool = True):
+        """The paper's ``process(t)``: read t's objects from the file,
+        compute the exact in-window contribution, split t into sub-tiles,
+        reorganize its object segment, and store sub-tile metadata.
+
+        Returns (cnt_q, sum_q, min_q, max_q) — exact contribution of t∩Q.
+        """
+        self.ensure_attr(attr)
+        o, c = int(self.offset[tile_id]), int(self.count[tile_id])
+        if c == 0:
+            return (0, 0.0, np.inf, -np.inf)
+        rows = self.perm[o:o + c]
+        vals = self.ds.read_values(attr, rows)        # ← accounted file I/O
+        xs, ys = self.x_s[o:o + c], self.y_s[o:o + c]
+
+        m = ops.window_mask_np(xs, ys, window)
+        cnt_q = int(m.sum())
+        if cnt_q:
+            sel = vals[m]
+            contrib = (cnt_q, float(sel.sum(dtype=np.float64)),
+                       float(sel.min()), float(sel.max()))
+        else:
+            contrib = (0, 0.0, np.inf, -np.inf)
+
+        # Tile-level metadata (enrichment) — now exact for this attr.
+        self.meta_sum[attr][tile_id] = float(vals.sum(dtype=np.float64))
+        self.meta_min[attr][tile_id] = float(vals.min())
+        self.meta_max[attr][tile_id] = float(vals.max())
+        self.meta_valid[attr][tile_id] = True
+
+        if split:
+            self._split(tile_id, vals, attr)
+        else:
+            self.adapt_stats.tiles_enriched += 1
+        return contrib
+
+    def can_split(self, tile_id: int) -> bool:
+        gx, gy = self.cfg.split_grid
+        return (self.count[tile_id] >= self.cfg.min_split_count
+                and self.level[tile_id] < self.cfg.max_level
+                and self.n_tiles + gx * gy <= self.cfg.capacity)
+
+    def _split(self, tile_id: int, vals: np.ndarray, attr: str):
+        """Split + reorganize + per-child metadata (one bin_agg pass)."""
+        if not self.can_split(tile_id):
+            self.adapt_stats.tiles_enriched += 1
+            return
+        gx, gy = self.cfg.split_grid
+        o, c = int(self.offset[tile_id]), int(self.count[tile_id])
+        # NOTE: copies, not views — the segment reorganization below
+        # writes into self.x_s/y_s in place and bin_agg must see the
+        # pristine (coordinate, value)-aligned arrays
+        xs = self.x_s[o:o + c].copy()
+        ys = self.y_s[o:o + c].copy()
+        bbox = self.bbox[tile_id]
+
+        cell = geometry.bin_cell_ids(xs, ys, bbox, gx, gy)
+        counts = np.bincount(cell, minlength=gx * gy)
+        child_off = o + np.concatenate([[0], np.cumsum(counts)[:-1]])
+        boxes = geometry.subtile_bboxes(bbox, gx, gy)
+
+        # child metadata for the processed attribute: one binned pass
+        # (data plane — Pallas bin_agg kernel on TPU)
+        agg = np.asarray(ops.bin_agg(xs, ys, vals, bbox, gx=gx, gy=gy,
+                                     backend=self._backend))
+
+        order = np.argsort(cell, kind="stable")
+        # local reorganization of the parent's segment
+        self.perm[o:o + c] = self.perm[o:o + c][order]
+        self.x_s[o:o + c] = xs[order]
+        self.y_s[o:o + c] = ys[order]
+        vals_sorted = vals[order]
+        self.adapt_stats.objects_reorganized += c
+
+        t0 = self.n_tiles
+        k = gx * gy
+        sl = slice(t0, t0 + k)
+        self.bbox[sl] = boxes
+        self.offset[sl] = child_off
+        self.count[sl] = counts
+        self.active[sl] = True
+        self.level[sl] = self.level[tile_id] + 1
+        self.parent[sl] = tile_id
+        self.n_tiles += k
+        self.active[tile_id] = False
+
+        for a in self.meta_sum:
+            if a == attr:
+                nonzero = counts > 0
+                self.meta_sum[a][sl] = agg[:, 1].astype(np.float64)
+                self.meta_min[a][sl] = np.where(nonzero, agg[:, 2],
+                                                self.meta_min[a][tile_id])
+                self.meta_max[a][sl] = np.where(nonzero, agg[:, 3],
+                                                self.meta_max[a][tile_id])
+                self.meta_valid[a][sl] = True
+                # float32 kernel sums → recompute exact f64 sums per child
+                for j in range(k):
+                    oj, cj = child_off[j], counts[j]
+                    self.meta_sum[a][t0 + j] = float(
+                        vals_sorted[oj - o:oj - o + cj].sum(dtype=np.float64))
+            else:
+                # inherit sound min/max bounds; sum unknown for children
+                self.meta_min[a][sl] = self.meta_min[a][tile_id]
+                self.meta_max[a][sl] = self.meta_max[a][tile_id]
+                self.meta_valid[a][sl] = False
+        self.adapt_stats.tiles_split += 1
+
+    # ------------------------------------------------------------------ #
+    # invariant checking (used by property tests)
+    # ------------------------------------------------------------------ #
+    def check_invariants(self, attr: Optional[str] = None):
+        ids = np.flatnonzero(self.active[:self.n_tiles])
+        assert self.count[ids].sum() == self.ds.n, "object conservation"
+        assert len(np.unique(np.sort(self.perm))) == self.ds.n, "perm is a permutation"
+        for t in ids:
+            o, c = self.offset[t], self.count[t]
+            if c == 0:
+                continue
+            x0, y0, x1, y1 = self.bbox[t]
+            xs, ys = self.x_s[o:o + c], self.y_s[o:o + c]
+            assert (xs >= x0 - 1e-6).all() and (xs <= x1 + 1e-6).all()
+            assert (ys >= y0 - 1e-6).all() and (ys <= y1 + 1e-6).all()
+        if attr is not None and attr in self.meta_sum:
+            col = self.ds.read_all_unaccounted(attr)
+            for t in ids:
+                o, c = self.offset[t], self.count[t]
+                seg = col[self.perm[o:o + c]]
+                if c:
+                    assert seg.min() >= self.meta_min[attr][t] - 1e-4
+                    assert seg.max() <= self.meta_max[attr][t] + 1e-4
+                if self.meta_valid[attr][t] and c:
+                    np.testing.assert_allclose(
+                        seg.sum(dtype=np.float64), self.meta_sum[attr][t],
+                        rtol=1e-6, atol=1e-4)
+
+    @property
+    def n_active(self) -> int:
+        return int(self.active[:self.n_tiles].sum())

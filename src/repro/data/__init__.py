@@ -1,0 +1,4 @@
+from .rawfile import RawDataset, IOStats
+from .synthetic import make_synthetic_dataset
+
+__all__ = ["RawDataset", "IOStats", "make_synthetic_dataset"]

@@ -1,0 +1,182 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Backends:
+- ``"pallas"``  — the TPU kernels; on this CPU container they execute via
+  ``interpret=True`` (the kernel body runs in Python) for correctness
+  validation. This is the deploy path on TPU (interpret=False).
+- ``"jnp"``     — the pure-jnp oracle from :mod:`repro.kernels.ref`,
+  jit-compiled by XLA:CPU. This is the fast path used by the benchmark
+  harness on this container so that measured query times reflect data
+  volume rather than interpret-mode Python overhead.
+
+``default_backend()`` picks "pallas" on TPU and "jnp" elsewhere; every op
+takes an explicit ``backend=`` override so tests can pin both and
+assert_allclose them against each other.
+
+All ops accept flat 1-D object arrays and handle the (rows, 128) padding
+layout internally.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .window_agg import window_agg_pallas, LANES, DEFAULT_BLOCK_ROWS
+from .bin_agg import bin_agg_pallas
+
+
+def default_backend() -> str:
+    """Device data plane: "pallas" on TPU, "jnp" elsewhere.
+
+    The *host control plane* (the index's per-tile bookkeeping, which runs
+    on CPU with data-dependent segment lengths) uses the "np" backend to
+    avoid per-shape XLA recompiles; it is semantically identical and is
+    validated against both device backends in tests/test_kernels.py.
+    """
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def host_backend() -> str:
+    return "np"
+
+
+def _window_agg_np(xs, ys, vals, window, n):
+    xs, ys = np.asarray(xs)[:n], np.asarray(ys)[:n]
+    vals = np.asarray(vals, np.float32)[:n]
+    x0, y0, x1, y1 = np.asarray(window, np.float32)
+    m = (xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1)
+    sel = vals[m]
+    if sel.size == 0:
+        return np.array([0.0, 0.0, np.inf, -np.inf], np.float32)
+    return np.array([m.sum(), sel.sum(dtype=np.float64), sel.min(),
+                     sel.max()], np.float32)
+
+
+def _bin_agg_np(xs, ys, vals, bbox, gx, gy, n):
+    xs, ys = np.asarray(xs)[:n], np.asarray(ys)[:n]
+    vals = np.asarray(vals, np.float32)[:n]
+    x0, y0, x1, y1 = np.asarray(bbox, np.float64)
+    # pure clip-binning — see kernels/ref.py: every object must land in
+    # exactly one cell or split metadata goes unsound on edge objects
+    cw = max((x1 - x0) / gx, 1e-30)
+    ch = max((y1 - y0) / gy, 1e-30)
+    cx = np.clip(np.floor((xs - x0) / cw).astype(np.int64), 0, gx - 1)
+    cy = np.clip(np.floor((ys - y0) / ch).astype(np.int64), 0, gy - 1)
+    cid = cy * gx + cx
+    k = gx * gy
+    cnt = np.bincount(cid, minlength=k + 1)[:k].astype(np.float32)
+    s = np.bincount(cid, weights=vals.astype(np.float64),
+                    minlength=k + 1)[:k].astype(np.float32)
+    mn = np.full(k, np.inf, np.float32)
+    mx = np.full(k, -np.inf, np.float32)
+    order = np.argsort(cid, kind="stable")
+    cs, vs_sorted = cid[order], vals[order]
+    bounds = np.searchsorted(cs, np.arange(k + 1))
+    for c in range(k):
+        a, b = bounds[c], bounds[c + 1]
+        if b > a:
+            mn[c] = vs_sorted[a:b].min()
+            mx[c] = vs_sorted[a:b].max()
+    return np.stack([cnt, s, mn, mx], axis=-1)
+
+
+def _pad_to_blocks(n: int, block_rows: int) -> int:
+    per = block_rows * LANES
+    return max(per, ((n + per - 1) // per) * per)
+
+
+def pack2d(*arrays, n=None, block_rows=DEFAULT_BLOCK_ROWS):
+    """Pad 1-D arrays to the (rows, 128) kernel layout + validity plane."""
+    n = len(arrays[0]) if n is None else n
+    padded = _pad_to_blocks(n, block_rows)
+    rows = padded // LANES
+    outs = []
+    for a in arrays:
+        buf = jnp.zeros((padded,), jnp.float32).at[:n].set(
+            jnp.asarray(a, jnp.float32))
+        outs.append(buf.reshape(rows, LANES))
+    valid = (jnp.arange(padded) < n).astype(jnp.int8).reshape(rows, LANES)
+    return (*outs, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def _window_agg_flat(xs, ys, vals, window, n, backend, interpret):
+    if backend == "jnp":
+        valid = jnp.arange(xs.shape[0]) < n
+        return ref.window_agg_ref(xs, ys, vals, window, valid)
+    xs2, ys2, vs2, valid2 = pack2d(xs, ys, vals, n=xs.shape[0])
+    # mask padding AND the tail beyond n
+    valid2 = valid2 * (jnp.arange(valid2.size).reshape(valid2.shape) <
+                       n).astype(jnp.int8)
+    return window_agg_pallas(xs2, ys2, vs2, valid2, window,
+                             interpret=interpret)
+
+
+def window_agg(xs, ys, vals, window, *, n=None, backend=None,
+               interpret=True):
+    """(count, sum, min, max) of ``vals`` for objects in the closed window.
+
+    ``n``: logical length (entries past n are ignored) — lets callers pass
+    padded fixed-capacity segments without re-slicing under jit.
+    """
+    backend = backend or default_backend()
+    if backend == "np":
+        n = len(xs) if n is None else int(n)
+        return _window_agg_np(xs, ys, vals, window, n)
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    vals = jnp.asarray(vals, jnp.float32)
+    window = jnp.asarray(window, jnp.float32)
+    n = xs.shape[0] if n is None else n
+    return _window_agg_flat(xs, ys, vals, window, jnp.asarray(n, jnp.int32),
+                            backend, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("gx", "gy", "backend",
+                                             "interpret"))
+def _bin_agg_flat(xs, ys, vals, bbox, n, gx, gy, backend, interpret):
+    if backend == "jnp":
+        valid = jnp.arange(xs.shape[0]) < n
+        return ref.bin_agg_ref(xs, ys, vals, bbox, (gx, gy), valid)
+    xs2, ys2, vs2, valid2 = pack2d(xs, ys, vals, n=xs.shape[0])
+    valid2 = valid2 * (jnp.arange(valid2.size).reshape(valid2.shape) <
+                       n).astype(jnp.int8)
+    return bin_agg_pallas(xs2, ys2, vs2, valid2, bbox, gx=gx, gy=gy,
+                          interpret=interpret)
+
+
+def bin_agg(xs, ys, vals, bbox, *, gx, gy, n=None, backend=None,
+            interpret=True):
+    """Per-cell (count, sum, min, max) over a gx×gy split of bbox."""
+    backend = backend or default_backend()
+    if backend == "np":
+        n = len(xs) if n is None else int(n)
+        return _bin_agg_np(xs, ys, vals, bbox, gx, gy, n)
+    xs = jnp.asarray(xs, jnp.float32)
+    ys = jnp.asarray(ys, jnp.float32)
+    vals = jnp.asarray(vals, jnp.float32)
+    bbox = jnp.asarray(bbox, jnp.float32)
+    n = xs.shape[0] if n is None else n
+    return _bin_agg_flat(xs, ys, vals, bbox, jnp.asarray(n, jnp.int32),
+                         gx, gy, backend, interpret)
+
+
+def window_count(xs, ys, window, *, n=None, backend=None):
+    """Count of objects in window (axis attributes only — no file access)."""
+    agg = window_agg(xs, ys, jnp.zeros_like(jnp.asarray(xs, jnp.float32)),
+                     window, n=n, backend=backend)
+    return agg[0]
+
+
+def window_mask_np(xs, ys, window):
+    """NumPy host-side mask (control-plane helper, not a kernel)."""
+    x0, y0, x1, y1 = window
+    return (xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1)
+
+
+__all__ = ["window_agg", "bin_agg", "window_count", "window_mask_np",
+           "pack2d", "default_backend"]

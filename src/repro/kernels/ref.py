@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic ground truth: every Pallas kernel in this package
+must match its oracle bit-for-bit (up to float accumulation order) across
+the shape/dtype sweeps in ``tests/test_kernels.py``.
+
+Conventions shared with the kernels:
+
+- Object blocks are laid out 2-D ``(rows, 128)`` (TPU lane width). A
+  1-D object array of length N is padded to a multiple of ``rows*128``
+  and reshaped; padding entries carry ``valid=False``.
+- A *window* is ``(x0, y0, x1, y1)`` with half-open semantics on the
+  max edge for interior tiles; the caller controls closedness via the
+  ``closed_max`` flag folded into the window representation (we use
+  closed ``<=`` on both edges, matching the paper's object-selection
+  semantics where a query region is a closed rectangle).
+- Aggregates are ``(count, sum, min, max)`` stacked on the last axis.
+  Empty selections yield ``count=0, sum=0, min=+inf, max=-inf``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+AGG_FIELDS = ("count", "sum", "min", "max")
+
+
+def window_mask(xs, ys, window, valid):
+    """Boolean mask of objects inside the closed window."""
+    x0, y0, x1, y1 = window[0], window[1], window[2], window[3]
+    m = (xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1)
+    return m & valid
+
+
+def window_agg_ref(xs, ys, vals, window, valid):
+    """(count, sum, min, max) of ``vals`` over objects inside ``window``.
+
+    Shapes: xs/ys/vals/valid are broadcast-compatible arrays (any shape);
+    window is a length-4 vector. Returns a float32 vector of 4 values
+    (count is returned as float32 for a homogeneous result layout; it is
+    exactly representable for counts < 2**24, and the callers re-derive
+    exact integer counts on the host path).
+    """
+    m = window_mask(xs, ys, window, valid)
+    vm = vals.astype(jnp.float32)
+    cnt = jnp.sum(m, dtype=jnp.float32)
+    s = jnp.sum(jnp.where(m, vm, 0.0), dtype=jnp.float32)
+    mn = jnp.min(jnp.where(m, vm, jnp.inf))
+    mx = jnp.max(jnp.where(m, vm, -jnp.inf))
+    return jnp.stack([cnt, s, mn, mx])
+
+
+def bin_agg_ref(xs, ys, vals, bbox, grid, valid):
+    """Per-cell (count, sum, min, max) over a ``gx × gy`` grid of ``bbox``.
+
+    bbox = (x0, y0, x1, y1); cells are equal-sized. Binning is pure
+    clipping — every valid object lands in exactly one cell, including
+    objects that sit on (or float-jitter epsilon past) the bbox edges.
+    This matches the index's ownership rule: callers pass a tile's owned
+    object segment and the split must partition it exactly (an
+    inside-test would silently drop edge objects from child metadata
+    while the counting sort still assigns them — unsound min/max).
+    Returns ``(gx*gy, 4)`` float32; cell id = cy * gx + cx.
+    """
+    gx, gy = grid
+    x0, y0, x1, y1 = bbox[0], bbox[1], bbox[2], bbox[3]
+    cw = (x1 - x0) / gx
+    ch = (y1 - y0) / gy
+    cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32), 0, gx - 1)
+    cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32), 0, gy - 1)
+    cid = cy * gx + cx
+    vm = vals.astype(jnp.float32)
+    out = []
+    for c in range(gx * gy):
+        m = valid & (cid == c)
+        cnt = jnp.sum(m, dtype=jnp.float32)
+        s = jnp.sum(jnp.where(m, vm, 0.0), dtype=jnp.float32)
+        mn = jnp.min(jnp.where(m, vm, jnp.inf))
+        mx = jnp.max(jnp.where(m, vm, -jnp.inf))
+        out.append(jnp.stack([cnt, s, mn, mx]))
+    return jnp.stack(out)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    """Reference attention: (B, H, S, D) x (B, Hkv, T, D) -> (B, H, S, D).
+
+    Supports GQA (H a multiple of Hkv) by repeating KV heads.
+    """
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    t = k.shape[2]
+    if scale is None:
+        scale = d ** -0.5
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), dtype=bool), k=t - s)
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhst,bhtd->bhsd", p.astype(v.dtype), v)

@@ -1,0 +1,285 @@
+"""Post-optimization HLO analysis for the roofline harness.
+
+Why this exists: on this container ``compiled.cost_analysis()`` counts
+every HLO op exactly once — a ``lax.scan`` over 9 superblocks (or 16
+microbatches) contributes its body a single time, under-counting FLOPs,
+bytes and collective traffic by the trip count. Since the whole model
+zoo deliberately scans over layer stacks (DESIGN.md §5), the dry-run
+analysis must re-attribute op costs by loop trip counts.
+
+The analyzer parses ``compiled.as_text()`` (post-SPMD, post-fusion HLO):
+
+1. **symbol table**: every instruction's result shape → bytes;
+2. **call graph**: ``while(body=%B, condition=%C)``, ``fusion(calls=%F)``,
+   ``call(to_apply=%F)``, conditionals; execution multiplier of a
+   computation = Σ over call sites of (caller multiplier × trip count);
+3. **trip counts**: a scan lowers to a while whose condition compares the
+   induction variable against a literal — the largest integer constant in
+   the condition computation (exact for every loop this framework emits);
+4. **collective bytes** = Σ operand bytes of all-gather / all-reduce /
+   reduce-scatter / all-to-all / collective-permute × multiplier
+   (per-type breakdown retained);
+5. **matmul FLOPs** = Σ over ``dot`` ops of 2·|result|·(contracted dim)
+   × multiplier — the MXU term of the roofline;
+6. **HBM traffic** = Σ over top-level instructions of result bytes ×
+   multiplier, skipping register-level plumbing (parameter/constant/
+   tuple/get-tuple-element/bitcast) and counting each fusion as one
+   instruction. Result-only counting models "bytes written to HBM":
+   every tensor is counted exactly once, at its definition (counting
+   operands too would double-count every value once per consumer).
+   Reads roughly mirror writes, so the write-only figure is a consistent
+   ×~2 underestimate of total traffic — fine for term comparison, stated
+   in the methodology.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALLED_RE = re.compile(
+    r"(?:body|condition|calls|to_apply|true_computation|false_computation|"
+    r"branch_computations)=\{?%?([\w\.\-{}, %]+)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "while", "conditional", "call", "after-all",
+                 "partition-id", "replica-id", "iota"}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_bytes: int
+    operands: List[str]
+    called: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Analysis:
+    collective_bytes: float
+    collective_by_type: Dict[str, float]
+    collective_count: int
+    matmul_flops: float
+    hbm_traffic_bytes: float
+    trip_counts: Dict[str, int]
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+_NEW_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%[\w\.\-]+\s*=")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _join_wrapped_lines(text: str) -> List[str]:
+    """The XLA pretty-printer wraps long instructions (wide-loop tuple
+    types span many lines) and embeds ``/*index=N*/`` comments whose '='
+    breaks naive matching; merge continuations and strip comments."""
+    out: List[str] = []
+    for raw in text.splitlines():
+        line = _COMMENT_RE.sub("", raw.rstrip())
+        if not line.strip():
+            continue
+        is_header = (not line.startswith(" ")) and line.endswith("{")
+        is_new = _NEW_INSTR_RE.match(line) or is_header or \
+            line.lstrip().startswith("}") or line.startswith("}")
+        if is_new or not out:
+            out.append(line)
+        else:
+            out[-1] = out[-1] + " " + line.strip()
+    return out
+
+
+def _parse_computations(text: str):
+    comps: Dict[str, List[Instr]] = {}
+    entry: Optional[str] = None
+    current: Optional[str] = None
+    for line in _join_wrapped_lines(text):
+        if not line.startswith(" ") and "->" in line and line.endswith("{"):
+            m = _COMP_RE.match(line)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+                if line.startswith("ENTRY"):
+                    entry = current
+            continue
+        if line.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.group(1), m.group(2), m.group(3)
+        paren = line[m.end() - 1:]
+        depth, end = 0, len(paren)
+        for i, ch in enumerate(paren):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_str = paren[1:end]
+        operands = _OPERAND_RE.findall(operand_str)
+        called = []
+        for cm in _CALLED_RE.finditer(line):
+            called.extend(_OPERAND_RE.findall("%" + cm.group(1)))
+        comps[current].append(Instr(name, opcode, shape_bytes(type_str),
+                                    operands, called, line))
+    return comps, entry
+
+
+def _trip_count(comp_instrs: List[Instr]) -> int:
+    best = 1
+    for ins in comp_instrs:
+        for c in _CONST_RE.finditer(ins.line):
+            best = max(best, int(c.group(1)))
+    return best
+
+
+def analyze_hlo(text: str) -> Analysis:
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # symbol tables: name → result bytes; name → dims of first shape
+    sym: Dict[str, int] = {}
+    sym_dims: Dict[str, List[int]] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            sym[ins.name] = ins.result_bytes
+            m = _SHAPE_RE.search(ins.line.split("=", 1)[1]) \
+                if "=" in ins.line else None
+            if m:
+                sym_dims[ins.name] = [int(d) for d in m.group(2).split(",")
+                                      if d]
+
+    # execution multipliers via fixpoint over the call graph
+    mult: Dict[str, float] = collections.defaultdict(float)
+    mult[entry] = 1.0
+    trip_counts: Dict[str, int] = {}
+    for _ in range(64):  # call graphs here are shallow; fixpoint quickly
+        new = collections.defaultdict(float)
+        new[entry] = 1.0
+        for cname, instrs in comps.items():
+            m = mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for ins in instrs:
+                if ins.opcode == "while":
+                    # attrs ordered: condition=, body= (parse both)
+                    cond = body = None
+                    cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                    bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                    if cm:
+                        cond = cm.group(1)
+                    if bm:
+                        body = bm.group(1)
+                    trips = _trip_count(comps.get(cond, [])) if cond else 1
+                    if body:
+                        trip_counts[body] = trips
+                        new[body] += m * trips
+                    if cond:
+                        new[cond] += m * (trips + 1)
+                elif ins.called:
+                    for f in ins.called:
+                        if f in comps:
+                            new[f] += m
+        if dict(new) == dict(mult):
+            break
+        mult = new
+
+    coll_bytes = 0.0
+    coll_by_type: Dict[str, float] = collections.defaultdict(float)
+    coll_count = 0
+    flops = 0.0
+    traffic = 0.0
+
+    fusion_bodies = {f for insl in comps.values() for ins in insl
+                     if ins.opcode == "fusion" for f in ins.called}
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion_body = cname in fusion_bodies
+        for ins in instrs:
+            op = ins.opcode
+            if op in COLLECTIVES:
+                ob = sum(sym.get(o, 0) for o in ins.operands)
+                if ob == 0:  # operand unknown → use result size (AR-like)
+                    ob = ins.result_bytes
+                coll_bytes += ob * m
+                coll_by_type[op] += ob * m
+                coll_count += 1
+            if op == "dot":
+                f = _dot_flops(ins, sym_dims)
+                flops += f * m
+            if not in_fusion_body and op not in _SKIP_TRAFFIC:
+                traffic += ins.result_bytes * m
+
+    return Analysis(collective_bytes=coll_bytes,
+                    collective_by_type=dict(coll_by_type),
+                    collective_count=coll_count,
+                    matmul_flops=flops,
+                    hbm_traffic_bytes=traffic,
+                    trip_counts=trip_counts)
+
+
+def _dot_flops(ins: Instr, sym_dims: Dict[str, List[int]]) -> float:
+    """2 · |result elements| · contracted-dim size for a dot line."""
+    # result element count from the instruction's own type string
+    m = _SHAPE_RE.search(ins.line.split("=", 1)[1])
+    if not m:
+        return 0.0
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    result_elems = 1
+    for d in dims:
+        result_elems *= d
+    # contracted size: lhs dims (symbol table) + lhs_contracting_dims
+    lc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    if not lc or not ins.operands:
+        return 2.0 * result_elems  # degenerate: vector dot
+    lhs_shape = sym_dims.get(ins.operands[0])
+    contracted = 1
+    if lhs_shape:
+        for i in (int(x) for x in lc.group(1).split(",") if x):
+            if i < len(lhs_shape):
+                contracted *= lhs_shape[i]
+    return 2.0 * result_elems * contracted

@@ -1,0 +1,78 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf harness: compile ONE (arch × shape) cell with a named set of
+optimization toggles and print its roofline terms — the measurement step
+of the hypothesis → change → measure loop.
+
+    PYTHONPATH=src python -m repro.launch.perf_cell \
+        --arch starcoder2-15b --shape train_4k \
+        [--off fsdp_use_hint,mamba_recompute] [--multi-pod]
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+
+from repro import configs as cfgreg                     # noqa: E402
+from repro.launch import steps as steps_mod             # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo       # noqa: E402
+from repro.launch.mesh import make_production_mesh      # noqa: E402
+from repro.launch.roofline import HBM, LINK, PEAK       # noqa: E402
+from repro.models import layers as L                    # noqa: E402
+
+
+def measure(arch: str, shape: str, *, multi_pod=False, off=()):
+    for k in off:
+        assert k in L.OPT, (k, list(L.OPT))
+        L.OPT[k] = False
+    try:
+        cfg = cfgreg.get(arch)
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        t0 = time.time()
+        fn, args, in_sh, out_sh = steps_mod.build_step(cfg, shape, mesh)
+        from repro.configs.shapes import SHAPES
+        donate = (0, 1) if SHAPES[shape].kind == "train" else (2,)
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=in_sh,
+                               out_shardings=out_sh,
+                               donate_argnums=donate).lower(*args).compile()
+        mem = compiled.memory_analysis()
+        ana = analyze_hlo(compiled.as_text())
+        out = {
+            "arch": arch, "shape": shape,
+            "opts_off": list(off),
+            "compute_s": ana.matmul_flops / PEAK,
+            "memory_s": ana.hbm_traffic_bytes / HBM,
+            "collective_s": ana.collective_bytes / LINK,
+            "collective_by_type": {k: round(v / 2**30, 3)
+                                   for k, v in
+                                   ana.collective_by_type.items()},
+            "mem_gib_per_dev": (mem.argument_size_in_bytes +
+                                mem.temp_size_in_bytes +
+                                mem.output_size_in_bytes -
+                                mem.alias_size_in_bytes) / 2**30,
+            "compile_s": round(time.time() - t0, 1),
+        }
+        return out
+    finally:
+        for k in off:
+            L.OPT[k] = True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--off", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    a = ap.parse_args()
+    off = tuple(x for x in a.off.split(",") if x)
+    print(json.dumps(measure(a.arch, a.shape, multi_pod=a.multi_pod,
+                             off=off), indent=1))
+
+
+if __name__ == "__main__":
+    main()

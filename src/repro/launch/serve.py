@@ -1,0 +1,76 @@
+"""Serving launcher: prefill a batch of prompts, then batched decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
+        [--batch 4 --prompt-len 32 --gen 16]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfgreg
+from repro.models.model import init_params
+from repro.models.serving import (decode_step, init_serve_state,
+                                  prefill_step)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    cfg = cfgreg.get_smoke(args.arch) if args.smoke \
+        else cfgreg.get(args.arch)
+    params = init_params(cfg, jax.random.key(0))
+    max_len = args.prompt_len + args.gen + (
+        cfg.vision_patches if cfg.family == "vlm" else 0)
+    state = init_serve_state(cfg, args.batch, max_len, jnp.float32)
+
+    k = jax.random.key(1)
+    prompts = jax.random.randint(k, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab)
+    extras = {}
+    if cfg.family == "encdec":
+        extras["frames"] = jax.random.normal(
+            k, (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        extras["patches"] = jax.random.normal(
+            k, (args.batch, cfg.vision_patches, cfg.vision_d),
+            jnp.float32)
+
+    pf = jax.jit(lambda p, t, s: prefill_step(cfg, p, t, s, extras))
+    dc = jax.jit(lambda p, t, s: decode_step(cfg, p, t, s, {}))
+
+    t0 = time.perf_counter()
+    logits, state = pf(params, prompts, state)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    toks = jnp.argmax(logits, -1)[:, None]
+    out = [toks]
+    t0 = time.perf_counter()
+    for _ in range(args.gen - 1):
+        logits, state = dc(params, toks, state)
+        toks = jnp.argmax(logits, -1)[:, None]
+        out.append(toks)
+    jax.block_until_ready(toks)
+    t_decode = time.perf_counter() - t0
+
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"[serve] {cfg.name}: prefill {args.batch}×{args.prompt_len} "
+          f"in {t_prefill*1e3:.1f} ms; "
+          f"decode {args.gen-1} steps in {t_decode*1e3:.1f} ms "
+          f"({t_decode/(args.gen-1)*1e3:.1f} ms/tok)")
+    print(f"[serve] sample continuation ids: {gen[0][:10].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Step builders: (arch × shape × mesh) → jit-able fn + abstract inputs
++ shardings. Shared by the dry-run, the roofline harness and the real
+drivers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.shapes import SHAPES, ShapeCell, microbatches_for
+from ..models import sharding as SH
+from ..models.layers import activation_mesh_scope
+from ..models.model import ModelConfig, abstract_params, loss_fn
+from ..models.serving import decode_step, init_serve_state, prefill_step
+from ..optim import OptConfig, init_opt_state
+from ..runtime.train_loop import make_train_step
+
+
+def _batch_struct(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.batch, shape.seq
+    if shape.kind == "train":
+        text = s - (cfg.vision_patches if cfg.family == "vlm" else 0)
+        d = {"tokens": jax.ShapeDtypeStruct((b, text), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((b, text), jnp.int32)}
+        if cfg.family == "encdec":
+            d["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            d["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_patches, cfg.vision_d), jnp.bfloat16)
+        return d
+    if shape.kind == "prefill":
+        text = s - (cfg.vision_patches if cfg.family == "vlm" else 0)
+        d = {"tokens": jax.ShapeDtypeStruct((b, text), jnp.int32)}
+        if cfg.family == "encdec":
+            d["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            d["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_patches, cfg.vision_d), jnp.bfloat16)
+        return d
+    # decode: one new token against a seq-length cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """Public helper (per the brief): abstract inputs for an (arch, shape)."""
+    return _batch_struct(cfg, SHAPES[shape_name])
+
+
+def build_step(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+               opt_cfg: OptConfig = None):
+    """Returns (fn, example_args (abstract), in_shardings, out_shardings).
+
+    fn is the traced callable for this cell:
+      train  : (params, opt_state, batch) → (params, opt_state, metrics)
+      prefill: (params, tokens, state[, extras]) → (logits, state)
+      decode : (params, tokens, state) → (logits, state)
+    """
+    shape = SHAPES[shape_name]
+    if opt_cfg is None:
+        # ≥50B params: bf16 optimizer moments (halves ZeRO state; the
+        # standard large-model trade — see repro.optim.adamw)
+        from ..models.model import param_count
+        big = param_count(cfg) > 50e9
+        opt_cfg = OptConfig(state_dtype="bfloat16" if big else "float32")
+    else:
+        big = False
+    dp = SH.mesh_axis_size(mesh, SH.dp_axes(mesh) or None)
+    pspecs = SH.param_specs(cfg, mesh)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    bspecs = SH.batch_specs(cfg, mesh, shape.batch)
+    params_abs = abstract_params(cfg)
+
+    if shape.kind == "train":
+        m = microbatches_for(cfg, shape, dp)
+        batch_abs0 = _batch_struct(cfg, shape)
+        mb_sh = {k: NamedSharding(mesh, P(None, *bspecs[k]))
+                 for k in batch_abs0}
+        step0 = make_train_step(
+            cfg, opt_cfg, microbatches=m, grad_shardings=pshard,
+            mb_shardings=mb_sh,
+            accum_dtype=jnp.bfloat16 if big else jnp.float32)
+
+        def step(params, opt_state, batch):
+            with activation_mesh_scope(mesh):
+                return step0(params, opt_state, batch)
+
+        opt_abs = jax.eval_shape(
+            functools.partial(init_opt_state, cfg=opt_cfg), params_abs)
+        oshard = {"m": pshard, "v": pshard,
+                  "step": NamedSharding(mesh, P())}
+        batch_abs = _batch_struct(cfg, shape)
+        bshard = {k: NamedSharding(mesh, bspecs[k]) for k in batch_abs}
+        in_sh = (pshard, oshard, bshard)
+        out_sh = (pshard, oshard, None)
+        return step, (params_abs, opt_abs, batch_abs), in_sh, out_sh
+
+    # serving cells
+    state_abs = jax.eval_shape(
+        lambda: init_serve_state(cfg, shape.batch, shape.seq,
+                                 dtype=jnp.bfloat16))
+    sspecs = SH.serve_state_specs(cfg, mesh, state_abs)
+    sshard = jax.tree.map(lambda s: NamedSharding(mesh, s), sspecs)
+    batch_abs = _batch_struct(cfg, shape)
+    bshard = jax.tree.map(
+        lambda _: NamedSharding(mesh, bspecs["tokens"]),
+        {"tokens": batch_abs["tokens"]})
+    extras_abs = {k: v for k, v in batch_abs.items() if k != "tokens"}
+    eshard = {k: NamedSharding(mesh, bspecs[k]) for k in extras_abs}
+
+    logits_shard = NamedSharding(mesh, P(*bspecs["tokens"]))
+
+    if shape.kind == "prefill":
+        def fn(params, tokens, state, extras):
+            with activation_mesh_scope(mesh):
+                return prefill_step(cfg, params, tokens, state, extras)
+        args = (params_abs, batch_abs["tokens"], state_abs, extras_abs)
+        in_sh = (pshard, bshard["tokens"], sshard, eshard)
+        out_sh = (logits_shard, sshard)
+        return fn, args, in_sh, out_sh
+
+    def fn(params, tokens, state):
+        with activation_mesh_scope(mesh):
+            return decode_step(cfg, params, tokens, state, {})
+    args = (params_abs, batch_abs["tokens"], state_abs)
+    in_sh = (pshard, bshard["tokens"], sshard)
+    out_sh = (logits_shard, sshard)
+    return fn, args, in_sh, out_sh

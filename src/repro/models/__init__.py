@@ -1,0 +1,5 @@
+from .model import (ModelConfig, abstract_params, init_params, forward,
+                    loss_fn, param_count, active_param_count)
+
+__all__ = ["ModelConfig", "abstract_params", "init_params", "forward",
+           "loss_fn", "param_count", "active_param_count"]

@@ -1,0 +1,424 @@
+"""Shared neural layers: norms, RoPE, GQA attention (full / chunked /
+decode-with-cache), gated MLPs. Pure functions over param dicts.
+
+Attention memory discipline: ``prefill_32k`` and longer shapes never
+materialize an (S × T) score matrix — ``chunked_attention`` runs the
+online-softmax (flash) algorithm with ``lax.scan`` over KV blocks, so
+activation memory is O(S·D + Bq·Bk). On TPU the same tiling runs as the
+Pallas kernel in ``repro.kernels.flash_attention``; the jnp version here
+is its oracle and the CPU/dry-run path.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ------------------------------------------------------------------ #
+# activation sharding hints
+# ------------------------------------------------------------------ #
+# GSPMD propagates weight shardings to most activations, but a few spots
+# (decode attention with Hkv < TP, vocab-dim loss reductions) need an
+# explicit constraint or XLA falls back to full rematerialization /
+# replication. Model code stays mesh-agnostic: the launcher binds the
+# mesh for the duration of tracing via ``activation_mesh_scope`` and
+# ``shard_hint`` no-ops when no mesh is bound or dims don't divide.
+_ACT_MESH: Optional[Mesh] = None
+
+
+@contextlib.contextmanager
+def activation_mesh_scope(mesh: Mesh):
+    global _ACT_MESH
+    prev = _ACT_MESH
+    _ACT_MESH = mesh
+    try:
+        yield
+    finally:
+        _ACT_MESH = prev
+
+
+# §Perf hillclimb toggles — flipped per-experiment by the perf harness;
+# production default is the optimized setting.
+OPT = {"fsdp_use_hint": True, "mamba_recompute": True,
+       "remat_dots": False, "attn_repeat_k": False}
+
+
+def fsdp_use(w, *tp_axes):
+    """Use-site hint for a ZeRO/FSDP-sharded weight: "gather over data,
+    keep only the TP sharding for this use".
+
+    Storage keeps weights sharded over ('data', 'model'); without this
+    hint GSPMD sometimes resolves the storage-vs-use conflict by
+    all-reducing the *activations* over data instead (gigabytes per
+    layer vs megabytes of weight all-gather — §Perf H1). tp_axes is the
+    use-time spec, e.g. ``fsdp_use(wi, None, "model")``.
+    """
+    if _ACT_MESH is None or not OPT["fsdp_use_hint"]:
+        return w
+    axes = tp_axes if len(tp_axes) == w.ndim \
+        else (None,) * (w.ndim - len(tp_axes)) + tuple(tp_axes)
+    return shard_hint(w, *axes)
+
+
+def shard_hint(x, *axes):
+    """Constrain ``x``'s sharding; axis entries are mesh-axis names/None.
+
+    Silently drops axes absent from the bound mesh or not dividing the
+    corresponding dim — the hint degrades to replication, never errors.
+    """
+    mesh = _ACT_MESH
+    if mesh is None:
+        return x
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        names = ax if isinstance(ax, tuple) else (ax,) if ax else ()
+        names = tuple(a for a in names if a in mesh.shape)
+        if not names:
+            spec.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in names]))
+        keep = names if len(names) > 1 else names[0]
+        spec.append(keep if size and dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+# ------------------------------------------------------------------ #
+# initializers
+# ------------------------------------------------------------------ #
+def dense_init(key, shape, dtype=jnp.float32, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ #
+# norms
+# ------------------------------------------------------------------ #
+def rms_norm(x, w, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * w.astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w + b).astype(x.dtype)
+
+
+def group_norm_heads(x, w, b, n_heads, eps=1e-5):
+    """GroupNorm over per-head channels (RWKV output norm). x: (..., d)."""
+    shp = x.shape
+    xf = x.astype(jnp.float32).reshape(*shp[:-1], n_heads, shp[-1] // n_heads)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf.reshape(shp) * w + b).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ #
+# RoPE
+# ------------------------------------------------------------------ #
+def rope_frequencies(head_dim, theta=10000.0):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (B, H, S, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta), jnp.float32)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # B,1,S,D/2
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ #
+# attention
+# ------------------------------------------------------------------ #
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+
+
+def init_attention(key, d_model, dims: AttnDims, dtype):
+    ks = jax.random.split(key, 4)
+    h, hk, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    return {
+        "wq": dense_init(ks[0], (d_model, h * hd), dtype),
+        "wk": dense_init(ks[1], (d_model, hk * hd), dtype),
+        "wv": dense_init(ks[2], (d_model, hk * hd), dtype),
+        "wo": dense_init(ks[3], (h * hd, d_model), dtype),
+    }
+
+
+def embed_lookup(table, ids):
+    """Embedding lookup as a one-hot matmul.
+
+    A gather from a vocab-sharded table makes GSPMD replicate the whole
+    table per device ("involuntary full rematerialization"); the one-hot
+    contraction keeps the vocab axis sharded and lowers to an MXU matmul
+    + a small partial-sum all-reduce — the standard TPU embedding path.
+    """
+    onehot = jax.nn.one_hot(ids, table.shape[0], dtype=table.dtype)
+    out = onehot @ table
+    return shard_hint(out, ("pod", "data"), None, None)
+
+
+def _hint_model_dim(x, priority):
+    """shard_hint: batch (dim 0) over dp + 'model' on the first divisible
+    dim in ``priority`` (batch-only hint if none divides)."""
+    mesh = _ACT_MESH
+    if mesh is None or "model" not in mesh.shape:
+        return x
+    tp = mesh.shape["model"]
+    axes = [None] * x.ndim
+    axes[0] = ("pod", "data")
+    for i in priority:
+        if x.shape[i] % tp == 0 and x.shape[i] >= tp:
+            axes[i] = "model"
+            break
+    return shard_hint(x, *axes)
+
+
+def _gqa_scores_full(q, k, v, causal, q_off=0):
+    """Full-matrix GQA attention (small S only). q: (B,H,S,D), kv: (B,Hk,T,D).
+
+    Sharding strategy for the (huge) score tensor, best-first:
+    1. total heads H divide TP → repeat K/V to H and shard scores on H.
+       q is already H-sharded from the column-parallel wq, so this needs
+       NO resharding collectives (§Perf H1 iter-3: the grouped layout
+       below costs a q all-to-all + kv gathers when Hkv < TP);
+    2. grouped (B,Hkv,G,S,T) with Hkv / G / S sharded, first divisible.
+    """
+    b, h, s, d = q.shape
+    hk, t = k.shape[1], k.shape[2]
+    g = h // hk
+    tp = _ACT_MESH.shape.get("model", 1) if _ACT_MESH is not None else 1
+    if OPT["attn_repeat_k"] and tp > 1 and h % tp == 0 and hk % tp != 0:
+        # §Perf H1 iter-3: REFUTED on starcoder2 (kills the q a2a and kv
+        # gathers, but the repeat's backward segment-sum doubles AR
+        # traffic: 228→443 GB/dev). Kept for arch-specific use; off by
+        # default.
+        kr = jnp.repeat(k, g, axis=1)
+        vr = jnp.repeat(v, g, axis=1)
+        q = shard_hint(q, ("pod", "data"), "model", None, None)
+        kr = shard_hint(kr, ("pod", "data"), "model", None, None)
+        vr = shard_hint(vr, ("pod", "data"), "model", None, None)
+        logits = jnp.einsum("bhsd,bhtd->bhst", q, kr)
+        logits = logits.astype(jnp.float32) * d ** -0.5
+        logits = shard_hint(logits, ("pod", "data"), "model", None, None)
+        if causal:
+            mask = jnp.arange(t)[None, :] <= (jnp.arange(s) + q_off)[:, None]
+            logits = jnp.where(mask[None, None], logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhst,bhtd->bhsd", p.astype(vr.dtype), vr)
+
+    qg = q.reshape(b, hk, g, s, d)
+    logits = jnp.einsum("bkgsd,bktd->bkgst", qg, k).astype(jnp.float32)
+    logits *= d ** -0.5
+    # keep the (B,Hk,G,S,T) score tensor sharded: heads if divisible,
+    # else query-sequence (sequence-parallel scores)
+    logits = _hint_model_dim(logits, (1, 2, 3))
+    if causal:
+        qpos = jnp.arange(s) + q_off
+        kpos = jnp.arange(t)
+        mask = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p.astype(v.dtype), v)
+    return out.reshape(b, h, s, d)
+
+
+def chunked_attention(q, k, v, *, causal=True, q_off=0, kv_len=None,
+                      q_chunk=512, kv_chunk=1024):
+    """Online-softmax (flash) attention over KV chunks; GQA-aware.
+
+    q: (B, H, S, D); k, v: (B, Hkv, T, D). ``kv_len``: optional dynamic
+    valid length of the KV sequence (decode with a preallocated cache).
+    Never materializes more than (B, Hkv, g, q_chunk, kv_chunk) logits.
+    """
+    b, h, s, d = q.shape
+    hk, t = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = d ** -0.5
+    s_pad = (-s) % q_chunk
+    if s_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+    t_pad = (-t) % kv_chunk
+    if t_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+    sq, tk = q.shape[2], k.shape[2]
+    nq, nk = sq // q_chunk, tk // kv_chunk
+    qg = q.reshape(b, hk, g, nq, q_chunk, d)
+    kb = k.reshape(b, hk, nk, kv_chunk, d)
+    vb = v.reshape(b, hk, nk, kv_chunk, d)
+    valid_t = t if kv_len is None else kv_len
+
+    def q_block(qi, qblk):
+        # qblk: (b, hk, g, q_chunk, d)
+        qpos = qi * q_chunk + jnp.arange(q_chunk) + q_off
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            ki, kblk, vblk = inp
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            lg = jnp.einsum("bkgsd,bktd->bkgst", qblk, kblk)
+            lg = lg.astype(jnp.float32) * scale
+            msk = kpos[None, :] < valid_t
+            if causal:
+                msk = msk & (kpos[None, :] <= qpos[:, None])
+            lg = jnp.where(msk[None, None, None], lg, -1e30)
+            m_new = jnp.maximum(m, jnp.max(lg, axis=-1))
+            p = jnp.exp(lg - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgst,bktd->bkgsd", p.astype(vblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, hk, g, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, hk, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0)))
+        return (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+
+    out = jax.lax.map(lambda i: q_block(i, qg[:, :, :, i]),
+                      jnp.arange(nq))  # (nq, b, hk, g, qc, d)
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hk, g, sq, d)
+    out = out.reshape(b, h, sq, d)
+    return out[:, :, :s]
+
+
+def _gqa_decode(q, k, v, pos, s):
+    """Masked full-cache attention for small decode blocks (s ≤ 8).
+
+    q: (B, H, s, D); k/v: (B, Hkv, T, D). Valid keys: index ≤ pos+i.
+    The cache is head-dim-sharded when Hkv < TP (see models.sharding);
+    constraining q to match turns the score einsum into a partial-sum
+    contraction (one small logits all-reduce) instead of letting SPMD
+    replicate the whole cache ("involuntary full rematerialization").
+    """
+    b, h, _, d = q.shape
+    hk, t = k.shape[1], k.shape[2]
+    g = h // hk
+    qg = q.reshape(b, hk, g, s, d)
+    tp = _ACT_MESH.shape.get("model", 1) if _ACT_MESH is not None else 1
+    if hk % max(tp, 1) != 0:
+        qg = shard_hint(qg, ("pod", "data"), None, None, None, "model")
+        k = shard_hint(k, ("pod", "data"), None, None, "model")
+        v = shard_hint(v, ("pod", "data"), None, None, "model")
+    logits = jnp.einsum("bkgsd,bktd->bkgst", qg, k).astype(jnp.float32)
+    logits *= d ** -0.5
+    kpos = jnp.arange(t)
+    qpos = pos + jnp.arange(s)
+    mask = kpos[None, :] <= qpos[:, None]
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p.astype(v.dtype), v)
+    return out.reshape(b, h, s, d)
+
+
+def attention(params, x, dims: AttnDims, *, positions, causal=True,
+              cache=None, cache_pos=None, rope_theta=10000.0, use_rope=True,
+              kv_override=None, chunked=None, q_chunk=512, kv_chunk=1024):
+    """GQA multi-head attention with optional KV cache (prefill/decode).
+
+    cache: None | dict(k=(B,Hk,T,D), v=...). With a cache, x is the block
+    of new tokens at absolute position ``cache_pos`` (prefill: S tokens at
+    pos 0; decode: 1 token); k/v are written into the cache and attention
+    runs causally over the valid prefix. Returns (out, new_cache).
+    kv_override: (k, v) for cross-attention (whisper decoder).
+    """
+    b, s, _ = x.shape
+    h, hk, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    wq = fsdp_use(params["wq"], None, "model")
+    q = (x @ wq).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    if kv_override is None:
+        wk = fsdp_use(params["wk"], None, "model")
+        wv = fsdp_use(params["wv"], None, "model")
+        k = (x @ wk).reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
+        v = (x @ wv).reshape(b, s, hk, hd).transpose(0, 2, 1, 3)
+        if use_rope:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+    else:
+        k, v = kv_override
+
+    new_cache = None
+    if cache is not None:
+        pos = cache_pos
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
+        new_cache = {"k": ck, "v": cv}
+        if s <= 8:
+            # decode fast path: one masked pass over the cache — no
+            # KV-block scan (a scan would copy the cache into its xs and
+            # carry f32 logits per block; see EXPERIMENTS.md §Perf)
+            out = _gqa_decode(q, ck, cv, pos, s)
+        else:
+            out = chunked_attention(q, ck, cv, causal=causal, q_off=pos,
+                                    kv_len=pos + s,
+                                    q_chunk=min(max(8, s), q_chunk),
+                                    kv_chunk=kv_chunk)
+    else:
+        t = k.shape[2]
+        use_chunked = chunked if chunked is not None else (s * t > 1 << 22)
+        if use_chunked:
+            out = chunked_attention(q, k, v, causal=causal,
+                                    q_chunk=q_chunk, kv_chunk=kv_chunk)
+        else:
+            out = _gqa_scores_full(q, k, v, causal)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return out @ fsdp_use(params["wo"], "model", None), new_cache
+
+
+def init_cache(batch, dims: AttnDims, max_len, dtype=jnp.bfloat16):
+    return {"k": jnp.zeros((batch, dims.n_kv_heads, max_len, dims.head_dim),
+                           dtype),
+            "v": jnp.zeros((batch, dims.n_kv_heads, max_len, dims.head_dim),
+                           dtype)}
+
+
+# ------------------------------------------------------------------ #
+# MLPs
+# ------------------------------------------------------------------ #
+def init_mlp(key, d_model, d_ff, kind, dtype):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {"wi": dense_init(ks[0], (d_model, d_ff), dtype),
+                "wg": dense_init(ks[1], (d_model, d_ff), dtype),
+                "wo": dense_init(ks[2], (d_ff, d_model), dtype)}
+    return {"wi": dense_init(ks[0], (d_model, d_ff), dtype),
+            "wo": dense_init(ks[2], (d_ff, d_model), dtype)}
+
+
+def mlp(params, x, kind):
+    wi = fsdp_use(params["wi"], None, "model")
+    wo = fsdp_use(params["wo"], "model", None)
+    if kind in ("swiglu", "geglu"):
+        wg = fsdp_use(params["wg"], None, "model")
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        return (act(x @ wg) * (x @ wi)) @ wo
+    return jax.nn.gelu(x @ wi) @ wo

@@ -1,0 +1,163 @@
+"""Mamba-1 selective SSM block (jamba's sequence mixer).
+
+Recurrence per channel i with state dimension n:
+    h_t = exp(Δ_t · A) ⊙ h_{t-1} + (Δ_t · B_t) · x_t
+    y_t = C_t · h_t + D ⊙ x_t
+with input-dependent Δ, B, C (selectivity). Training uses ``lax.scan``
+over time (compact HLO — one body regardless of S; the chunked parallel
+formulation is a recorded §Perf candidate); decode keeps O(1) state:
+(conv window, h).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, _hint_model_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaDims:
+    d_inner: int
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0          # 0 → ceil(d_model/16)
+
+
+def mamba_dims(d_model, expand=2, d_state=16, d_conv=4):
+    return MambaDims(d_inner=expand * d_model, d_state=d_state,
+                     d_conv=d_conv, dt_rank=max(1, (d_model + 15) // 16))
+
+
+def init_mamba(key, d_model, dims: MambaDims, dtype):
+    ks = jax.random.split(key, 7)
+    di, ds, dc, dr = dims.d_inner, dims.d_state, dims.d_conv, dims.dt_rank
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (dc, di), dtype, scale=dc ** -0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dr + 2 * ds), dtype),
+        "dt_proj": dense_init(ks[3], (dr, di), dtype),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus⁻¹ of U(1e-3, 1e-1)
+            jax.random.uniform(ks[4], (di,), jnp.float32, 1e-3, 1e-1))),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d_model), dtype),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv. x: (B, S, di); w: (dc, di).
+
+    state: (B, dc-1, di) trailing context (decode) or None (train: zero
+    left-pad). Returns (y, new_state).
+    """
+    dc = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    new_state = xp[:, -(dc - 1):, :]
+    # windowed sum: y_t = Σ_j w_j · x_{t-dc+1+j}
+    y = sum(xp[:, j:j + x.shape[1], :] * w[j] for j in range(dc))
+    return y + b, new_state
+
+
+def mamba_block(params, x, dims: MambaDims, *, state=None):
+    """x: (B, S, d_model) → (y, new_state).
+
+    state: None (training, returns None) or dict(conv=(B,dc-1,di),
+    h=(B,di,ds)) for stepwise decode.
+    """
+    b, s, _ = x.shape
+    di, ds, dr = dims.d_inner, dims.d_state, dims.dt_rank
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = None if state is None else state["conv"]
+    xs, new_conv = _causal_conv(xs, params["conv_w"], params["conv_b"],
+                                conv_state)
+    xs = jax.nn.silu(xs)
+
+    proj = xs @ params["x_proj"]                                  # (B,S,dr+2ds)
+    dt_r, bmat, cmat = jnp.split(proj, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj"] +
+                         params["dt_bias"]).astype(jnp.float32)   # (B,S,di)
+    a = -jnp.exp(params["A_log"])                                 # (di,ds)
+
+    h0 = jnp.zeros((b, di, ds), jnp.float32) if state is None \
+        else state["h"]
+    h0 = _hint_model_dim(h0, (1,))
+
+    from .layers import OPT
+    use_chunked = OPT["mamba_recompute"] and state is None and s >= 64
+
+    if use_chunked:
+        # §Perf H2: time-chunked selective scan with per-chunk remat —
+        # the TPU adaptation of Mamba's recompute-in-backward kernel.
+        # (a) dA = exp(Δ·A) and ΔB·x are NOT materialized as (B,S,di,ds)
+        #     tensors (16× the (B,S,di) inputs at ds=16); each step
+        #     rebuilds them from Δ_t/x_t/B_t in VREGs;
+        # (b) reverse-mode residuals are saved once per CHUNK (h at
+        #     chunk boundaries) instead of per step — 16× fewer scan
+        #     carries in HBM; the chunk body recomputes in backward.
+        chunk = 16
+        nc = s // chunk
+        assert s % chunk == 0, (s, chunk)
+
+        def pack(u, width):
+            u = jnp.moveaxis(u.astype(jnp.float32), 1, 0)  # (S,B,w)
+            return u.reshape(nc, chunk, b, width)
+
+        xs_c = (pack(dt, di), pack(xs.astype(jnp.float32), di),
+                pack(bmat, ds), pack(cmat, ds))
+
+        def inner(h, inp):
+            dt_t, x_t, b_t, c_t = inp
+            da_t = jnp.exp(dt_t[..., None] * a)               # (B,di,ds)
+            dbx_t = (dt_t * x_t)[..., None] * b_t[:, None, :]
+            h = da_t * h + dbx_t
+            h = _hint_model_dim(h, (1,))
+            y = jnp.einsum("bis,bs->bi", h, c_t)
+            return h, y
+
+        @jax.checkpoint
+        def chunk_step(h, blk):
+            return jax.lax.scan(inner, h, blk)
+
+        h_last, ys = jax.lax.scan(chunk_step, h0, xs_c)
+        ys = jnp.moveaxis(ys.reshape(s, b, di), 0, 1)         # (B,S,di)
+    else:
+        da = jnp.exp(dt[..., None] * a)                       # (B,S,di,ds)
+        dbx = (dt * xs.astype(jnp.float32))[..., None] * \
+            bmat.astype(jnp.float32)[:, :, None, :]
+        # pin the channel dim to the model axis: the scan's per-step
+        # backward residuals stack to (S, B, di, ds) — unsharded di
+        # replicates ~4 GiB per layer at jamba scale
+        da = _hint_model_dim(da, (2,))
+        dbx = _hint_model_dim(dbx, (2,))
+
+        def step(h, inp):
+            da_t, dbx_t, c_t = inp
+            h = da_t * h + dbx_t                              # (B,di,ds)
+            h = _hint_model_dim(h, (1,))
+            y = jnp.einsum("bis,bs->bi", h, c_t)
+            return h, y
+
+        (h_last, ys) = jax.lax.scan(
+            step, h0,
+            (jnp.moveaxis(da, 1, 0), jnp.moveaxis(dbx, 1, 0),
+             jnp.moveaxis(cmat.astype(jnp.float32), 1, 0)))
+        ys = jnp.moveaxis(ys, 0, 1)                           # (B,S,di)
+    y = (ys + xs.astype(jnp.float32) * params["D"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    new_state = None if state is None else {"conv": new_conv, "h": h_last}
+    return out, new_state
+
+
+def init_mamba_state(batch, dims: MambaDims, dtype=jnp.bfloat16):
+    return {"conv": jnp.zeros((batch, dims.d_conv - 1, dims.d_inner), dtype),
+            "h": jnp.zeros((batch, dims.d_inner, dims.d_state), jnp.float32)}

@@ -1,0 +1,450 @@
+"""Config → model builder for the whole architecture zoo.
+
+One uniform block grammar covers all ten assigned architectures:
+
+  layer i = mixer(i) + ffn(i), where
+    mixer(i) ∈ {attention (GQA/MQA/MHA + RoPE), mamba, rwkv6-tmix}
+    ffn(i)   ∈ {dense MLP (swiglu/geglu/gelu), MoE, rwkv6-cmix}
+
+Layers are grouped into *superblocks* of period
+``p = lcm(attn_period, moe_period)`` whose kind pattern repeats; the
+parameters of the repeated superblocks are stacked on a leading axis and
+the stack is traversed with ``lax.scan`` — so the compiled HLO contains
+each distinct block body exactly once regardless of depth (keeps 1-core
+CPU dry-run compiles tractable and makes collective accounting exact:
+per-block collectives × trip count). A few leading layers can be
+non-repeating (deepseek's dense layer 0) — those are explicit "head"
+layers.
+
+Whisper (enc-dec) adds a bidirectional encoder stack and cross-attention
+in each decoder layer; phi-3-vision prepends projected patch embeddings
+(stub frontend per the assignment) to the token embedding sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import mamba as M
+from . import moe as MOE
+from . import rwkv6 as R
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    mlp_kind: str = "swiglu"     # swiglu | geglu | gelu
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    rope_theta: float = 1e4
+    use_rope: bool = True
+    tie_embeddings: bool = False
+    embed_scale: bool = False    # gemma: scale embeddings by sqrt(d)
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    moe_period: int = 1
+    moe_offset: int = 0
+    dense_d_ff: int = 0          # d_ff of non-MoE layers in MoE/hybrid models
+    first_dense: int = 0         # deepseek: first k layers use dense FFN
+    moe_aux_coef: float = 0.01
+    # --- hybrid / ssm mixers ---
+    mixer: str = "attn"          # attn | mamba_hybrid | rwkv
+    attn_period: int = 1
+    attn_offset: int = 0
+    ssm_expand: int = 2
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    rwkv_head_size: int = 64
+    # --- enc-dec ---
+    encoder_layers: int = 0
+    encoder_seq: int = 1500      # whisper: conv-frontend output frames
+    # --- vlm stub frontend ---
+    vision_patches: int = 0
+    vision_d: int = 1024
+    # --- numerics / structure ---
+    dtype: str = "bfloat16"
+    remat: bool = True
+    logits_softcap: float = 0.0
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def attn_dims(self) -> L.AttnDims:
+        return L.AttnDims(self.n_heads, self.n_kv_heads, self.hd)
+
+    @property
+    def mamba_dims(self) -> M.MambaDims:
+        return M.MambaDims(d_inner=self.ssm_expand * self.d_model,
+                           d_state=self.ssm_state, d_conv=self.ssm_conv,
+                           dt_rank=max(1, (self.d_model + 15) // 16))
+
+    @property
+    def rwkv_dims(self) -> R.RWKVDims:
+        return R.RWKVDims(n_heads=self.d_model // self.rwkv_head_size,
+                          head_size=self.rwkv_head_size, d_ff=self.d_ff)
+
+    @property
+    def moe_dims(self) -> MOE.MoEDims:
+        return MOE.MoEDims(n_experts=self.n_experts, top_k=self.top_k,
+                           d_expert=self.d_ff,
+                           n_shared=self.n_shared_experts,
+                           mlp_kind=self.mlp_kind)
+
+    @property
+    def jdtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    # ---- block grammar ----
+    def layer_kinds(self, i: int) -> Tuple[str, str]:
+        if self.mixer == "rwkv":
+            return "rwkv", "cmix"
+        if self.mixer == "mamba_hybrid":
+            mix = "attn" if i % self.attn_period == self.attn_offset \
+                else "mamba"
+        else:
+            mix = "attn"
+        if self.n_experts and i >= self.first_dense \
+                and (i % self.moe_period) == self.moe_offset:
+            ffn = "moe"
+        else:
+            ffn = "dense"
+        return mix, ffn
+
+    @property
+    def super_period(self) -> int:
+        if self.mixer == "rwkv" or not self.n_experts:
+            p = self.attn_period if self.mixer == "mamba_hybrid" else 1
+        else:
+            p = math.lcm(self.attn_period
+                         if self.mixer == "mamba_hybrid" else 1,
+                         self.moe_period)
+        return p
+
+    @property
+    def n_head_layers(self) -> int:
+        # leading non-repeating layers (deepseek's dense first layer(s))
+        return self.first_dense
+
+    @property
+    def n_super(self) -> int:
+        body = self.n_layers - self.n_head_layers
+        assert body % self.super_period == 0, \
+            (self.name, body, self.super_period)
+        return body // self.super_period
+
+
+# ===================================================================== #
+# parameter construction
+# ===================================================================== #
+def _init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.ones((d,), jnp.float32)}
+    return {"w": jnp.ones((d,), jnp.float32),
+            "b": jnp.zeros((d,), jnp.float32)}
+
+
+def _apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return L.rms_norm(x, p["w"])
+    return L.layer_norm(x, p["w"], p["b"])
+
+
+def _init_sublayer(cfg: ModelConfig, key, mix: str, ffn: str,
+                   cross: bool = False):
+    ks = jax.random.split(key, 6)
+    dt = cfg.jdtype
+    p: Dict[str, Any] = {"norm1": _init_norm(cfg), "norm2": _init_norm(cfg)}
+    if mix == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg.d_model, cfg.attn_dims, dt)
+    elif mix == "mamba":
+        p["mamba"] = M.init_mamba(ks[0], cfg.d_model, cfg.mamba_dims, dt)
+    else:
+        p["tmix"] = R.init_rwkv_tmix(ks[0], cfg.d_model, cfg.rwkv_dims, dt)
+    if cross:
+        p["norm_x"] = _init_norm(cfg)
+        p["cross"] = L.init_attention(ks[1], cfg.d_model, cfg.attn_dims, dt)
+    if ffn == "moe":
+        p["moe"] = MOE.init_moe(ks[2], cfg.d_model, cfg.moe_dims, dt)
+    elif ffn == "cmix":
+        p["cmix"] = R.init_rwkv_cmix(ks[2], cfg.d_model, cfg.rwkv_dims, dt)
+    else:
+        dff = cfg.dense_d_ff or cfg.d_ff
+        p["mlp"] = L.init_mlp(ks[2], cfg.d_model, dff, cfg.mlp_kind, dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    dt = cfg.jdtype
+    params: Dict[str, Any] = {
+        "tok_embed": L.dense_init(ks[0], (cfg.vocab, cfg.d_model), dt,
+                                  scale=0.02),
+        "final_norm": _init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[1], (cfg.d_model, cfg.vocab), dt)
+
+    cross = cfg.family == "encdec"
+    # head (non-repeating) layers
+    if cfg.n_head_layers:
+        head = {}
+        for i in range(cfg.n_head_layers):
+            mix, ffn = cfg.layer_kinds(i)
+            head[str(i)] = _init_sublayer(
+                cfg, jax.random.fold_in(ks[2], i), mix, ffn, cross)
+        params["head"] = head
+
+    # repeated superblocks — stacked params
+    p0 = cfg.n_head_layers
+    per = cfg.super_period
+
+    def one_super(key_s):
+        sb = {}
+        for j in range(per):
+            mix, ffn = cfg.layer_kinds(p0 + j)
+            sb[f"s{j}"] = _init_sublayer(
+                cfg, jax.random.fold_in(key_s, j), mix, ffn, cross)
+        return sb
+
+    supers = [one_super(jax.random.fold_in(ks[3], i))
+              for i in range(cfg.n_super)]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *supers)
+
+    if cfg.family == "encdec":
+        def one_enc(key_e):
+            return _init_sublayer(cfg, key_e, "attn", "dense", cross=False)
+        encs = [one_enc(jax.random.fold_in(ks[4], i))
+                for i in range(cfg.encoder_layers)]
+        params["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *encs)
+        params["enc_final_norm"] = _init_norm(cfg)
+        params["dec_pos_embed"] = L.dense_init(
+            ks[5], (32768, cfg.d_model), dt, scale=0.02)
+    if cfg.family == "vlm":
+        params["patch_proj"] = L.dense_init(
+            ks[6], (cfg.vision_d, cfg.d_model), dt)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(l.shape))
+               for l in jax.tree.leaves(abstract_params(cfg)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Active params per token (MoE: top-k + shared experts only)."""
+    total = param_count(cfg)
+    if not cfg.n_experts:
+        return total
+    ap = abstract_params(cfg)
+    expert_leaves = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(ap):
+        names = [getattr(k, "key", "") for k in path]
+        if "moe" in names and any(n in ("wi", "wg", "wo") for n in names):
+            expert_leaves += int(np.prod(leaf.shape))
+    active_frac = cfg.top_k / cfg.n_experts
+    return int(total - expert_leaves * (1 - active_frac))
+
+
+# ===================================================================== #
+# forward
+# ===================================================================== #
+def _run_sublayer(cfg: ModelConfig, p, x, mix, ffn, *, positions,
+                  cache=None, cache_pos=None, state=None, enc_kv=None,
+                  aux=None, causal=True):
+    """One (mixer + ffn) layer with pre-norm residuals.
+
+    Returns (x, new_cache_or_state, aux).
+    """
+    h = _apply_norm(cfg, p["norm1"], x)
+    new_cs = None
+    if mix == "attn":
+        out, new_cache = L.attention(
+            p["attn"], h, cfg.attn_dims, positions=positions,
+            cache=cache, cache_pos=cache_pos,
+            rope_theta=cfg.rope_theta, use_rope=cfg.use_rope,
+            causal=causal, chunked=(None if cache is not None else False))
+        new_cs = new_cache
+    elif mix == "mamba":
+        out, new_cs = M.mamba_block(p["mamba"], h, cfg.mamba_dims,
+                                    state=state)
+    else:  # rwkv tmix
+        st = None if state is None else state["tmix"]
+        out, new_cs = R.rwkv_tmix(p["tmix"], h, cfg.rwkv_dims, state=st)
+    x = x + out.astype(x.dtype)
+
+    if enc_kv is not None:  # cross-attention (decoder)
+        hx = _apply_norm(cfg, p["norm_x"], x)
+        out, _ = L.attention(p["cross"], hx, cfg.attn_dims,
+                             positions=positions, kv_override=enc_kv,
+                             causal=False, use_rope=False)
+        x = x + out.astype(x.dtype)
+
+    h2 = _apply_norm(cfg, p["norm2"], x)
+    new_cmix_state = None
+    if ffn == "moe":
+        out, a = MOE.moe_ffn(p["moe"], h2, cfg.moe_dims)
+        aux = a if aux is None else aux + a
+    elif ffn == "cmix":
+        cm_state = None if state is None else state.get("cmix_shift")
+        out, new_cmix_state = R.rwkv_cmix(p["cmix"], h2, state=cm_state)
+    else:
+        out = L.mlp(p["mlp"], h2, cfg.mlp_kind)
+    x = x + out.astype(x.dtype)
+    if ffn == "cmix" and state is not None:
+        new_cs = {"tmix": new_cs, "cmix_shift": new_cmix_state}
+    return x, new_cs, aux
+
+
+def _super_kinds(cfg: ModelConfig):
+    p0 = cfg.n_head_layers
+    return [cfg.layer_kinds(p0 + j) for j in range(cfg.super_period)]
+
+
+def _sinusoid_pos(seq, d):
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=-1),
+                       jnp.float32)
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Whisper encoder over (precomputed, stubbed) frame embeddings."""
+    x = frames.astype(cfg.jdtype) + _sinusoid_pos(
+        frames.shape[1], cfg.d_model).astype(cfg.jdtype)
+    positions = jnp.arange(frames.shape[1])
+
+    def body(h, bp):
+        h, _, _ = _run_sublayer(cfg, bp, h, "attn", "dense",
+                                positions=positions, causal=False)
+        return h, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["encoder"])
+    return _apply_norm(cfg, params["enc_final_norm"], x)
+
+
+def forward(cfg: ModelConfig, params, batch, *, return_aux=True):
+    """Training/prefill forward → logits (B, S, V).
+
+    batch: dict with "tokens" (B, S) plus per-family extras:
+      encdec: "frames" (B, T_enc, d_model); vlm: "patches" (B, P, vision_d).
+    """
+    tokens = batch["tokens"]
+    x = L.embed_lookup(params["tok_embed"], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(cfg.jdtype) @ params["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+
+    enc_kv_stack = None
+    if cfg.family == "encdec":
+        enc_out = encode(cfg, params, batch["frames"])
+        x = x + jnp.take(params["dec_pos_embed"], positions, axis=0)
+        # per-decoder-layer cross K/V: computed inside blocks from enc_out
+        enc_kv_stack = enc_out
+
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def make_enc_kv(p, h_enc):
+        bb, tt, _ = h_enc.shape
+        hk, hd = cfg.n_kv_heads, cfg.hd
+        k = (h_enc @ p["wk"]).reshape(bb, tt, hk, hd).transpose(0, 2, 1, 3)
+        v = (h_enc @ p["wv"]).reshape(bb, tt, hk, hd).transpose(0, 2, 1, 3)
+        return k, v
+
+    def run_block(bp, h, aux, kinds_list):
+        for j, (mix, ffn) in enumerate(kinds_list):
+            sp = bp[f"s{j}"] if f"s{j}" in bp else bp
+            ekv = None
+            if cfg.family == "encdec":
+                ekv = make_enc_kv(sp["cross"], enc_kv_stack)
+            h, _, aux = _run_sublayer(cfg, sp, h, mix, ffn,
+                                      positions=positions, enc_kv=ekv,
+                                      aux=aux)
+        return h, aux
+
+    # head layers
+    for i in range(cfg.n_head_layers):
+        mix, ffn = cfg.layer_kinds(i)
+        x, aux0 = run_block(params["head"][str(i)], x, aux0, [(mix, ffn)])
+
+    kinds = _super_kinds(cfg)
+
+    def body(carry, bp):
+        h, aux = carry
+        h, aux = run_block(bp, h, aux, kinds)
+        return (h, aux), None
+
+    if cfg.remat:
+        # full remat re-runs the forward (incl. its TP all-reduces) in
+        # backward; the dots policy keeps matmul/AR outputs — §Perf H1.
+        policy = jax.checkpoint_policies.checkpoint_dots \
+            if L.OPT["remat_dots"] else None
+        fn = jax.checkpoint(body, policy=policy)
+    else:
+        fn = body
+    (x, aux0), _ = jax.lax.scan(fn, (x, aux0), params["blocks"])
+
+    x = _apply_norm(cfg, params["final_norm"], x)
+    # batch-shard the pre-logits activations so the lm_head matmul keeps
+    # the vocab axis sharded (otherwise GSPMD may gather the full-vocab
+    # logits per device — gigabytes at gemma's 256k vocab)
+    x = L.shard_hint(x, ("pod", "data"), None, None)
+    head = params["tok_embed"].T if cfg.tie_embeddings \
+        else params["lm_head"]
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    if return_aux:
+        return logits, aux0
+    return logits
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Mean next-token cross entropy; labels −100 are masked.
+
+    The label log-prob is extracted with an iota-mask reduction rather
+    than ``take_along_axis``: a gather along the vocab axis forces GSPMD
+    to replicate the (B, S, V) logits on every chip, while elementwise
+    mask + partial-sum reduction keeps the vocab dim sharded end-to-end
+    (one tiny (B, S) all-reduce instead of gigabytes of temps).
+    """
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # logits cover [patches; text] — text tail only
+        logits = logits[:, -labels.shape[1]:]
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    ll = jnp.sum(jnp.where(iota == safe[..., None], logits, 0.0), axis=-1)
+    ce = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return ce + cfg.moe_aux_coef * aux, {"ce": ce, "aux": aux}

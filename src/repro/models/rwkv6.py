@@ -1,0 +1,162 @@
+"""RWKV-6 "Finch" block: attention-free time mixing with data-dependent
+per-channel decay (arXiv:2404.05892).
+
+Per head (head size P): state S ∈ R^{P×P};
+    S_t = diag(w_t) · S_{t-1} + k_t^T v_t
+    o_t = r_t · (S_{t-1} + diag(u) k_t^T v_t)
+with w_t = exp(−exp(w0 + LoRA_w(x̃_t))) data-dependent (the Finch change
+vs RWKV-5's static decay). Token-shift interpolation coefficients are
+also data-dependent via small LoRAs.
+
+Training runs a ``lax.scan`` over time carrying S (B, H, P, P); the
+chunked parallel formulation is the recorded §Perf candidate. Decode is
+O(1): one state update per token. Channel mixing is the RWKV squared-ReLU
+FFN.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, group_norm_heads, _hint_model_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVDims:
+    n_heads: int
+    head_size: int
+    d_ff: int
+    lora_r: int = 64
+
+
+def init_rwkv_tmix(key, d_model, dims: RWKVDims, dtype):
+    ks = jax.random.split(key, 12)
+    h, p = dims.n_heads, dims.head_size
+    d = d_model
+    r = dims.lora_r
+    return {
+        # token-shift mix coefficients (static part) for r,k,v,w,g
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),
+        "mu_lora_a": dense_init(ks[0], (d, r), dtype, scale=0.01),
+        "mu_lora_b": dense_init(ks[1], (r, 5 * d), dtype, scale=0.01),
+        "wr": dense_init(ks[2], (d, h * p), dtype),
+        "wk": dense_init(ks[3], (d, h * p), dtype),
+        "wv": dense_init(ks[4], (d, h * p), dtype),
+        "wg": dense_init(ks[5], (d, h * p), dtype),
+        "w0": -6.0 + jnp.zeros((h * p,), jnp.float32),
+        "w_lora_a": dense_init(ks[6], (d, r), dtype, scale=0.01),
+        "w_lora_b": dense_init(ks[7], (r, h * p), dtype, scale=0.01),
+        "u": dense_init(ks[8], (h, p), jnp.float32, scale=0.5),
+        "gn_w": jnp.ones((h * p,), jnp.float32),
+        "gn_b": jnp.zeros((h * p,), jnp.float32),
+        "wo": dense_init(ks[9], (h * p, d), dtype),
+    }
+
+
+def rwkv_tmix(params, x, dims: RWKVDims, *, state=None):
+    """x: (B, S, d) → (y, new_state); state: dict(shift=(B,d), S=(B,H,P,P))."""
+    b, s, d = x.shape
+    h, p = dims.n_heads, dims.head_size
+
+    shift_in = jnp.zeros((b, 1, d), x.dtype) if state is None \
+        else state["shift"][:, None, :]
+    x_prev = jnp.concatenate([shift_in, x[:, :-1]], axis=1)
+    new_shift = x[:, -1]
+
+    # data-dependent token-shift interpolation (Finch LoRA)
+    dx = x_prev - x
+    lora = jnp.tanh(x @ params["mu_lora_a"]) @ params["mu_lora_b"]
+    mu = params["mu"][None, None].astype(jnp.float32)  # (1,1,5,d)
+    mix = mu + lora.reshape(b, s, 5, d).astype(jnp.float32)
+    xr, xk, xv, xw, xg = [
+        (x.astype(jnp.float32) + mix[:, :, i] * dx.astype(jnp.float32))
+        .astype(x.dtype) for i in range(5)]
+
+    rr = (xr @ params["wr"]).reshape(b, s, h, p)
+    kk = (xk @ params["wk"]).reshape(b, s, h, p)
+    vv = (xv @ params["wv"]).reshape(b, s, h, p)
+    gg = jax.nn.silu(xg @ params["wg"])
+    w = jnp.exp(-jnp.exp(
+        params["w0"].astype(jnp.float32) +
+        (jnp.tanh(xw @ params["w_lora_a"]) @ params["w_lora_b"])
+        .astype(jnp.float32))).reshape(b, s, h, p)
+    u = params["u"]                                               # (H,P)
+
+    s0 = jnp.zeros((b, h, p, p), jnp.float32) if state is None \
+        else state["S"]
+    # pin heads to the model axis — the scan's stacked backward residuals
+    # replicate otherwise (same failure mode as the mamba scan)
+    s0 = _hint_model_dim(s0, (1,))
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                                  # (B,H,P)
+        kv = k_t[..., :, None] * v_t[..., None, :]                # (B,H,P,P)
+        o = jnp.einsum("bhp,bhpq->bhq", r_t,
+                       S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        S = _hint_model_dim(S, (1,))
+        return S, o
+
+    xs_t = (jnp.moveaxis(rr.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(kk.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(vv.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(w, 1, 0))
+
+    from .layers import OPT
+    chunk = 16
+    if OPT["mamba_recompute"] and state is None and s % chunk == 0 \
+            and s >= 64:
+        # §Perf H2 (applied to rwkv6 too): reverse-mode through the
+        # time scan saves the (B,H,P,P) state per STEP; checkpointing
+        # 16-step chunks keeps one state per chunk and recomputes the
+        # rest in backward — 16× less scan-residual HBM traffic.
+        nc = s // chunk
+        xs_c = jax.tree.map(
+            lambda u: u.reshape(nc, chunk, *u.shape[1:]), xs_t)
+
+        @jax.checkpoint
+        def chunk_step(S, blk):
+            return jax.lax.scan(step, S, blk)
+
+        s_last, ys = jax.lax.scan(chunk_step, s0, xs_c)
+        ys = ys.reshape(s, b, h, p)
+    else:
+        (s_last, ys) = jax.lax.scan(step, s0, xs_t)
+    ys = jnp.moveaxis(ys, 0, 1).reshape(b, s, h * p)
+    ys = group_norm_heads(ys.astype(x.dtype), params["gn_w"],
+                          params["gn_b"], h)
+    out = (ys * gg) @ params["wo"]
+    new_state = None if state is None else {"shift": new_shift, "S": s_last}
+    return out, new_state
+
+
+def init_rwkv_cmix(key, d_model, dims: RWKVDims, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": 0.5 * jnp.ones((d_model,), jnp.float32),
+        "wk": dense_init(ks[0], (d_model, dims.d_ff), dtype),
+        "wv": dense_init(ks[1], (dims.d_ff, d_model), dtype),
+    }
+
+
+def rwkv_cmix(params, x, *, state=None):
+    """Squared-ReLU channel mix with token shift."""
+    b, s, d = x.shape
+    shift_in = jnp.zeros((b, 1, d), x.dtype) if state is None \
+        else state[:, None, :]
+    x_prev = jnp.concatenate([shift_in, x[:, :-1]], axis=1)
+    new_shift = x[:, -1]
+    xk = x + params["mu_k"].astype(x.dtype) * (x_prev - x)
+    kk = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    return kk @ params["wv"], (None if state is None else new_shift)
+
+
+def init_rwkv_state(batch, d_model, dims: RWKVDims, dtype=jnp.bfloat16):
+    return {
+        "tmix": {"shift": jnp.zeros((batch, d_model), dtype),
+                 "S": jnp.zeros((batch, dims.n_heads, dims.head_size,
+                                 dims.head_size), jnp.float32)},
+        "cmix_shift": jnp.zeros((batch, d_model), dtype),
+    }

@@ -1,0 +1,167 @@
+"""Serving: prefill and single-token decode over persistent caches/states.
+
+State layout mirrors the parameter layout: explicit "head" layer states +
+superblock states stacked on a leading ``n_super`` axis, traversed with the
+same ``lax.scan`` as the forward pass (compiled decode HLO contains one
+superblock body).
+
+Per-mixer state:
+  attn  → KV cache (B, Hkv, T, hd), written at ``pos``;
+  mamba → conv window (B, dc−1, di) + SSM state (B, di, ds): O(1) in T;
+  rwkv  → token-shift vector + per-head matrix state: O(1) in T.
+
+``decode_32k`` lowers ``decode_step`` with a T=32768 cache; ``long_500k``
+(T=524288) is only built for sub-quadratic archs (the SSM/hybrid families)
+per DESIGN.md §4 — for jamba the 1-in-8 attention layers keep a full-length
+KV cache (O(T) memory, O(T) per-step reads), the mamba layers carry O(1)
+state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import mamba as M
+from . import rwkv6 as R
+from .model import (ModelConfig, _apply_norm, _run_sublayer, _super_kinds,
+                    encode)
+
+
+def _init_sub_state(cfg: ModelConfig, mix, ffn, batch, max_len, dtype):
+    if mix == "attn":
+        return L.init_cache(batch, cfg.attn_dims, max_len, dtype)
+    if mix == "mamba":
+        return M.init_mamba_state(batch, cfg.mamba_dims, dtype)
+    return R.init_rwkv_state(batch, cfg.d_model, cfg.rwkv_dims, dtype)
+
+
+def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> Dict[str, Any]:
+    state: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.n_head_layers:
+        state["head"] = {
+            str(i): _init_sub_state(cfg, *cfg.layer_kinds(i), batch,
+                                    max_len, dtype)
+            for i in range(cfg.n_head_layers)}
+    kinds = _super_kinds(cfg)
+    one = {f"s{j}": _init_sub_state(cfg, *kinds[j], batch, max_len, dtype)
+           for j in range(len(kinds))}
+    state["blocks"] = jax.tree.map(
+        lambda l: jnp.broadcast_to(l, (cfg.n_super,) + l.shape).copy(), one)
+    if cfg.family == "encdec":
+        hk, hd = cfg.n_kv_heads, cfg.hd
+        ck = jnp.zeros((cfg.n_super, batch, hk, cfg.encoder_seq, hd), dtype)
+        state["cross"] = {f"s{j}": {"k": ck, "v": ck}
+                          for j in range(cfg.super_period)}
+    return state
+
+
+def _block_step(cfg: ModelConfig, bp, x, sub_state, kinds, *, positions,
+                pos, cross_kv=None):
+    """Run one superblock over its sublayers, threading per-sub state."""
+    new_state = {}
+    for j, (mix, ffn) in enumerate(kinds):
+        sp = bp[f"s{j}"] if f"s{j}" in bp else bp
+        ss = sub_state[f"s{j}"] if f"s{j}" in sub_state else sub_state
+        cache = ss if mix == "attn" else None
+        st = ss if mix != "attn" else None
+        ekv = None
+        if cross_kv is not None:
+            ckv = cross_kv[f"s{j}"]
+            ekv = (ckv["k"], ckv["v"])
+        x, ns, _ = _run_sublayer(cfg, sp, x, mix, ffn, positions=positions,
+                                 cache=cache, cache_pos=pos, state=st,
+                                 enc_kv=ekv, causal=True)
+        new_state[f"s{j}"] = ns
+    return x, new_state
+
+
+def serve_forward(cfg: ModelConfig, params, tokens, state,
+                  extras: Dict[str, Any] | None = None):
+    """Shared prefill/decode body. tokens: (B, S_new) at position state.pos.
+
+    Returns (logits_last (B, V), new_state).
+    """
+    extras = extras or {}
+    pos = state["pos"]
+    x = L.embed_lookup(params["tok_embed"], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.family == "vlm" and "patches" in extras:
+        patches = extras["patches"].astype(cfg.jdtype) @ params["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+    b, s, _ = x.shape
+    positions = pos + jnp.arange(s)
+
+    new_state: Dict[str, Any] = {"pos": pos + s}
+
+    cross_state = None
+    if cfg.family == "encdec":
+        if "frames" in extras:  # prefill: run encoder, fill cross K/V
+            enc_out = encode(cfg, params, extras["frames"])
+            cdtype = jax.tree.leaves(state["cross"])[0].dtype
+
+            def cross_kv(bp):
+                out = {}
+                for j in range(cfg.super_period):
+                    p = bp[f"s{j}"]["cross"]
+                    bb, tt, _ = enc_out.shape
+                    hk, hd = cfg.n_kv_heads, cfg.hd
+                    k = (enc_out @ p["wk"]).reshape(bb, tt, hk, hd) \
+                        .transpose(0, 2, 1, 3)
+                    v = (enc_out @ p["wv"]).reshape(bb, tt, hk, hd) \
+                        .transpose(0, 2, 1, 3)
+                    out[f"s{j}"] = {"k": k.astype(cdtype),
+                                    "v": v.astype(cdtype)}
+                return out
+
+            cross_state = jax.lax.map(cross_kv, params["blocks"])
+        else:
+            cross_state = state["cross"]
+        new_state["cross"] = cross_state
+        x = x + jnp.take(params["dec_pos_embed"], positions, axis=0)
+
+    if cfg.n_head_layers:
+        new_state["head"] = {}
+        for i in range(cfg.n_head_layers):
+            kinds = [cfg.layer_kinds(i)]
+            x, ns = _block_step(cfg, params["head"][str(i)], x,
+                                state["head"][str(i)], kinds,
+                                positions=positions, pos=pos)
+            new_state["head"][str(i)] = ns["s0"]
+
+    kinds = _super_kinds(cfg)
+
+    def body(h, xs):
+        if cross_state is not None:
+            bp, ss, ckv = xs
+        else:
+            (bp, ss), ckv = xs, None
+        h, ns = _block_step(cfg, bp, h, ss, kinds, positions=positions,
+                            pos=pos, cross_kv=ckv)
+        return h, ns
+
+    xs = (params["blocks"], state["blocks"], cross_state) \
+        if cross_state is not None else (params["blocks"], state["blocks"])
+    x, scanned_state = jax.lax.scan(body, x, xs)
+    new_state["blocks"] = scanned_state
+
+    x = _apply_norm(cfg, params["final_norm"], x[:, -1:])
+    head = params["tok_embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)[:, 0]
+    if cfg.logits_softcap:
+        logits = jnp.tanh(logits / cfg.logits_softcap) * cfg.logits_softcap
+    return logits, new_state
+
+
+def prefill_step(cfg: ModelConfig, params, tokens, state, extras=None):
+    return serve_forward(cfg, params, tokens, state, extras)
+
+
+def decode_step(cfg: ModelConfig, params, tokens, state, extras=None):
+    """One new token per sequence. tokens: (B, 1)."""
+    return serve_forward(cfg, params, tokens, state, extras)

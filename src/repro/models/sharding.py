@@ -1,0 +1,191 @@
+"""Sharding rules: parameter / batch / serve-state PartitionSpecs.
+
+Scheme (single pod ``(data=16, model=16)``; multi-pod
+``(pod=2, data=16, model=16)``):
+
+- **TP** over ``model``: attention QKV/output columns-rows, MLP hidden,
+  MoE experts (EP — expert dim over ``model``), vocab/lm-head, SSM and
+  RWKV channel dims.
+- **FSDP/ZeRO-3** over ``data``: every TP-sharded weight additionally
+  shards its *other* matrix dimension over ``data``; optimizer state
+  inherits parameter specs (ZeRO). XLA inserts the all-gather on use and
+  reduce-scatter on gradients.
+- **DP** over ``(pod, data)`` for the batch dimension of activations,
+  inputs and serve state.
+
+Every rule is divisibility-sanitized against the actual mesh: an axis
+that does not divide the dimension is dropped (replicated) rather than
+producing a GSPMD error — e.g. whisper's vocab 51865 on a 16-way model
+axis. The sanitizer is also what makes one rule set serve every mesh in
+the fleet (1-device CPU smoke mesh up to the 512-chip dry-run mesh).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .model import ModelConfig, abstract_params
+
+
+def mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh_axis_size(mesh, a) for a in axis]))
+    return mesh.shape[axis] if axis in mesh.shape else 0
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def fsdp_axis(mesh: Mesh) -> Optional[str]:
+    return "data" if "data" in mesh.axis_names else None
+
+
+def _sanitize(spec_axes: Sequence[Any], shape, mesh: Mesh) -> P:
+    out = []
+    for dim, ax in zip(shape, spec_axes):
+        if ax is None:
+            out.append(None)
+            continue
+        size = mesh_axis_size(mesh, ax)
+        out.append(ax if size and dim % size == 0 else None)
+    return P(*out)
+
+
+# rule tables: leaf name → spec template builder.
+# F = fsdp axis placeholder, M = "model".
+_F, _M = "__fsdp__", "model"
+
+_RULES_2D = {
+    # (attention / dense mlp / embeddings)
+    "wq": (_F, _M), "wk": (_F, _M), "wv": (_F, _M), "wg": (_F, _M),
+    "wi": (_F, _M), "wr": (_F, _M),
+    "wo": (_M, _F),
+    # embeddings: vocab over model ONLY. FSDP ('data') on the d dim
+    # collides with batch-over-'data' in the same dot and makes GSPMD
+    # all-gather the activations (gigabytes); the tables are ~1% of
+    # params, so ZeRO-sharding them buys nothing.
+    "tok_embed": (_M, None),
+    "lm_head": (None, _M),
+    "dec_pos_embed": (None, _M),
+    "patch_proj": (None, _M),
+    "router": (None, None),
+    "shared_wi": (_F, _M), "shared_wg": (_F, _M), "shared_wo": (_M, _F),
+    # mamba
+    "in_proj": (_F, _M), "conv_w": (None, _M), "x_proj": (_M, None),
+    "dt_proj": (None, _M), "A_log": (_M, None), "out_proj": (_M, _F),
+    # rwkv
+    "mu_lora_a": (_F, None), "mu_lora_b": (None, _M),
+    "w_lora_a": (_F, None), "w_lora_b": (None, _M),
+    "u": (_M, None), "mu": (None, None),
+}
+
+_RULES_3D = {  # MoE expert-stacked weights (E, ., .)
+    "wi": (_M, _F, None), "wg": (_M, _F, None), "wo": (_M, None, _F),
+}
+
+_RULES_1D = {
+    "conv_b": (_M,), "dt_bias": (_M,), "D": (_M,),
+    "w0": (_M,), "gn_w": (_M,), "gn_b": (_M,),
+}
+
+
+def _leaf_spec(path, leaf, cfg: ModelConfig, mesh: Mesh) -> P:
+    names = [getattr(k, "key", str(k)) for k in path]
+    name = names[-1]
+    fa = fsdp_axis(mesh)
+
+    # stacked leading axes: scanned superblocks / encoder stacks
+    n_stack = 1 if any(n in ("blocks", "encoder") for n in names) else 0
+
+    rank = len(leaf.shape) - n_stack
+    in_moe = "moe" in names
+    tpl = None
+    if rank == 3 and in_moe and name in _RULES_3D:
+        tpl = _RULES_3D[name]
+    elif rank == 2 and name in _RULES_2D:
+        tpl = _RULES_2D[name]
+    elif rank == 1 and name in _RULES_1D:
+        tpl = _RULES_1D[name]
+    if tpl is None:
+        tpl = (None,) * rank
+
+    tpl = tuple(fa if a == _F else a for a in tpl)
+    tpl = (None,) * n_stack + tpl
+    if fa is None:
+        tpl = tuple(None if a == _F else a for a in tpl)
+    return _sanitize(tpl, leaf.shape, mesh)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec pytree matching ``init_params``/``abstract_params``."""
+    ap = abstract_params(cfg)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, cfg, mesh), ap)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh))
+
+
+# ------------------------------------------------------------------ #
+# batch / state specs
+# ------------------------------------------------------------------ #
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch_size: int):
+    dp = dp_axes(mesh) or None
+    bspec = dp if dp and batch_size % mesh_axis_size(mesh, dp) == 0 \
+        else None
+    d = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    if cfg.family == "encdec":
+        d["frames"] = P(bspec, None, None)
+    if cfg.family == "vlm":
+        d["patches"] = P(bspec, None, None)
+    return d
+
+
+def _first_shardable(dims, mesh, axis="model"):
+    """Pick a channel-like dim to shard over ``model``: first or last —
+    never a middle dim (for KV caches the middle dim is the sequence/
+    time axis, which decode writes at a dynamic offset and must stay
+    unsharded)."""
+    size = mesh_axis_size(mesh, axis)
+    candidates = [0, len(dims) - 1] if len(dims) >= 2 else [0]
+    for i in dict.fromkeys(candidates):
+        if size and dims[i] % size == 0 and dims[i] >= size:
+            return i
+    return None
+
+
+def serve_state_specs(cfg: ModelConfig, mesh: Mesh, state):
+    """Specs for the serve-state pytree returned by init_serve_state."""
+    dp = dp_axes(mesh) or None
+
+    def spec(path, leaf):
+        names = [getattr(k, "key", str(k)) for k in path]
+        if names[-1] == "pos":
+            return P()
+        n_stack = 1 if "blocks" in names or "cross" in names else 0
+        shape = leaf.shape[n_stack:]
+        if len(shape) == 0:
+            return P()
+        # batch leading dim over dp; one more dim over model if divisible
+        rest = [None] * (len(shape) - 1)
+        j = _first_shardable(shape[1:], mesh)
+        if j is not None:
+            rest[j] = "model"
+        b = dp if dp and shape[0] % mesh_axis_size(mesh, dp) == 0 else None
+        return P(*((None,) * n_stack + (b,) + tuple(rest)))
+
+    return jax.tree_util.tree_map_with_path(spec, state)
+
+
+def logical_to_sharding(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

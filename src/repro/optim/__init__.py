@@ -1,0 +1,3 @@
+from .adamw import OptConfig, init_opt_state, opt_update, lr_at_step
+
+__all__ = ["OptConfig", "init_opt_state", "opt_update", "lr_at_step"]

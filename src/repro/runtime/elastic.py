@@ -1,0 +1,38 @@
+"""Elastic scaling: restore state onto a different mesh.
+
+Checkpoints hold logical (global) arrays — see ``repro.checkpoint`` — so
+scaling from, say, a (data=16, model=16) pod to (data=8, model=16) after
+losing hosts is: build the new mesh, recompute PartitionSpecs (the rules
+in ``models.sharding`` are mesh-size-aware), and ``device_put`` each
+restored leaf to its new NamedSharding. Nothing in the checkpoint refers
+to device ids or counts.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from ..checkpoint import load_checkpoint
+from ..models.model import ModelConfig
+from ..models.sharding import param_specs
+
+
+def reshard_tree(tree, mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda l, s: jax.device_put(l, NamedSharding(mesh, s)), tree, specs)
+
+
+def load_for_mesh(ckpt_dir: str, template, cfg: ModelConfig, mesh: Mesh,
+                  step=None):
+    """Restore (params, opt_state) checkpoint onto ``mesh`` (any size)."""
+    (params, opt_state), step, meta = load_checkpoint(
+        ckpt_dir, template, step=step)
+    pspecs = param_specs(cfg, mesh)
+    with mesh:
+        params = reshard_tree(params, mesh, pspecs)
+        opt_state = {
+            "m": reshard_tree(opt_state["m"], mesh, pspecs),
+            "v": reshard_tree(opt_state["v"], mesh, pspecs),
+            "step": jax.device_put(opt_state["step"]),
+        }
+    return params, opt_state, step, meta

@@ -1,0 +1,189 @@
+"""The paper's guarantees, as executable properties.
+
+P1  Exact mode (φ=0) equals the brute-force oracle for every aggregate.
+P2  The query confidence interval always contains the exact answer.
+P3  The reported upper error bound is honored: |approx − exact| ≤
+    bound · |approx| (within float tolerance), and bound ≤ φ on return
+    (unless the answer became exact).
+P4  Processing more tiles never widens the confidence interval
+    (monotonicity of partial adaptation).
+P5  Index invariants survive arbitrary query sequences: object
+    conservation, perm is a permutation, per-tile extent containment,
+    metadata soundness (min/max bound every owned object; valid sums
+    exact).
+P6  Approximate evaluation never reads more objects than exact
+    evaluation on the same fresh index.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AQPEngine, IndexConfig
+from repro.core.bounds import PendingTile, QueryAccumulator
+from repro.data import make_synthetic_dataset
+from repro.data.synthetic import exploration_path
+
+AGGS = ["sum", "mean", "min", "max", "count"]
+
+
+def small_engine(n=60_000, seed=5, **kw):
+    ds = make_synthetic_dataset(n=n, seed=seed)
+    cfg = IndexConfig(grid0=(8, 8), min_split_count=64,
+                      init_metadata_attrs=("a0",), **kw)
+    return AQPEngine(ds, cfg)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return small_engine()
+
+
+@pytest.mark.parametrize("agg", AGGS)
+def test_p1_exact_equals_oracle(agg):
+    eng = small_engine(seed=11)
+    wins = exploration_path(eng.dataset, n_queries=5, target_objects=5000)
+    for w in wins:
+        r = eng.query(w, agg, "a0", phi=0.0)
+        truth = eng.oracle(w, agg, "a0")
+        assert r.exact
+        np.testing.assert_allclose(r.value, truth, rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("agg", AGGS)
+@pytest.mark.parametrize("phi", [0.01, 0.05, 0.2])
+def test_p2_p3_bound_guarantees(agg, phi):
+    eng = small_engine(seed=13)
+    wins = exploration_path(eng.dataset, n_queries=8, target_objects=4000)
+    for w in wins:
+        r = eng.query(w, agg, "a0", phi=phi)
+        truth = eng.oracle(w, agg, "a0")
+        if not np.isfinite(truth):
+            continue
+        # P2: CI contains exact
+        assert r.lo - 1e-3 <= truth <= r.hi + 1e-3, (agg, phi, r, truth)
+        # P3: returned bound met the constraint (or exact)
+        assert r.exact or r.bound <= phi + 1e-9
+        # P3: observed error within the reported bound
+        err = abs(r.value - truth)
+        assert err <= r.bound * max(abs(r.value), 1e-12) + 1e-3
+
+
+def test_p4_monotone_interval_narrowing():
+    acc = QueryAccumulator("sum")
+    acc.fold_full(100, 500.0, -3.0, 8.0)
+    rng = np.random.default_rng(0)
+    tiles = []
+    for t in range(20):
+        cnt = int(rng.integers(1, 50))
+        lo, hi = sorted(rng.normal(0, 5, 2))
+        tiles.append(PendingTile(tile_id=t, cnt_q=cnt, vmin=lo, vmax=hi,
+                                 cost=cnt * 2))
+        acc.add_pending(tiles[-1])
+    widths = []
+    _, lo, hi, _ = acc.interval()
+    widths.append(hi - lo)
+    for t in tiles:
+        # fold an arbitrary in-range exact contribution
+        mid = 0.5 * (t.vmin + t.vmax)
+        acc.fold_exact(t.tile_id, t.cnt_q, t.cnt_q * mid, t.vmin, t.vmax)
+        _, lo, hi, _ = acc.interval()
+        widths.append(hi - lo)
+    assert all(w2 <= w1 + 1e-9 for w1, w2 in zip(widths, widths[1:]))
+    assert abs(widths[-1]) < 1e-9  # all processed → exact
+
+
+@settings(max_examples=20, deadline=None)
+@given(cnt=st.integers(1, 1000),
+       vmin=st.floats(-1e4, 1e4, allow_nan=False),
+       width=st.floats(0, 1e4, allow_nan=False))
+def test_p2_tile_ci_property(cnt, vmin, width):
+    """Tile CI [cnt·min, cnt·max] contains any realizable tile sum."""
+    vmax = vmin + width
+    rng = np.random.default_rng(cnt)
+    vals = rng.uniform(vmin, vmax, cnt)
+    p = PendingTile(tile_id=0, cnt_q=cnt, vmin=vmin, vmax=vmax, cost=cnt)
+    lo, hi = p.ci_sum()
+    s = vals.sum()
+    assert lo - 1e-6 * max(1, abs(lo)) <= s <= hi + 1e-6 * max(1, abs(hi))
+
+
+def test_p5_index_invariants_after_workload(engine):
+    wins = exploration_path(engine.dataset, n_queries=10,
+                            target_objects=4000)
+    for i, w in enumerate(wins):
+        phi = [0.0, 0.05, 0.01][i % 3]
+        agg = AGGS[i % len(AGGS)]
+        engine.query(w, agg, "a0", phi=phi)
+    engine.index.check_invariants("a0")
+    assert engine.index.n_active > 64  # adaptation actually happened
+
+
+def test_p5_second_attribute_enrichment(engine):
+    """Querying a non-initialized attribute stays sound (P2) and
+    enriches metadata on demand."""
+    w = exploration_path(engine.dataset, n_queries=1,
+                         target_objects=6000)[0]
+    r = engine.query(w, "mean", "a3", phi=0.05)
+    truth = engine.oracle(w, "mean", "a3")
+    assert r.lo - 1e-3 <= truth <= r.hi + 1e-3
+    engine.index.check_invariants("a3")
+
+
+def test_p6_approx_reads_no_more_than_exact():
+    for agg in ("sum", "mean"):
+        e1 = small_engine(seed=21)
+        e2 = small_engine(seed=21)
+        wins = exploration_path(e1.dataset, n_queries=6,
+                                target_objects=5000)
+        reads_exact = sum(e1.query(w, agg, "a0", phi=0.0).objects_read
+                          for w in wins)
+        reads_aprx = sum(e2.query(w, agg, "a0", phi=0.05).objects_read
+                         for w in wins)
+        assert reads_aprx <= reads_exact
+
+
+def test_capacity_bound_respected():
+    eng = small_engine(seed=31, capacity=100)
+    wins = exploration_path(eng.dataset, n_queries=10, target_objects=5000)
+    for w in wins:
+        eng.query(w, "sum", "a0", phi=0.0)
+    assert eng.index.n_tiles <= 100
+    eng.index.check_invariants("a0")
+
+
+def test_alpha_tradeoff_scores():
+    """α=0 prioritizes cheap tiles; α=1 prioritizes wide CIs."""
+    from repro.core.adapt import score_tiles
+    pend = {
+        0: PendingTile(0, cnt_q=1000, vmin=0.0, vmax=0.1, cost=1000),
+        1: PendingTile(1, cnt_q=2, vmin=-50.0, vmax=50.0, cost=2),
+    }
+    by_width = score_tiles(pend, "sum", alpha=1.0)
+    by_cost = score_tiles(pend, "sum", alpha=0.0)
+    assert by_width[0] == 1 or by_cost[0] == 1  # tiny tile is cheap AND wide?
+    # width of t0 CI: 1000*0.1=100 ; t1: 2*100=200 → α=1 picks t1 first
+    assert by_width[0] == 1
+    # cost: t1 count 2 ≪ t0 1000 → α=0 picks t1 first too (cheapest)
+    assert by_cost[0] == 1
+
+
+def test_eval_time_tracks_objects_read():
+    """The paper's Fig.2 observation: time correlates with reads.
+
+    Uses csv storage so reads carry their true in-situ (parse) cost —
+    with array storage at this scale, per-query wall times are
+    microsecond-noisy and the correlation is meaningless.
+    """
+    ds = make_synthetic_dataset(n=300_000, seed=41, storage="csv")
+    eng = AQPEngine(ds, IndexConfig(grid0=(8, 8), min_split_count=64,
+                                    init_metadata_attrs=("a0",)))
+    wins = exploration_path(eng.dataset, n_queries=15,
+                            target_objects=15_000)
+    reads, times = [], []
+    for w in wins:
+        r = eng.query(w, "mean", "a0", phi=0.0)
+        reads.append(r.objects_read)
+        times.append(r.eval_time_s)
+    if np.std(reads) > 0 and np.std(times) > 0:
+        corr = np.corrcoef(reads, times)[0, 1]
+        assert corr > 0.3, corr

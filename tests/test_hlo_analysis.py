@@ -1,0 +1,103 @@
+"""HLO analyzer: golden checks on a known SPMD program.
+
+The roofline numbers stand on this module, so pin its semantics: exact
+trip-count-corrected matmul FLOPs, loop-invariant-hoisted collectives
+counted once, in-loop collectives multiplied by trip count.
+"""
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import (Analysis, _join_wrapped_lines,
+                                       analyze_hlo, shape_bytes)
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[2,3]") == 24
+    assert shape_bytes("bf16[128]") == 256
+    assert shape_bytes("pred[7]") == 7
+    assert shape_bytes("s32[]") == 4
+    assert shape_bytes("(s32[], bf16[2,2], f32[4])") == 4 + 8 + 16
+    assert shape_bytes("token[]") == 0
+
+
+def test_join_wrapped_and_comments():
+    text = ("ENTRY %main (p: f32[2]) -> f32[2] {\n"
+            "  %w = (s32[], /*index=1*/f32[2],\n"
+            "    f32[4]) while(%t), condition=%c,\n"
+            "    body=%b\n"
+            "}\n")
+    lines = _join_wrapped_lines(text)
+    assert len(lines) == 3
+    assert "body=%b" in lines[1]
+    assert "/*" not in lines[1]
+
+
+GOLDEN = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[8,16], f32[16,32])) -> (s32[], f32[8,16], f32[16,32]) {
+  %p = (s32[], f32[8,16], f32[16,32]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,32]{1,0} get-tuple-element(%p), index=2
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %d = f32[8,32]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,32]{1,0} all-reduce(%d), replica_groups={}, to_apply=%add
+  ROOT %t = (s32[], f32[8,16], f32[16,32]) tuple(%i2, %x, %w)
+}
+
+%cond (p: (s32[], f32[8,16], f32[16,32])) -> pred[] {
+  %p = (s32[], f32[8,16], f32[16,32]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[8,16], w: f32[16,32]) -> f32[8,16] {
+  %x = f32[8,16]{1,0} parameter(0)
+  %w = f32[16,32]{1,0} parameter(1)
+  %wg = f32[16,32]{1,0} all-gather(%w), dimensions={0}
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,16], f32[16,32]) tuple(%zero, %x, %wg)
+  %wl = (s32[], f32[8,16], f32[16,32]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%wl), index=1
+}
+"""
+
+
+def test_golden_loop_accounting():
+    a = analyze_hlo(GOLDEN)
+    # trip count 5 from the condition constant
+    assert a.trip_counts.get("body") == 5
+    # dot: 2*8*32*16 flops × 5 trips
+    assert a.matmul_flops == pytest.approx(2 * 8 * 32 * 16 * 5)
+    # hoisted all-gather counted once (operand 16*32*4 bytes);
+    # in-loop all-reduce ×5 (operand 8*32*4)
+    assert a.collective_by_type["all-gather"] == pytest.approx(16 * 32 * 4)
+    assert a.collective_by_type["all-reduce"] == pytest.approx(
+        8 * 32 * 4 * 5)
+
+
+def test_real_compiled_module_flops():
+    """End-to-end on a freshly compiled scan program (1 device)."""
+    import jax
+    import jax.numpy as jnp
+
+    def f(w, x):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=11)
+        return h.sum()
+
+    w = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 32), jnp.float32)
+    compiled = jax.jit(f).lower(w, x).compile()
+    a = analyze_hlo(compiled.as_text())
+    assert a.matmul_flops == pytest.approx(2 * 4 * 32 * 32 * 11, rel=0.01)

@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests: reduced same-family config, one
+forward/train step + one prefill/decode step on CPU; assert output
+shapes and finiteness (no NaNs)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfgreg
+from repro.models.model import (forward, init_params, loss_fn,
+                                param_count)
+from repro.models.serving import (decode_step, init_serve_state,
+                                  prefill_step)
+
+ARCHS = cfgreg.list_archs()
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    key = jax.random.key(seed)
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab),
+             "labels": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    extras = {}
+    if cfg.family == "encdec":
+        extras["frames"] = jnp.asarray(
+            np.random.default_rng(1).normal(
+                size=(b, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        extras["patches"] = jnp.asarray(
+            np.random.default_rng(2).normal(
+                size=(b, cfg.vision_patches, cfg.vision_d)), jnp.float32)
+    return batch, extras
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = cfgreg.get_smoke(arch)
+    params = init_params(cfg, jax.random.key(0))
+    batch, extras = _batch(cfg)
+    batch.update(extras)
+    loss, metrics = loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    logits = forward(cfg, params, batch, return_aux=False)
+    want_s = batch["tokens"].shape[1] + (
+        cfg.vision_patches if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, want_s, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    # one actual gradient step moves the loss
+    g = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(l.astype(jnp.float32))))
+             for l in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_serve_prefill_decode(arch):
+    cfg = cfgreg.get_smoke(arch)
+    params = init_params(cfg, jax.random.key(0))
+    batch, extras = _batch(cfg)
+    state = init_serve_state(cfg, 2, 32, dtype=jnp.float32)
+    lg, state = prefill_step(cfg, params, batch["tokens"][:, :8], state,
+                             dict(extras))
+    assert lg.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(lg)).all()
+    # decode: one new token per step — modality extras only at prefill
+    for i in range(3):
+        lg, state = decode_step(cfg, params,
+                                batch["tokens"][:, 8 + i:9 + i], state, {})
+        assert np.isfinite(np.asarray(lg)).all()
+    prefix = cfg.vision_patches if cfg.family == "vlm" else 0
+    assert int(state["pos"]) == 11 + prefix
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_matches_prefill(arch):
+    """Teacher-forced decode token-by-token ≈ one-shot prefill logits.
+
+    Run in f32: bf16 gives harmless 1e-2-scale accumulation-order
+    differences between the batched and stepwise paths that would mask a
+    real state-handling bug.
+    """
+    import dataclasses
+    cfg = cfgreg.get_smoke(arch)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    if cfg.name.startswith("deepseek") or cfg.n_experts:
+        pytest.skip("MoE capacity truncation differs between batched "
+                    "prefill and stepwise decode by design")
+    params = init_params(cfg, jax.random.key(0))
+    batch, extras = _batch(cfg, s=9)
+    toks = batch["tokens"]
+
+    st1 = init_serve_state(cfg, 2, 32, dtype=jnp.float32)
+    lg_prefill, _ = prefill_step(cfg, params, toks, st1, dict(extras))
+
+    st2 = init_serve_state(cfg, 2, 32, dtype=jnp.float32)
+    lg_step, st2 = prefill_step(cfg, params, toks[:, :1], st2,
+                                dict(extras))
+    for i in range(1, toks.shape[1]):
+        lg_step, st2 = decode_step(cfg, params, toks[:, i:i + 1], st2, {})
+    np.testing.assert_allclose(np.asarray(lg_step),
+                               np.asarray(lg_prefill), rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_full_configs_param_counts():
+    """Full (not smoke) configs match the published parameter scales."""
+    expect = {
+        "granite-8b": (7e9, 9.5e9),
+        "starcoder2-15b": (14e9, 17e9),
+        "starcoder2-3b": (2.7e9, 3.6e9),
+        "gemma-7b": (7.5e9, 9.5e9),
+        "deepseek-moe-16b": (15e9, 18e9),
+        "dbrx-132b": (120e9, 140e9),
+        "whisper-small": (2.1e8, 3.4e8),
+        "rwkv6-7b": (6e9, 8.5e9),
+        "phi-3-vision-4.2b": (3.6e9, 4.6e9),
+        "jamba-1.5-large-398b": (3.6e11, 4.2e11),
+    }
+    for arch in ARCHS:
+        cfg = cfgreg.get(arch)
+        n = param_count(cfg)
+        lo, hi = expect[cfg.name]
+        assert lo <= n <= hi, (cfg.name, f"{n:.3e}", lo, hi)
+
+
+def test_moe_sharded_matches_local():
+    """shard_map EP dispatch ≡ single-device dispatch (1-device mesh
+    exercises the code path; semantics must match exactly)."""
+    from repro.models import moe as MOE
+    from repro.models.layers import activation_mesh_scope
+    dims = MOE.MoEDims(n_experts=4, top_k=2, d_expert=32, n_shared=1)
+    params = MOE.init_moe(jax.random.key(0), 16, dims, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 8, 16), jnp.float32)
+    out_local, aux_local = MOE._moe_ffn_local(params, x, dims)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # model axis size 1 → moe_ffn falls back to local; force sharded:
+    out_sh, aux_sh = MOE.moe_ffn_sharded(params, x, dims, mesh)
+    np.testing.assert_allclose(np.asarray(out_local), np.asarray(out_sh),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(aux_local), float(aux_sh), rtol=1e-5)
