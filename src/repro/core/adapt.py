@@ -13,6 +13,12 @@ processing cost; the paper's evaluation uses α = 1).
 The selection policy processes tiles in descending score order,
 re-evaluating the query error bound after each processed tile, and stops
 as soon as the bound meets the user constraint φ.
+
+The batched pipeline (``query.evaluate``, ``TileIndex.read_batch``)
+consumes this same order in rounds of ``IndexConfig.batch_k`` tiles —
+one gathered raw-file read + one packed segment kernel per round — and
+applies the identical per-tile stopping rule while folding, so the
+selection semantics (and results) are unchanged; only the cost model is.
 """
 from __future__ import annotations
 

@@ -62,6 +62,8 @@ class QueryResult:
     tiles_partial: int = 0
     tiles_processed: int = 0
     objects_read: int = 0
+    read_calls: int = 0        # raw-file read invocations (gathered = 1/round)
+    batch_rounds: int = 0      # batched refinement rounds (0 ⇒ sequential)
     eval_time_s: float = 0.0
 
 

@@ -40,22 +40,33 @@ class EngineTrace:
 
 class AQPEngine:
     def __init__(self, dataset: RawDataset,
-                 config: IndexConfig = IndexConfig(),
+                 config: Optional[IndexConfig] = None,
                  alpha: float = 1.0):
+        # config=None → fresh IndexConfig per engine (a dataclass default
+        # instance would be shared — and mutated — across engines)
         self.dataset = dataset
-        self.index = TileIndex(dataset, config)
+        self.index = TileIndex(dataset,
+                               IndexConfig() if config is None else config)
         self.alpha = alpha
         self.trace = EngineTrace()
 
     def query(self, window: Tuple[float, float, float, float], agg: str,
               attr: str, phi: float = 0.0,
-              alpha: Optional[float] = None) -> QueryResult:
+              alpha: Optional[float] = None,
+              batch_k: Optional[int] = None,
+              sequential: bool = False) -> QueryResult:
         """Evaluate one window-aggregate query.
 
         phi: relative accuracy constraint (0 ⇒ exact answering).
+        batch_k: tiles refined per batched adaptation round (one gathered
+          raw-file read + one packed kernel pass per round); defaults to
+          ``IndexConfig.batch_k``.
+        sequential: use the per-tile reference refinement path (one read +
+          one kernel per tile) instead of the batched pipeline.
         """
         r = query_mod.evaluate(self.index, window, agg, attr, phi=phi,
-                               alpha=self.alpha if alpha is None else alpha)
+                               alpha=self.alpha if alpha is None else alpha,
+                               batch_k=batch_k, sequential=sequential)
         self.trace.results.append(r)
         return r
 

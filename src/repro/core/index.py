@@ -15,11 +15,21 @@ bounded index, and is exactly the layout the Pallas data plane wants
 (sequential HBM streams per tile).
 
 Metadata soundness rule: ``min/max`` for a tile are ALWAYS present and
-always sound (children inherit the parent's bounds until refined; the root
-fallback is the global attribute min/max from the init pass). ``sum`` is
-present only when marked valid (``meta_valid``); a fully-contained tile
-whose sum is not valid for the queried attribute is handled as *pending
-enrichment* by the query layer — bounded, never wrong.
+always sound (children inherit the parent's bounds until refined, and
+split-child extremes from the float32 kernels are clamped into the
+parent's sound interval; the root fallback is the global attribute
+min/max from the init pass). ``sum`` is present only when marked valid
+(``meta_valid``); a fully-contained tile whose sum is not valid for the
+queried attribute is handled as *pending enrichment* by the query layer —
+bounded, never wrong.
+
+Refinement runs in two flavors with identical semantics: the sequential
+reference path (:meth:`TileIndex.process` — one raw-file read + one
+kernel per tile) and the batched pipeline
+(:meth:`TileIndex.read_batch`/:meth:`TileIndex.apply_batch` — per round
+of ``IndexConfig.batch_k`` tiles, one gathered read, one packed
+``segment_window_agg``/``segment_bin_agg`` kernel, and one vectorized SoA
+append of all children).
 """
 from __future__ import annotations
 
@@ -30,6 +40,7 @@ import numpy as np
 
 from ..data.rawfile import RawDataset
 from ..kernels import ops
+from ..kernels import ref as ref_mod
 from . import geometry
 from .geometry import DISJOINT, PARTIAL, FULL
 
@@ -41,6 +52,7 @@ class IndexConfig:
     capacity: int = 65536                 # max tiles (resource-aware bound)
     min_split_count: int = 256            # I/O-cost split factor (paper §2.2)
     max_level: int = 12
+    batch_k: int = 8                      # tiles refined per batched round
     init_metadata_attrs: Sequence[str] = ()   # metadata computed at init pass
     backend: Optional[str] = None             # kernels backend override
 
@@ -50,18 +62,29 @@ class AdaptStats:
     tiles_split: int = 0
     tiles_enriched: int = 0
     objects_reorganized: int = 0
+    kernel_calls: int = 0      # device/mirror kernel invocations (ops.*)
+    batch_rounds: int = 0      # gathered-read refinement rounds
 
     def snapshot(self):
         return dataclasses.replace(self)
 
     def delta(self, before):
-        return AdaptStats(self.tiles_split - before.tiles_split,
-                          self.tiles_enriched - before.tiles_enriched,
-                          self.objects_reorganized - before.objects_reorganized)
+        return AdaptStats(**{
+            f.name: getattr(self, f.name) - getattr(before, f.name)
+            for f in dataclasses.fields(self)})
+
+
+# an all-covering closed window: segment aggregation over it yields the
+# full-segment (enrichment) statistics
+EVERYWHERE = (-np.inf, -np.inf, np.inf, np.inf)
 
 
 class TileIndex:
-    def __init__(self, dataset: RawDataset, config: IndexConfig = IndexConfig()):
+    def __init__(self, dataset: RawDataset,
+                 config: Optional[IndexConfig] = None):
+        # config default must be constructed per instance — a dataclass
+        # default instance would be shared (and mutable) across engines
+        config = IndexConfig() if config is None else config
         self.ds = dataset
         self.cfg = config
         self.adapt_stats = AdaptStats()
@@ -165,6 +188,35 @@ class TileIndex:
         m = ops.window_mask_np(self.x_s[o:o + c], self.y_s[o:o + c], window)
         return int(m.sum())
 
+    def _gather_segments(self, tile_ids: np.ndarray):
+        """Gather indices + boundaries of the tiles' concatenated segments.
+
+        Returns ``(idx, boundaries)``: ``idx`` (int64, (L,)) indexes the
+        perm-order arrays so that ``x_s[idx]`` is the concatenation of the
+        tiles' segments; ``boundaries`` ((S+1,)) delimits segment s as
+        ``[boundaries[s], boundaries[s+1])`` within the concatenation.
+        """
+        o = self.offset[tile_ids]
+        c = self.count[tile_ids]
+        boundaries = np.concatenate([[0], np.cumsum(c)]).astype(np.int64)
+        idx = np.repeat(o - boundaries[:-1], c) + np.arange(boundaries[-1],
+                                                            dtype=np.int64)
+        return idx, boundaries
+
+    def count_in_window_batch(self, tile_ids, window) -> np.ndarray:
+        """Vectorized ``count(t ∩ Q)`` for many tiles — zero file I/O.
+
+        One gathered window mask over the concatenated segments replaces
+        the per-tile ``count_in_window`` loop at query classification time.
+        """
+        tile_ids = np.asarray(tile_ids, np.int64)
+        if tile_ids.size == 0:
+            return np.zeros(0, np.int64)
+        idx, bounds = self._gather_segments(tile_ids)
+        m = ops.window_mask_np(self.x_s[idx], self.y_s[idx], window)
+        cs = np.concatenate([[0], np.cumsum(m)])
+        return (cs[bounds[1:]] - cs[bounds[:-1]]).astype(np.int64)
+
     # ------------------------------------------------------------------ #
     # processing (the accounted, expensive path)
     # ------------------------------------------------------------------ #
@@ -233,6 +285,7 @@ class TileIndex:
         # (data plane — Pallas bin_agg kernel on TPU)
         agg = np.asarray(ops.bin_agg(xs, ys, vals, bbox, gx=gx, gy=gy,
                                      backend=self._backend))
+        self.adapt_stats.kernel_calls += 1
 
         order = np.argsort(cell, kind="stable")
         # local reorganization of the parent's segment
@@ -257,11 +310,17 @@ class TileIndex:
         for a in self.meta_sum:
             if a == attr:
                 nonzero = counts > 0
+                # the parent's bounds are exact (just enriched) and sound;
+                # the kernel's float32 child extremes may round past the
+                # true f64 extremes — clamp children into the parent's
+                # interval so metadata soundness holds exactly
+                pmn = self.meta_min[a][tile_id]
+                pmx = self.meta_max[a][tile_id]
                 self.meta_sum[a][sl] = agg[:, 1].astype(np.float64)
-                self.meta_min[a][sl] = np.where(nonzero, agg[:, 2],
-                                                self.meta_min[a][tile_id])
-                self.meta_max[a][sl] = np.where(nonzero, agg[:, 3],
-                                                self.meta_max[a][tile_id])
+                self.meta_min[a][sl] = np.where(
+                    nonzero, np.maximum(agg[:, 2], pmn), pmn)
+                self.meta_max[a][sl] = np.where(
+                    nonzero, np.minimum(agg[:, 3], pmx), pmx)
                 self.meta_valid[a][sl] = True
                 # float32 kernel sums → recompute exact f64 sums per child
                 for j in range(k):
@@ -274,6 +333,198 @@ class TileIndex:
                 self.meta_max[a][sl] = self.meta_max[a][tile_id]
                 self.meta_valid[a][sl] = False
         self.adapt_stats.tiles_split += 1
+
+    # ------------------------------------------------------------------ #
+    # batched processing (the amortized, crack-in-batch path)
+    # ------------------------------------------------------------------ #
+    def read_batch(self, tile_ids, window, attr: str):
+        """Phase 1 of a batched refinement round: amortized read + kernel.
+
+        ONE gathered ``read_values`` over the tiles' concatenated segments
+        and ONE packed ``segment_window_agg`` kernel give every tile's
+        exact in-window contribution — instead of one raw-file read and
+        one kernel invocation per tile.
+
+        Returns ``(contribs, payload)``: ``contribs`` is a list of
+        ``(cnt_q, sum_q, min_q, max_q)`` aligned with ``tile_ids``;
+        ``payload`` carries the gathered segments for
+        :meth:`apply_batch`. No index state is mutated — the caller folds
+        contributions under its stopping rule first, then applies
+        refinement to exactly the tiles it folded, which keeps the index
+        evolution bit-for-bit identical to the sequential reference path.
+
+        Precision contract: under the default host backend ("np") the
+        contributions are float64 with the same accumulation order as
+        :meth:`process` — bit-for-bit the sequential reference. A device
+        backend override ("jnp"/"pallas" — the TPU deploy data plane)
+        computes them in float32 and matches to f32 tolerance only.
+        """
+        self.ensure_attr(attr)
+        tile_ids = np.asarray(tile_ids, np.int64)
+        idx, bounds = self._gather_segments(tile_ids)
+        rows = self.perm[idx]
+        vals = self.ds.read_values(attr, rows)     # ← ONE accounted read
+        xs, ys = self.x_s[idx], self.y_s[idx]
+        self.adapt_stats.batch_rounds += 1
+
+        # exact in-window contributions: one packed kernel over the batch
+        contrib = np.asarray(ops.segment_window_agg(
+            xs, ys, vals, bounds, window, backend=self._backend))
+        self.adapt_stats.kernel_calls += 1
+        contribs = [
+            (int(contrib[s, 0]), float(contrib[s, 1]),
+             float(contrib[s, 2]), float(contrib[s, 3]))
+            if contrib[s, 0] else (0, 0.0, np.inf, -np.inf)
+            for s in range(len(tile_ids))]
+        payload = {"tile_ids": tile_ids, "idx": idx, "bounds": bounds,
+                   "xs": xs, "ys": ys, "vals": vals, "attr": attr}
+        return contribs, payload
+
+    def apply_batch(self, payload, n_used: int, split_flags):
+        """Phase 2: enrich + split the round's first ``n_used`` tiles.
+
+        Tiles past ``n_used`` (read speculatively but never folded by the
+        caller's stopping rule) are left untouched, so the index evolves
+        exactly as under sequential processing. ``split_flags[i]``
+        requests a split for tile i of the prefix (subject to
+        :meth:`can_split`, evaluated in order with in-round capacity
+        growth — the same decisions the sequential path makes). All
+        children of all split tiles are appended in one SoA update.
+        """
+        if n_used == 0:
+            return
+        attr = payload["attr"]
+        tile_ids = payload["tile_ids"][:n_used]
+        bounds = payload["bounds"][:n_used + 1]
+        end = bounds[-1]
+        idx = payload["idx"][:end]
+        xs, ys = payload["xs"][:end], payload["ys"][:end]
+        vals = payload["vals"][:end]
+        counts = np.diff(bounds)
+
+        # tile-level enrichment — control-plane metadata, always computed
+        # on host in f64 (valid sums must stay f64-exact; see ref.py)
+        full = ref_mod.segment_window_agg_np(xs, ys, vals, bounds,
+                                             EVERYWHERE)
+        nz = counts > 0
+        self.meta_sum[attr][tile_ids[nz]] = full[nz, 1]
+        self.meta_min[attr][tile_ids[nz]] = full[nz, 2]
+        self.meta_max[attr][tile_ids[nz]] = full[nz, 3]
+        self.meta_valid[attr][tile_ids[nz]] = True
+
+        # split decisions in order, accounting in-round capacity growth
+        gx, gy = self.cfg.split_grid
+        k = gx * gy
+        nt = self.n_tiles
+        will_split = np.zeros(len(tile_ids), bool)
+        for i, t in enumerate(tile_ids):
+            if not (split_flags[i] and counts[i] > 0):
+                continue
+            if (self.count[t] >= self.cfg.min_split_count
+                    and self.level[t] < self.cfg.max_level
+                    and nt + k <= self.cfg.capacity):
+                will_split[i] = True
+                nt += k
+        self.adapt_stats.tiles_enriched += int(nz.sum() - will_split.sum())
+
+        if will_split.any():
+            # boolean indexing copies, and xs/ys are gathered copies to
+            # begin with — _split_batch may reorganize x_s/y_s in place
+            # without corrupting them
+            keep = np.repeat(will_split, counts)
+            self._split_batch(tile_ids[will_split], idx[keep], xs[keep],
+                              ys[keep], vals[keep], attr)
+
+    def process_batch(self, tile_ids, window, attr: str, split_flags):
+        """Read + fully apply one batch (convenience one-shot wrapper)."""
+        contribs, payload = self.read_batch(tile_ids, window, attr)
+        self.apply_batch(payload, len(payload["tile_ids"]), split_flags)
+        return contribs
+
+    def _split_batch(self, parents, idx, xs, ys, vals, attr: str):
+        """Vectorized multi-tile split: every parent's segment is binned
+        against its own bbox, reorganized in place, and ALL children are
+        appended in one SoA update. ``idx/xs/ys/vals`` cover the parents'
+        concatenated segments (pristine copies, concat order).
+        """
+        gx, gy = self.cfg.split_grid
+        k = gx * gy
+        s_n = len(parents)
+        off = self.offset[parents]
+        cnt = self.count[parents]
+        bboxes = self.bbox[parents]
+        bounds = np.concatenate([[0], np.cumsum(cnt)]).astype(np.int64)
+        sid = np.repeat(np.arange(s_n), cnt)
+
+        # per-element cell ids under each parent's own ownership rule
+        cw = np.maximum((bboxes[:, 2] - bboxes[:, 0]) / gx, 1e-30)
+        ch = np.maximum((bboxes[:, 3] - bboxes[:, 1]) / gy, 1e-30)
+        cx = np.clip(np.floor((xs - bboxes[sid, 0]) / cw[sid]).astype(
+            np.int64), 0, gx - 1)
+        cy = np.clip(np.floor((ys - bboxes[sid, 1]) / ch[sid]).astype(
+            np.int64), 0, gy - 1)
+        key = sid * k + cy * gx + cx
+        counts_sk = np.bincount(key, minlength=s_n * k).reshape(s_n, k)
+        child_off = off[:, None] + np.concatenate(
+            [np.zeros((s_n, 1), np.int64),
+             np.cumsum(counts_sk, axis=1)[:, :-1]], axis=1)
+
+        # child metadata for the processed attribute: one packed kernel
+        agg = np.asarray(ops.segment_bin_agg(
+            xs, ys, vals, bounds, bboxes, gx=gx, gy=gy,
+            backend=self._backend))
+        self.adapt_stats.kernel_calls += 1
+
+        # one global stable argsort reorganizes every parent's segment
+        # (keys are segment-major, so the permutation never crosses
+        # segment boundaries — identical to the per-tile counting sort)
+        order = np.argsort(key, kind="stable")
+        self.perm[idx] = self.perm[idx][order]
+        self.x_s[idx] = xs[order]
+        self.y_s[idx] = ys[order]
+        vals_sorted = vals[order]
+        self.adapt_stats.objects_reorganized += int(cnt.sum())
+
+        # one SoA append for all children of all parents
+        t0 = self.n_tiles
+        sl = slice(t0, t0 + s_n * k)
+        self.bbox[sl] = np.concatenate(
+            [geometry.subtile_bboxes(b, gx, gy) for b in bboxes])
+        self.offset[sl] = child_off.reshape(-1)
+        self.count[sl] = counts_sk.reshape(-1)
+        self.active[sl] = True
+        self.level[sl] = np.repeat(self.level[parents] + 1, k)
+        self.parent[sl] = np.repeat(parents, k)
+        self.n_tiles += s_n * k
+        self.active[parents] = False
+
+        rel_off = child_off - off[:, None] + bounds[:-1, None]
+        for a in self.meta_sum:
+            if a == attr:
+                nonzero = counts_sk > 0
+                pmn = self.meta_min[a][parents][:, None]
+                pmx = self.meta_max[a][parents][:, None]
+                # clamp float32 kernel extremes into the parents' sound
+                # intervals (same rule as the sequential _split)
+                self.meta_min[a][sl] = np.where(
+                    nonzero, np.maximum(agg[:, :, 2], pmn), pmn).reshape(-1)
+                self.meta_max[a][sl] = np.where(
+                    nonzero, np.minimum(agg[:, :, 3], pmx), pmx).reshape(-1)
+                self.meta_valid[a][sl] = True
+                # float32 kernel sums → exact f64 sums per child
+                flat_rel = rel_off.reshape(-1)
+                flat_cnt = counts_sk.reshape(-1)
+                sums = np.empty(s_n * k, np.float64)
+                for j in range(s_n * k):
+                    sums[j] = vals_sorted[flat_rel[j]:flat_rel[j] +
+                                          flat_cnt[j]].sum(dtype=np.float64)
+                self.meta_sum[a][sl] = sums
+            else:
+                # inherit sound min/max bounds; sum unknown for children
+                self.meta_min[a][sl] = np.repeat(self.meta_min[a][parents], k)
+                self.meta_max[a][sl] = np.repeat(self.meta_max[a][parents], k)
+                self.meta_valid[a][sl] = False
+        self.adapt_stats.tiles_split += s_n
 
     # ------------------------------------------------------------------ #
     # invariant checking (used by property tests)
@@ -296,8 +547,11 @@ class TileIndex:
                 o, c = self.offset[t], self.count[t]
                 seg = col[self.perm[o:o + c]]
                 if c:
-                    assert seg.min() >= self.meta_min[attr][t] - 1e-4
-                    assert seg.max() <= self.meta_max[attr][t] + 1e-4
+                    # exact: values are f32 end-to-end, min/max reductions
+                    # do not round, and child bounds are clamped into the
+                    # parent's sound interval at split time
+                    assert seg.min() >= self.meta_min[attr][t]
+                    assert seg.max() <= self.meta_max[attr][t]
                 if self.meta_valid[attr][t] and c:
                     np.testing.assert_allclose(
                         seg.sum(dtype=np.float64), self.meta_sum[attr][t],

@@ -11,15 +11,31 @@ Evaluation of a query (window Q, aggregate, attribute A, constraint φ):
 2. fully-contained tiles with valid metadata contribute exactly — zero
    file I/O; fully-contained tiles *without* valid sum metadata for A are
    queued as pending-enrichment (bounded by their sound min/max);
-3. partially-contained tiles: ``count(t∩Q)`` from the axis index (no file
-   I/O); tiles with zero selected objects are skipped; the rest become
-   pending with tile CI ``[cnt·min, cnt·max]``;
-4. if the relative upper error bound exceeds φ, process pending tiles in
-   score order (``adapt.score_tiles``) — each processing reads the tile's
-   objects from the raw file, splits it (min-split-count / capacity
-   permitting), stores sub-tile metadata, and replaces the tile's interval
-   contribution with its exact one — until the bound ≤ φ or no tiles
-   remain (exact).
+3. partially-contained tiles: ``count(t∩Q)`` for ALL partial tiles comes
+   from ONE vectorized pass over the axis index
+   (``TileIndex.count_in_window_batch`` — no file I/O); tiles with zero
+   selected objects are skipped; the rest become pending with tile CI
+   ``[cnt·min, cnt·max]``;
+4. if the relative upper error bound exceeds φ, refine in **batched
+   rounds**: take the next chunk of the score order
+   (``adapt.score_tiles``) — up to ``batch_k`` tiles, sized for sum/mean
+   by a *certain* lower bound on the folds still needed
+   (``_min_folds_needed``; zero speculative rows) and by a geometric
+   ramp otherwise — issue one gathered raw-file read over their
+   concatenated segments and one packed ``segment_window_agg`` kernel
+   for their exact contributions (``TileIndex.read_batch``), then fold
+   the contributions tile-by-tile in score order, stopping as soon as
+   the bound ≤ φ. Refinement side effects (enrichment, splits via one
+   packed ``segment_bin_agg`` + one vectorized SoA child append) apply
+   to exactly the folded prefix (``TileIndex.apply_batch``), so the
+   stopping rule, decision sequence, f64 arithmetic, AND the index
+   evolution are identical to the sequential reference — batching
+   changes the cost model, not the semantics.
+
+``sequential=True`` selects the per-tile reference path (one read + one
+kernel per tile) that the batched pipeline must match bit-for-bit on
+counts and to f64 tolerance on sums; ``batch_k`` (default
+``IndexConfig.batch_k``) sets the round size.
 """
 from __future__ import annotations
 
@@ -32,12 +48,8 @@ from .bounds import PendingTile, QueryAccumulator, QueryResult
 from .index import TileIndex
 
 
-def evaluate(index: TileIndex, window, agg: str, attr: str,
-             phi: float = 0.0, alpha: float = 1.0) -> QueryResult:
-    t_start = time.perf_counter()
-    io_before = index.ds.stats.snapshot()
-    index.ensure_attr(attr)
-
+def _build_accumulator(index: TileIndex, window, agg: str, attr: str):
+    """Steps 1–3: classification + pending-set construction (no file I/O)."""
     full_ids, partial_ids = index.classify(window)
     acc = QueryAccumulator(agg)
 
@@ -57,35 +69,115 @@ def evaluate(index: TileIndex, window, agg: str, attr: str,
                 vmin=float(index.meta_min[attr][t]),
                 vmax=float(index.meta_max[attr][t]), cost=c))
 
+    # one vectorized axis-index pass for every partial tile's count(t∩Q)
+    cnt_qs = index.count_in_window_batch(partial_ids, window)
     n_partial = 0
-    for t in partial_ids:
-        cnt_q = index.count_in_window(int(t), window)
+    for t, cnt_q in zip(partial_ids, cnt_qs):
         if cnt_q == 0:
             continue
         n_partial += 1
         acc.add_pending(PendingTile(
-            tile_id=int(t), cnt_q=cnt_q,
+            tile_id=int(t), cnt_q=int(cnt_q),
             vmin=float(index.meta_min[attr][t]),
             vmax=float(index.meta_max[attr][t]),
             cost=int(index.count[t])))
+    return acc, full_ids, n_full, n_partial
+
+
+def _min_folds_needed(acc, remaining, agg: str, phi: float,
+                      lo: float, hi: float) -> int:
+    """Optimistic lower bound on how many more folds reach bound ≤ φ.
+
+    For sum/mean the deviation after folding the first j tiles of
+    ``remaining`` is deterministic — half the CI width of the still-pending
+    tiles (folded tiles contribute exactly) — and the approximate value
+    always stays inside the current [lo, hi]. Hence
+    ``bound_j ≥ W_j / (2·max(|lo|, |hi|))`` whatever the raw file holds,
+    and the sequential stopping rule cannot fire before that many folds:
+    a batched round of this size reads ZERO speculative rows.
+    """
+    from .bounds import EPS, tile_ci_width
+    w = np.array([tile_ci_width(acc.pending[t], agg) for t in remaining],
+                 np.float64)
+    if agg == "mean":
+        w = w / max(acc.total_count(), 1)
+    v_max = max(abs(lo), abs(hi), EPS)
+    suffix = w.sum() - np.cumsum(w)          # pending width after j folds
+    hit = np.flatnonzero(suffix <= 2.0 * phi * v_max)
+    j = int(hit[0]) + 1 if hit.size else len(remaining)
+    return max(1, j)
+
+
+def evaluate(index: TileIndex, window, agg: str, attr: str,
+             phi: float = 0.0, alpha: float = 1.0, *,
+             batch_k: int = None, sequential: bool = False) -> QueryResult:
+    t_start = time.perf_counter()
+    io_before = index.ds.stats.snapshot()
+    rounds_before = index.adapt_stats.batch_rounds
+    index.ensure_attr(attr)
+
+    acc, full_ids, n_full, n_partial = _build_accumulator(
+        index, window, agg, attr)
 
     value, lo, hi, bound = acc.interval()
     processed = 0
     if acc.pending and (phi <= 0.0 or bound > phi):
         order = adapt.score_tiles(acc.pending, agg, alpha)
         full_set = set(int(i) for i in full_ids)
-        for t in order:
-            if phi > 0.0 and bound <= phi:
-                break
-            # fully-contained pending tiles are enriched, not split
-            # (splitting them brings no future pruning benefit — their
-            # metadata already answers any containing query exactly)
-            do_split = t not in full_set
-            cnt_q, s_q, mn_q, mx_q = index.process(t, window, attr,
-                                                   split=do_split)
-            acc.fold_exact(t, cnt_q, s_q, mn_q, mx_q)
-            processed += 1
-            value, lo, hi, bound = acc.interval()
+        if sequential:
+            for t in order:
+                if phi > 0.0 and bound <= phi:
+                    break
+                # fully-contained pending tiles are enriched, not split
+                # (splitting them brings no future pruning benefit — their
+                # metadata already answers any containing query exactly)
+                do_split = t not in full_set
+                cnt_q, s_q, mn_q, mx_q = index.process(t, window, attr,
+                                                       split=do_split)
+                acc.fold_exact(t, cnt_q, s_q, mn_q, mx_q)
+                processed += 1
+                value, lo, hi, bound = acc.interval()
+        else:
+            from ..kernels.segment_agg import MAX_SEGMENTS, MAX_UNROLL
+            gx, gy = index.cfg.split_grid
+            k = index.cfg.batch_k if batch_k is None else int(batch_k)
+            # packed kernels unroll statically over segments (and cells in
+            # the split kernel) — cap the round size at their limits
+            k = max(1, min(k, MAX_SEGMENTS, MAX_UNROLL // (gx * gy)))
+            # Round sizing under φ>0: the stopping rule can fire mid-round
+            # and rows read past it are speculative. For sum/mean the
+            # needed fold count has a certain lower bound
+            # (_min_folds_needed) — rounds sized by it read no speculative
+            # rows at all; for min/max a geometric ramp (1, 2, 4, …, k)
+            # bounds the overshoot by the last round. φ=0 processes every
+            # pending tile anyway → full-size rounds, zero waste.
+            predictive = phi > 0.0 and agg in ("sum", "mean")
+            size = 1 if phi > 0.0 else k
+            pos, stop = 0, False
+            while (pos < len(order) and not stop
+                   and not (phi > 0.0 and bound <= phi)):
+                if predictive:
+                    size = _min_folds_needed(acc, order[pos:], agg, phi,
+                                             lo, hi)
+                batch = order[pos:pos + min(size, k)]
+                pos += len(batch)
+                if not predictive:
+                    size = min(size * 2, k)   # geometric ramp (min/max)
+                contribs, payload = index.read_batch(batch, window, attr)
+                n_used = 0
+                for t, (cnt_q, s_q, mn_q, mx_q) in zip(batch, contribs):
+                    if phi > 0.0 and bound <= phi:
+                        stop = True
+                        break
+                    acc.fold_exact(t, cnt_q, s_q, mn_q, mx_q)
+                    n_used += 1
+                    processed += 1
+                    value, lo, hi, bound = acc.interval()
+                # refinement applies to exactly the folded prefix, so the
+                # index evolves bit-for-bit as under sequential processing
+                index.apply_batch(payload, n_used,
+                                  [t not in full_set
+                                   for t in batch[:n_used]])
 
     io_delta = index.ds.stats.delta(io_before)
     return QueryResult(
@@ -93,6 +185,8 @@ def evaluate(index: TileIndex, window, agg: str, attr: str,
         bound=float(bound), exact=not acc.pending,
         tiles_full=n_full, tiles_partial=n_partial,
         tiles_processed=processed, objects_read=io_delta.rows_read,
+        read_calls=io_delta.read_calls,
+        batch_rounds=index.adapt_stats.batch_rounds - rounds_before,
         eval_time_s=time.perf_counter() - t_start)
 
 

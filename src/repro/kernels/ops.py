@@ -27,6 +27,7 @@ import numpy as np
 from . import ref
 from .window_agg import window_agg_pallas, LANES, DEFAULT_BLOCK_ROWS
 from .bin_agg import bin_agg_pallas
+from .segment_agg import segment_window_agg_pallas, segment_bin_agg_pallas
 
 
 def default_backend() -> str:
@@ -165,6 +166,98 @@ def bin_agg(xs, ys, vals, bbox, *, gx, gy, n=None, backend=None,
                          gx, gy, backend, interpret)
 
 
+def _bucket_pad(*arrays, n):
+    """Pad flat host arrays to a power-of-two bucket to bound recompiles."""
+    cap = max(1024, 1 << (max(int(n), 1) - 1).bit_length())
+    out = []
+    for a in arrays:
+        buf = np.zeros(cap, np.float32)
+        buf[:n] = np.asarray(a, np.float32)[:n]
+        out.append(buf)
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("n_seg", "backend", "interpret"))
+def _segment_window_agg_flat(xs, ys, vals, sids, window, n, n_seg, backend,
+                             interpret):
+    if backend == "jnp":
+        valid = jnp.arange(xs.shape[0]) < n
+        return ref.segment_window_agg_ref(xs, ys, vals, sids, window, valid,
+                                          n_seg)
+    xs2, ys2, vs2, sid2, valid2 = pack2d(xs, ys, vals, sids, n=xs.shape[0])
+    valid2 = valid2 * (jnp.arange(valid2.size).reshape(valid2.shape) <
+                       n).astype(jnp.int8)
+    return segment_window_agg_pallas(xs2, ys2, vs2, sid2, valid2, window,
+                                     n_seg=n_seg, interpret=interpret)
+
+
+def segment_window_agg(xs, ys, vals, boundaries, window, *, backend=None,
+                       interpret=True):
+    """Per-segment (count, sum, min, max) inside the closed ``window``.
+
+    The batched-adaptation primitive: ``xs/ys/vals`` are the CONCATENATED
+    object segments of one refinement batch; ``boundaries`` (int, (S+1,))
+    delimits segment s as ``[boundaries[s], boundaries[s+1])``. One call
+    replaces S per-tile ``window_agg`` invocations. An all-covering window
+    (±inf edges) yields full-segment aggregates (tile enrichment).
+
+    The "np" backend returns float64 with numpy pairwise summation per
+    segment slice — bit-for-bit the sequential host path; "jnp"/"pallas"
+    return float32 from one packed device kernel.
+    """
+    backend = backend or default_backend()
+    boundaries = np.asarray(boundaries, np.int64)
+    if backend == "np":
+        return ref.segment_window_agg_np(xs, ys, vals, boundaries, window)
+    n_seg = len(boundaries) - 1
+    n = int(boundaries[-1])
+    sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
+    xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
+    return _segment_window_agg_flat(
+        jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(vals),
+        jnp.asarray(sids), jnp.asarray(window, jnp.float32),
+        jnp.asarray(n, jnp.int32), n_seg, backend, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_seg", "gx", "gy", "backend",
+                                             "interpret"))
+def _segment_bin_agg_flat(xs, ys, vals, sids, bboxes, n, n_seg, gx, gy,
+                          backend, interpret):
+    if backend == "jnp":
+        valid = jnp.arange(xs.shape[0]) < n
+        return ref.segment_bin_agg_ref(xs, ys, vals, sids, bboxes, (gx, gy),
+                                       valid, n_seg)
+    xs2, ys2, vs2, sid2, valid2 = pack2d(xs, ys, vals, sids, n=xs.shape[0])
+    valid2 = valid2 * (jnp.arange(valid2.size).reshape(valid2.shape) <
+                       n).astype(jnp.int8)
+    return segment_bin_agg_pallas(xs2, ys2, vs2, sid2, valid2, bboxes,
+                                  n_seg=n_seg, gx=gx, gy=gy,
+                                  interpret=interpret)
+
+
+def segment_bin_agg(xs, ys, vals, boundaries, bboxes, *, gx, gy,
+                    backend=None, interpret=True):
+    """Per-segment, per-cell (count, sum, min, max): one packed call that
+    splits every segment s of the concatenated stream by its own
+    ``bboxes[s]`` into ``gx × gy`` cells — the multi-tile-split metadata
+    kernel. Returns ``(S, gx*gy, 4)``; cell id = cy*gx + cx. Backend
+    semantics as in :func:`segment_window_agg`.
+    """
+    backend = backend or default_backend()
+    boundaries = np.asarray(boundaries, np.int64)
+    if backend == "np":
+        return ref.segment_bin_agg_np(xs, ys, vals, boundaries, bboxes,
+                                      gx, gy)
+    n_seg = len(boundaries) - 1
+    n = int(boundaries[-1])
+    sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
+    xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
+    return _segment_bin_agg_flat(
+        jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(vals),
+        jnp.asarray(sids), jnp.asarray(bboxes, jnp.float32),
+        jnp.asarray(n, jnp.int32), n_seg, gx, gy, backend, interpret)
+
+
 def window_count(xs, ys, window, *, n=None, backend=None):
     """Count of objects in window (axis attributes only — no file access)."""
     agg = window_agg(xs, ys, jnp.zeros_like(jnp.asarray(xs, jnp.float32)),
@@ -178,5 +271,5 @@ def window_mask_np(xs, ys, window):
     return (xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1)
 
 
-__all__ = ["window_agg", "bin_agg", "window_count", "window_mask_np",
-           "pack2d", "default_backend"]
+__all__ = ["window_agg", "bin_agg", "segment_window_agg", "segment_bin_agg",
+           "window_count", "window_mask_np", "pack2d", "default_backend"]

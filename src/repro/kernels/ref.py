@@ -1,8 +1,11 @@
-"""Pure-jnp oracles for the Pallas kernels.
+"""Pure-jnp oracles for the Pallas kernels (+ NumPy host mirrors).
 
 These are the semantic ground truth: every Pallas kernel in this package
 must match its oracle bit-for-bit (up to float accumulation order) across
-the shape/dtype sweeps in ``tests/test_kernels.py``.
+the shape/dtype sweeps in ``tests/test_kernels.py``. The ``*_np`` host
+mirrors at the bottom serve the index's control plane: float64, segment
+slices accumulated with numpy's pairwise summation — bit-for-bit the
+arithmetic of the sequential per-tile path the batched pipeline replaces.
 
 Conventions shared with the kernels:
 
@@ -20,6 +23,7 @@ Conventions shared with the kernels:
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 AGG_FIELDS = ("count", "sum", "min", "max")
 
@@ -78,6 +82,121 @@ def bin_agg_ref(xs, ys, vals, bbox, grid, valid):
         mx = jnp.max(jnp.where(m, vm, -jnp.inf))
         out.append(jnp.stack([cnt, s, mn, mx]))
     return jnp.stack(out)
+
+
+def segment_window_agg_ref(xs, ys, vals, sids, window, valid, n_seg):
+    """Per-segment (count, sum, min, max) inside ``window``.
+
+    ``sids`` assigns each object a segment id in [0, n_seg); n_seg is
+    static. Returns float32 ``(n_seg, 4)``.
+    """
+    m = window_mask(xs, ys, window, valid)
+    vm = vals.astype(jnp.float32)
+    out = []
+    for s in range(n_seg):
+        ms = m & (sids == s)
+        cnt = jnp.sum(ms, dtype=jnp.float32)
+        total = jnp.sum(jnp.where(ms, vm, 0.0), dtype=jnp.float32)
+        mn = jnp.min(jnp.where(ms, vm, jnp.inf))
+        mx = jnp.max(jnp.where(ms, vm, -jnp.inf))
+        out.append(jnp.stack([cnt, total, mn, mx]))
+    return jnp.stack(out)
+
+
+def segment_bin_agg_ref(xs, ys, vals, sids, bboxes, grid, valid, n_seg):
+    """Per-segment, per-cell aggregates; segment s binned by bboxes[s].
+
+    Returns float32 ``(n_seg, gx*gy, 4)``; cell id = cy*gx + cx.
+    """
+    gx, gy = grid
+    vm = vals.astype(jnp.float32)
+    out = []
+    for s in range(n_seg):
+        x0, y0 = bboxes[s, 0], bboxes[s, 1]
+        x1, y1 = bboxes[s, 2], bboxes[s, 3]
+        cw = jnp.maximum((x1 - x0) / gx, 1e-30)
+        ch = jnp.maximum((y1 - y0) / gy, 1e-30)
+        cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32), 0, gx - 1)
+        cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32), 0, gy - 1)
+        cid = cy * gx + cx
+        ms = valid & (sids == s)
+        cells = []
+        for c in range(gx * gy):
+            m = ms & (cid == c)
+            cnt = jnp.sum(m, dtype=jnp.float32)
+            total = jnp.sum(jnp.where(m, vm, 0.0), dtype=jnp.float32)
+            mn = jnp.min(jnp.where(m, vm, jnp.inf))
+            mx = jnp.max(jnp.where(m, vm, -jnp.inf))
+            cells.append(jnp.stack([cnt, total, mn, mx]))
+        out.append(jnp.stack(cells))
+    return jnp.stack(out)
+
+
+# --------------------------------------------------------------------- #
+# NumPy host mirrors (the index's control plane).
+#
+# Segments are CONTIGUOUS here — described by a boundaries vector rather
+# than a sid plane — and sums accumulate in float64 with numpy's pairwise
+# algorithm over each segment slice, which makes these mirrors bit-for-bit
+# identical to the sequential per-tile host path they replace.
+# --------------------------------------------------------------------- #
+
+def segment_window_agg_np(xs, ys, vals, boundaries, window):
+    """Per-contiguous-segment (count, sum, min, max) inside ``window``.
+
+    ``boundaries``: int ``(S+1,)``; segment s owns
+    ``[boundaries[s], boundaries[s+1])``. Returns float64 ``(S, 4)``;
+    empty selection ⇒ (0, 0, +inf, -inf).
+    """
+    xs, ys = np.asarray(xs), np.asarray(ys)
+    vals = np.asarray(vals, np.float32)
+    n_seg = len(boundaries) - 1
+    x0, y0, x1, y1 = window
+    # all-covering window (enrichment stats): segment slices ARE the
+    # selection — skip the mask and its boolean-indexing copies
+    covers_all = (x0 == -np.inf and y0 == -np.inf
+                  and x1 == np.inf and y1 == np.inf)
+    if not covers_all:
+        m = (xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1)
+    out = np.empty((n_seg, 4), np.float64)
+    for s in range(n_seg):
+        a, b = int(boundaries[s]), int(boundaries[s + 1])
+        sel = vals[a:b] if covers_all else vals[a:b][m[a:b]]
+        if sel.size:
+            out[s] = (sel.size, sel.sum(dtype=np.float64),
+                      sel.min(), sel.max())
+        else:
+            out[s] = (0, 0.0, np.inf, -np.inf)
+    return out
+
+
+def segment_bin_agg_np(xs, ys, vals, boundaries, bboxes, gx, gy):
+    """Per-contiguous-segment, per-cell aggregates (float64 ``(S,K,4)``)."""
+    xs, ys = np.asarray(xs), np.asarray(ys)
+    vals = np.asarray(vals, np.float32)
+    bboxes = np.asarray(bboxes, np.float64)
+    n_seg = len(boundaries) - 1
+    k = gx * gy
+    sid = np.repeat(np.arange(n_seg), np.diff(boundaries))
+    cw = np.maximum((bboxes[:, 2] - bboxes[:, 0]) / gx, 1e-30)
+    ch = np.maximum((bboxes[:, 3] - bboxes[:, 1]) / gy, 1e-30)
+    cx = np.clip(np.floor((xs - bboxes[sid, 0]) / cw[sid]).astype(np.int64),
+                 0, gx - 1)
+    cy = np.clip(np.floor((ys - bboxes[sid, 1]) / ch[sid]).astype(np.int64),
+                 0, gy - 1)
+    key = sid * k + cy * gx + cx
+    order = np.argsort(key, kind="stable")
+    vs_sorted = vals[order]
+    cell_bounds = np.searchsorted(key[order], np.arange(n_seg * k + 1))
+    out = np.empty((n_seg * k, 4), np.float64)
+    for c in range(n_seg * k):
+        a, b = cell_bounds[c], cell_bounds[c + 1]
+        if b > a:
+            seg = vs_sorted[a:b]
+            out[c] = (b - a, seg.sum(dtype=np.float64), seg.min(), seg.max())
+        else:
+            out[c] = (0, 0.0, np.inf, -np.inf)
+    return out.reshape(n_seg, k, 4)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, scale=None):

@@ -16,7 +16,12 @@ P6  Approximate evaluation never reads more objects than exact
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # optional: the property test widens to random examples when present
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import AQPEngine, IndexConfig
 from repro.core.bounds import PendingTile, QueryAccumulator
@@ -92,11 +97,7 @@ def test_p4_monotone_interval_narrowing():
     assert abs(widths[-1]) < 1e-9  # all processed → exact
 
 
-@settings(max_examples=20, deadline=None)
-@given(cnt=st.integers(1, 1000),
-       vmin=st.floats(-1e4, 1e4, allow_nan=False),
-       width=st.floats(0, 1e4, allow_nan=False))
-def test_p2_tile_ci_property(cnt, vmin, width):
+def _check_tile_ci(cnt, vmin, width):
     """Tile CI [cnt·min, cnt·max] contains any realizable tile sum."""
     vmax = vmin + width
     rng = np.random.default_rng(cnt)
@@ -105,6 +106,21 @@ def test_p2_tile_ci_property(cnt, vmin, width):
     lo, hi = p.ci_sum()
     s = vals.sum()
     assert lo - 1e-6 * max(1, abs(lo)) <= s <= hi + 1e-6 * max(1, abs(hi))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(cnt=st.integers(1, 1000),
+           vmin=st.floats(-1e4, 1e4, allow_nan=False),
+           width=st.floats(0, 1e4, allow_nan=False))
+    def test_p2_tile_ci_property(cnt, vmin, width):
+        _check_tile_ci(cnt, vmin, width)
+else:
+    @pytest.mark.parametrize("cnt,vmin,width", [
+        (1, 0.0, 0.0), (7, -1e4, 1e4), (1000, 3.25, 0.5),
+        (513, -42.0, 1e4), (64, 9999.0, 0.0)])
+    def test_p2_tile_ci_property(cnt, vmin, width):
+        _check_tile_ci(cnt, vmin, width)
 
 
 def test_p5_index_invariants_after_workload(engine):

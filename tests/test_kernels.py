@@ -130,3 +130,82 @@ def test_chunked_attention_matches_ref():
     got = chunked_attention(q, k, v, causal=True, q_chunk=64, kv_chunk=64)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-4)
+
+
+def _segments(lens, scale=100.0):
+    bounds = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    xs, ys, vs = _points(int(bounds[-1]), scale=scale)
+    return xs, ys, vs, bounds
+
+
+@pytest.mark.parametrize("lens", [[1], [0, 37, 500, 128, 3],
+                                  [4096, 1, 4096], [256] * 8])
+def test_segment_window_agg_backends_agree(lens):
+    xs, ys, vs, bounds = _segments(lens)
+    win = np.array([20, 20, 70, 70], np.float32)
+    a = np.asarray(ops.segment_window_agg(xs, ys, vs, bounds, win,
+                                          backend="np"))
+    b = np.asarray(ops.segment_window_agg(xs, ys, vs, bounds, win,
+                                          backend="jnp"))
+    c = np.asarray(ops.segment_window_agg(xs, ys, vs, bounds, win,
+                                          backend="pallas"))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=2e-3)
+    np.testing.assert_allclose(b, c, rtol=1e-5, atol=2e-3)
+    np.testing.assert_array_equal(a[:, 0], b[:, 0])  # counts exact
+    np.testing.assert_array_equal(b[:, 0], c[:, 0])
+    # packed call ≡ one window_agg per segment
+    for s in range(len(lens)):
+        sl = slice(bounds[s], bounds[s + 1])
+        if lens[s]:
+            want = np.asarray(ops.window_agg(xs[sl], ys[sl], vs[sl], win,
+                                             backend="np"), np.float64)
+        else:
+            want = np.array([0, 0, np.inf, -np.inf], np.float64)
+        np.testing.assert_allclose(a[s], want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("lens", [[1, 300], [0, 37, 500, 128, 3],
+                                  [700] * 6])
+@pytest.mark.parametrize("grid", [(2, 2), (3, 2)])
+def test_segment_bin_agg_backends_agree(lens, grid):
+    gx, gy = grid
+    xs, ys, vs, bounds = _segments(lens)
+    rng = np.random.default_rng(9)
+    n_seg = len(lens)
+    # heterogeneous per-segment bboxes (each tile splits its own extent)
+    lo = rng.uniform(0, 40, (n_seg, 2))
+    hi = lo + rng.uniform(30, 60, (n_seg, 2))
+    bboxes = np.concatenate([lo, hi], axis=1).astype(np.float32)
+    a = np.asarray(ops.segment_bin_agg(xs, ys, vs, bounds, bboxes,
+                                       gx=gx, gy=gy, backend="np"))
+    b = np.asarray(ops.segment_bin_agg(xs, ys, vs, bounds, bboxes,
+                                       gx=gx, gy=gy, backend="jnp"))
+    c = np.asarray(ops.segment_bin_agg(xs, ys, vs, bounds, bboxes,
+                                       gx=gx, gy=gy, backend="pallas"))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=2e-3)
+    np.testing.assert_allclose(b, c, rtol=1e-5, atol=2e-3)
+    np.testing.assert_array_equal(a[:, :, 0], b[:, :, 0])
+    np.testing.assert_array_equal(b[:, :, 0], c[:, :, 0])
+    # packed call ≡ one bin_agg per segment against its own bbox
+    for s in range(n_seg):
+        sl = slice(bounds[s], bounds[s + 1])
+        if not lens[s]:
+            continue
+        want = np.asarray(ops.bin_agg(xs[sl], ys[sl], vs[sl], bboxes[s],
+                                      gx=gx, gy=gy, backend="np"),
+                          np.float64)
+        np.testing.assert_allclose(a[s], want, rtol=1e-4, atol=2e-3)
+
+
+def test_segment_window_agg_everywhere_is_full_segment():
+    """An all-covering window yields full-segment (enrichment) stats."""
+    xs, ys, vs, bounds = _segments([64, 0, 129])
+    win = np.array([-np.inf, -np.inf, np.inf, np.inf])
+    a = ops.segment_window_agg(xs, ys, vs, bounds, win, backend="np")
+    for s, (i, j) in enumerate(zip(bounds[:-1], bounds[1:])):
+        if j > i:
+            assert a[s, 0] == j - i
+            np.testing.assert_allclose(
+                a[s, 1], vs[i:j].sum(dtype=np.float64), rtol=0)
+            assert a[s, 2] == vs[i:j].min()
+            assert a[s, 3] == vs[i:j].max()
