@@ -14,14 +14,11 @@ from .common import emit, fresh_engine, workload
 def run_session(phi: float, sequential: bool):
     eng = fresh_engine()
     wins = workload(eng.dataset, 30)
-    t = 0.0
-    reads = rows = 0
     for w in wins:
-        r = eng.query(w, "mean", "a0", phi=phi, sequential=sequential)
-        t += r.eval_time_s
-        reads += r.read_calls
-        rows += r.objects_read
-    return eng, t, reads, rows, len(wins)
+        eng.query(w, "mean", "a0", phi=phi, sequential=sequential)
+    tot = eng.trace.totals()  # the trace aggregates read calls/rows now
+    return (eng, tot["total_time_s"], tot["total_read_calls"],
+            tot["total_objects_read"], tot["queries"])
 
 
 def main():

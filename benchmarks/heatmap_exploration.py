@@ -1,0 +1,53 @@
+"""B6 — heatmap (2-D group-by) exploration: per-viewport binned
+aggregates under a per-bin accuracy constraint φ.
+
+The binned-view workload visual exploration frontends actually issue
+(VALINOR/RawVis; generalized to approximate bins by arXiv 2505.19872):
+each viewport renders a bx×by heatmap, and the φ-constrained path should
+(a) read fewer objects than exact per-bin answering, (b) amortize
+refinement into one gathered read + one packed segment_window_bin_agg
+kernel per round, and (c) get cheaper along the path as tiles split
+finer than bins and start answering from metadata alone.
+"""
+from __future__ import annotations
+
+from .common import emit, fresh_engine, workload
+
+BINS = (8, 8)
+N_QUERIES = 20
+
+
+def run_session(phi: float, bins=BINS, n_queries=N_QUERIES):
+    eng = fresh_engine()
+    wins = workload(eng.dataset, n_queries)
+    for w in wins:
+        eng.heatmap(w, "mean", "a0", bins=bins, phi=phi)
+    return eng, eng.trace.totals()
+
+
+def main():
+    out = {}
+    for name, phi in (("exact", 0.0), ("phi1", 0.01), ("phi5", 0.05)):
+        eng, tot = run_session(phi)
+        half = len(eng.trace.results) // 2
+        early = sum(r.objects_read for r in eng.trace.results[:half])
+        late = sum(r.objects_read for r in eng.trace.results[half:])
+        emit(f"heatmap_{name}", tot["total_time_s"] * 1e6 / tot["queries"],
+             f"rows_read={tot['total_objects_read']};"
+             f"read_calls={tot['total_read_calls']};"
+             f"batch_rounds={tot['total_batch_rounds']};"
+             f"tiles_processed={tot['total_tiles_processed']};"
+             f"rows_early_half={early};rows_late_half={late};"
+             f"active_tiles={eng.index.n_active}")
+        out[name] = tot
+    s5 = out["exact"]["total_time_s"] / max(out["phi5"]["total_time_s"],
+                                            1e-9)
+    emit("heatmap_speedup", 0.0,
+         f"exact_vs_phi5={s5:.2f}x;"
+         f"reads_exact={out['exact']['total_objects_read']};"
+         f"reads_phi5={out['phi5']['total_objects_read']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,6 @@
 """Benchmark harness — one entry per paper table/figure/claim.
 
-Prints ``name,us_per_call,derived`` CSV rows (B1–B5), then the roofline
+Prints ``name,us_per_call,derived`` CSV rows (B1–B6), then the roofline
 table (§Roofline) if dry-run artifacts exist under experiments/dryrun.
 
     PYTHONPATH=src python -m benchmarks.run
@@ -13,13 +13,14 @@ import os
 def main() -> None:
     print("name,us_per_call,derived")
     from . import (accuracy_sweep, adaptation_cost, fig2_exploration,
-                   kernels_bench, objects_read)
+                   heatmap_exploration, kernels_bench, objects_read)
     os.makedirs("experiments", exist_ok=True)
     fig2_exploration.main(save_csv="experiments/fig2.csv")
     objects_read.main()
     kernels_bench.main()
     accuracy_sweep.main()
     adaptation_cost.main()
+    heatmap_exploration.main()
 
     dd = "experiments/dryrun"
     if os.path.isdir(dd) and any(f.endswith(".json")

@@ -1,12 +1,16 @@
 # The paper's primary contribution: partial adaptive indexing for
 # approximate query answering (Maroulis et al., BigVis@VLDB 2024).
-from .bounds import PendingTile, QueryAccumulator, QueryResult
+from .bounds import (GroupedAccumulator, GroupedPendingTile, HeatmapResult,
+                     PendingTile, QueryAccumulator, QueryResult)
 from .engine import AQPEngine, EngineTrace
 from .index import AdaptStats, IndexConfig, TileIndex
-from .query import evaluate, evaluate_oracle
+from .query import (evaluate, evaluate_heatmap, evaluate_heatmap_oracle,
+                    evaluate_oracle)
 
 __all__ = [
     "AQPEngine", "EngineTrace", "TileIndex", "IndexConfig", "AdaptStats",
     "QueryResult", "QueryAccumulator", "PendingTile",
+    "HeatmapResult", "GroupedAccumulator", "GroupedPendingTile",
     "evaluate", "evaluate_oracle",
+    "evaluate_heatmap", "evaluate_heatmap_oracle",
 ]

@@ -26,9 +26,18 @@ from typing import Dict, List
 
 import numpy as np
 
-from .bounds import PendingTile, tile_ci_width
+from .bounds import GroupedPendingTile, PendingTile, tile_ci_width
 
 EPS = 1e-12
+
+
+def _score_order(ids: List[int], w: np.ndarray, c: np.ndarray,
+                 alpha: float) -> List[int]:
+    w_hat = w / max(w.max(), EPS)
+    c_hat = c / max(c.max(), EPS)
+    s = alpha * w_hat + (1.0 - alpha) / np.maximum(c_hat, EPS)
+    order = np.argsort(-s, kind="stable")
+    return [ids[i] for i in order]
 
 
 def score_tiles(pending: Dict[int, PendingTile], agg: str,
@@ -39,8 +48,28 @@ def score_tiles(pending: Dict[int, PendingTile], agg: str,
     ids = list(pending.keys())
     w = np.array([tile_ci_width(pending[t], agg) for t in ids], np.float64)
     c = np.array([pending[t].cnt_q for t in ids], np.float64)
-    w_hat = w / max(w.max(), EPS)
-    c_hat = c / max(c.max(), EPS)
-    s = alpha * w_hat + (1.0 - alpha) / np.maximum(c_hat, EPS)
-    order = np.argsort(-s, kind="stable")
-    return [ids[i] for i in order]
+    return _score_order(ids, w, c, alpha)
+
+
+def score_tiles_grouped(pending: Dict[int, GroupedPendingTile], agg: str,
+                        alpha: float = 1.0) -> List[int]:
+    """Heatmap processing order: same policy, but ŵ(t) is the tile's
+    WORST per-bin CI-width contribution.
+
+    For sum/mean that is ``(vmax − vmin) · max_b cnt_b`` — the widest
+    per-bin sum interval the tile inflicts (the query-level heatmap
+    bound is a max over bins, so the tile touching the worst bin hardest
+    is the most valuable to process); for min/max it is the value-range
+    width, as in the scalar policy. The cost term uses the tile's total
+    in-window count.
+    """
+    if not pending:
+        return []
+    ids = list(pending.keys())
+    if agg in ("sum", "mean"):
+        w = np.array([pending[t].width * pending[t].cnt_b.max()
+                      for t in ids], np.float64)
+    else:
+        w = np.array([pending[t].width for t in ids], np.float64)
+    c = np.array([pending[t].cnt_b.sum() for t in ids], np.float64)
+    return _score_order(ids, w, c, alpha)

@@ -18,11 +18,18 @@ The accumulator is progressive: ``fold_exact`` moves one pending tile from
 interval-contribution to exact-contribution, exactly like the paper's
 processing loop, and every ``interval()`` call is O(#pending) (with
 cached partial sums, O(1) amortized).
+
+:class:`GroupedAccumulator` generalizes the same machinery to heatmap
+(2-D group-by) queries: every quantity above becomes a per-bin vector
+over the window's ``bx × by`` grid, a pending tile contributes
+``cnt_b · [vmin, vmax]`` to every bin it touches (per-bin counts are
+exact, from the axis index), and the query-level bound is the max per-bin
+relative bound over occupied bins.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -171,6 +178,192 @@ class QueryAccumulator:
             lo = max(p.vmin for p in self.pending.values())
         mid = 0.5 * (lo + hi) if np.isfinite(lo) and np.isfinite(hi) else hi
         return mid, lo, hi, _rel_bound(mid, lo, hi)
+
+
+@dataclasses.dataclass
+class GroupedPendingTile:
+    """A pending tile's per-bin interval contribution to a heatmap query.
+
+    ``cnt_b[b] = count(t ∩ Q ∩ bin_b)`` is exact (axis index, zero file
+    I/O); the value bounds ``[vmin, vmax]`` are the tile's sound metadata
+    interval, shared by every bin the tile touches.
+    """
+    tile_id: int
+    cnt_b: np.ndarray    # int64 (nbins,) — exact per-bin in-window counts
+    vmin: float          # sound lower bound on A within t
+    vmax: float          # sound upper bound on A within t
+    cost: int            # objects to read if processed = count(t)
+
+    @property
+    def width(self) -> float:
+        return self.vmax - self.vmin
+
+
+@dataclasses.dataclass
+class HeatmapResult:
+    """Per-bin approximate values + deterministic per-bin intervals.
+
+    Flat per-bin arrays of length ``bx*by``; bin id = by_row*bx + bx_col
+    (the kernels' row-major-y layout). ``bound`` is the query-level
+    relative upper error bound = max over occupied bins of ``bin_bound``.
+    Empty bins carry value 0 (count/sum/mean) or ±inf (min/max) with
+    bin_bound 0.
+    """
+    agg: str
+    attr: str
+    bins: Tuple[int, int]      # (bx, by)
+    values: np.ndarray         # float64 (bx*by,)
+    lo: np.ndarray
+    hi: np.ndarray
+    bin_bound: np.ndarray      # per-bin relative upper error bound
+    bound: float               # max per-bin bound actually achieved
+    exact: bool
+    tiles_full: int = 0
+    tiles_partial: int = 0
+    tiles_processed: int = 0
+    objects_read: int = 0
+    read_calls: int = 0        # raw-file read invocations (gathered = 1/round)
+    batch_rounds: int = 0      # batched refinement rounds (0 ⇒ sequential)
+    eval_time_s: float = 0.0
+
+    def grid(self, a: Optional[np.ndarray] = None) -> np.ndarray:
+        """Reshape a per-bin vector (default: values) to (by, bx)."""
+        a = self.values if a is None else a
+        bx, by = self.bins
+        return np.asarray(a).reshape(by, bx)
+
+
+class GroupedAccumulator:
+    """Vectorized per-bin interval accumulator for one heatmap query.
+
+    The scalar :class:`QueryAccumulator` machinery generalized from one
+    (exact, pending) partition to ``nbins`` of them: exact parts and the
+    cached pending sums are (nbins,) arrays, a fold moves one tile's
+    whole per-bin vector from interval- to exact-contribution, and
+    ``interval()`` returns per-bin values/CI plus the query-level bound
+    (max per-bin relative bound over occupied bins). Fold order and the
+    cached-sum arithmetic mirror the scalar accumulator exactly, so the
+    batched and sequential heatmap paths stay bit-for-bit comparable.
+    """
+
+    def __init__(self, agg: str, nbins: int):
+        assert agg in AGGS, agg
+        self.agg = agg
+        self.nbins = nbins
+        # exact parts (single-bin full tiles + processed tiles), per bin
+        self.ex_cnt = np.zeros(nbins, np.int64)
+        self.ex_sum = np.zeros(nbins, np.float64)
+        self.ex_min = np.full(nbins, np.inf)
+        self.ex_max = np.full(nbins, -np.inf)
+        self.pending: Dict[int, GroupedPendingTile] = {}
+        # cached pending aggregates (sum/mean path), per bin
+        self._p_cnt = np.zeros(nbins, np.int64)
+        self._p_lo = np.zeros(nbins, np.float64)
+        self._p_hi = np.zeros(nbins, np.float64)
+        self._p_mid = np.zeros(nbins, np.float64)
+
+    # -------------------------- building ----------------------------- #
+    def fold_full_bin(self, b: int, cnt: int, s: float, vmin: float,
+                      vmax: float):
+        """A full tile nested inside one bin contributes its metadata
+        exactly to that bin — zero file I/O."""
+        self.ex_cnt[b] += int(cnt)
+        self.ex_sum[b] += float(s)
+        if cnt > 0:
+            self.ex_min[b] = min(self.ex_min[b], vmin)
+            self.ex_max[b] = max(self.ex_max[b], vmax)
+
+    def add_pending(self, p: GroupedPendingTile):
+        if p.cnt_b.sum() <= 0:
+            return
+        self.pending[p.tile_id] = p
+        cb = p.cnt_b.astype(np.float64)
+        self._p_cnt += p.cnt_b
+        self._p_lo += cb * p.vmin
+        self._p_hi += cb * p.vmax
+        self._p_mid += cb * (0.5 * (p.vmin + p.vmax))
+
+    def fold_exact(self, tile_id: int, cnt_b, sum_b, min_b, max_b):
+        """Processing tile_id replaced its per-bin intervals with exact
+        values. ``cnt_b`` re-measured during processing must equal the
+        pending counts (both derive from the same axis-index binning
+        rule) — asserted."""
+        p = self.pending.pop(tile_id)
+        cnt_b = np.asarray(cnt_b, np.int64)
+        assert np.array_equal(p.cnt_b, cnt_b), tile_id
+        cb = p.cnt_b.astype(np.float64)
+        self._p_cnt -= p.cnt_b
+        self._p_lo -= cb * p.vmin
+        self._p_hi -= cb * p.vmax
+        self._p_mid -= cb * (0.5 * (p.vmin + p.vmax))
+        self.ex_cnt += cnt_b
+        self.ex_sum += np.asarray(sum_b, np.float64)
+        nz = cnt_b > 0
+        self.ex_min = np.where(nz, np.minimum(self.ex_min, min_b),
+                               self.ex_min)
+        self.ex_max = np.where(nz, np.maximum(self.ex_max, max_b),
+                               self.ex_max)
+
+    # -------------------------- reading ------------------------------ #
+    def interval(self):
+        """(values, lo, hi, bin_bound, bound): per-bin state + the
+        query-level relative upper error bound."""
+        agg = self.agg
+        n = self.ex_cnt + self._p_cnt
+        occ = n > 0
+        if agg == "count":
+            v = n.astype(np.float64)
+            return (v, v.copy(), v.copy(), np.zeros(self.nbins), 0.0)
+
+        if agg in ("sum", "mean"):
+            lo = self.ex_sum + self._p_lo
+            hi = self.ex_sum + self._p_hi
+            mid = self.ex_sum + self._p_mid
+            if agg == "mean":
+                d = np.maximum(n, 1).astype(np.float64)  # n=0 bins are 0/1
+                lo, hi, mid = lo / d, hi / d, mid / d
+            bb = _rel_bound_vec(mid, lo, hi, occ)
+            return mid, lo, hi, bb, float(bb.max(initial=0.0))
+
+        # min / max: recompute over the pending set (no O(1) cache; the
+        # per-call cost is O(#pending · nbins), vectorized)
+        if self.pending:
+            ps = list(self.pending.values())
+            touch = np.stack([p.cnt_b > 0 for p in ps])
+            vmins = np.array([p.vmin for p in ps])[:, None]
+            vmaxs = np.array([p.vmax for p in ps])[:, None]
+        if agg == "min":
+            if self.pending:
+                p_lo = np.where(touch, vmins, np.inf).min(axis=0)
+                p_hi = np.where(touch, vmaxs, np.inf).min(axis=0)
+            else:
+                p_lo = p_hi = np.full(self.nbins, np.inf)
+            lo = np.minimum(self.ex_min, p_lo)
+            hi = np.minimum(self.ex_min, p_hi)
+            mid = np.where(np.isfinite(lo) & np.isfinite(hi),
+                           0.5 * (lo + hi), lo)
+        else:  # max (mirror of min)
+            if self.pending:
+                p_hi = np.where(touch, vmaxs, -np.inf).max(axis=0)
+                p_lo = np.where(touch, vmins, -np.inf).max(axis=0)
+            else:
+                p_lo = p_hi = np.full(self.nbins, -np.inf)
+            hi = np.maximum(self.ex_max, p_hi)
+            lo = np.maximum(self.ex_max, p_lo)
+            mid = np.where(np.isfinite(lo) & np.isfinite(hi),
+                           0.5 * (lo + hi), hi)
+        bb = _rel_bound_vec(mid, lo, hi, occ)
+        return mid, lo, hi, bb, float(bb.max(initial=0.0))
+
+
+def _rel_bound_vec(value, lo, hi, occ):
+    """Vectorized :func:`_rel_bound` over bins; unoccupied bins are 0."""
+    with np.errstate(invalid="ignore"):
+        dev = np.maximum(hi - value, value - lo)
+    out = np.zeros(len(value))
+    m = occ & np.isfinite(dev) & (dev > 0)
+    out[m] = dev[m] / np.maximum(np.abs(value[m]), EPS)
+    return out
 
 
 def _rel_bound(value: float, lo: float, hi: float) -> float:

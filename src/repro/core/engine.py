@@ -12,21 +12,43 @@ The engine owns one adaptive tile index per dataset and evaluates window
 aggregate queries under a per-query accuracy constraint φ (φ=0 ⇒ exact).
 It records a per-query trace (time, objects read, tiles processed) — the
 exact instrumentation behind the paper's Figure 2.
+
+Besides scalar window aggregates, the engine answers φ-constrained
+**heatmap (2-D group-by) queries** — the binned viewport views
+exploration frontends actually render:
+
+>>> h = eng.heatmap((100, 100, 300, 300), "mean", "a0", bins=(8, 8),
+...                 phi=0.05)
+>>> bool(h.exact or h.bound <= 0.05)
+True
+>>> h.grid().shape          # per-bin values / lo / hi, row-major y
+(8, 8)
+
+Each bin carries its own deterministic ``[lo, hi]`` interval and
+relative bound; the query-level ``bound`` is the worst per-bin bound
+over occupied bins. Refinement runs through the same batched
+classify → pending-CI → fold loop as scalar queries (one gathered read +
+one packed ``segment_window_bin_agg`` kernel per round), and tiles the
+index has already split finer than one bin answer from metadata with
+zero file I/O.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Optional, Tuple, Union
 
 from ..data.rawfile import RawDataset
 from . import query as query_mod
-from .bounds import QueryResult
+from .bounds import HeatmapResult, QueryResult
 from .index import IndexConfig, TileIndex
 
 
 @dataclasses.dataclass
 class EngineTrace:
-    results: List[QueryResult] = dataclasses.field(default_factory=list)
+    """Per-query instrumentation (scalar and heatmap results alike)."""
+
+    results: List[Union[QueryResult, HeatmapResult]] = dataclasses.field(
+        default_factory=list)
 
     def totals(self):
         return {
@@ -35,6 +57,9 @@ class EngineTrace:
             "total_objects_read": sum(r.objects_read for r in self.results),
             "total_tiles_processed": sum(r.tiles_processed
                                          for r in self.results),
+            "total_read_calls": sum(r.read_calls for r in self.results),
+            "total_batch_rounds": sum(r.batch_rounds
+                                      for r in self.results),
         }
 
 
@@ -70,8 +95,33 @@ class AQPEngine:
         self.trace.results.append(r)
         return r
 
+    def heatmap(self, window: Tuple[float, float, float, float], agg: str,
+                attr: str, bins: Tuple[int, int] = (8, 8),
+                phi: float = 0.0, alpha: Optional[float] = None,
+                batch_k: Optional[int] = None,
+                sequential: bool = False) -> HeatmapResult:
+        """Evaluate one φ-constrained heatmap (group-by) query.
+
+        bins: (bx, by) grid laid over the window; bin id = by_row*bx +
+          bx_col (``HeatmapResult.grid()`` reshapes to (by, bx)).
+        phi: per-bin relative accuracy constraint — refinement stops once
+          EVERY occupied bin's relative bound is ≤ φ (0 ⇒ exact).
+        batch_k / sequential: as in :meth:`query`.
+        """
+        r = query_mod.evaluate_heatmap(
+            self.index, window, agg, attr, bins=bins, phi=phi,
+            alpha=self.alpha if alpha is None else alpha,
+            batch_k=batch_k, sequential=sequential)
+        self.trace.results.append(r)
+        return r
+
     def oracle(self, window, agg: str, attr: str) -> float:
         return query_mod.evaluate_oracle(self.index, window, agg, attr)
+
+    def heatmap_oracle(self, window, agg: str, attr: str,
+                       bins: Tuple[int, int] = (8, 8)):
+        return query_mod.evaluate_heatmap_oracle(self.index, window, agg,
+                                                 attr, bins)
 
     @property
     def io_stats(self):

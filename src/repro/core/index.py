@@ -217,6 +217,28 @@ class TileIndex:
         cs = np.concatenate([[0], np.cumsum(m)])
         return (cs[bounds[1:]] - cs[bounds[:-1]]).astype(np.int64)
 
+    def bin_counts_in_window_batch(self, tile_ids, window, bins):
+        """Vectorized ``count(t ∩ Q ∩ bin_b)`` for many tiles — zero file
+        I/O. One gathered pass over the axis values yields the (T, bx*by)
+        per-bin in-window counts the grouped (heatmap) accumulator builds
+        its per-bin tile intervals from. Uses the SAME binning rule as
+        the processed per-bin contributions
+        (:func:`repro.kernels.ref.window_bin_ids_np`), so pending and
+        folded counts agree exactly.
+        """
+        bx, by = bins
+        nbins = bx * by
+        tile_ids = np.asarray(tile_ids, np.int64)
+        if tile_ids.size == 0:
+            return np.zeros((0, nbins), np.int64)
+        idx, bounds = self._gather_segments(tile_ids)
+        m, cid = ref_mod.window_bin_ids_np(self.x_s[idx], self.y_s[idx],
+                                           window, bx, by)
+        sid = np.repeat(np.arange(len(tile_ids)), np.diff(bounds))
+        key = sid[m] * nbins + cid[m]
+        return np.bincount(key, minlength=len(tile_ids) * nbins).reshape(
+            len(tile_ids), nbins).astype(np.int64)
+
     # ------------------------------------------------------------------ #
     # processing (the accounted, expensive path)
     # ------------------------------------------------------------------ #
@@ -244,17 +266,48 @@ class TileIndex:
         else:
             contrib = (0, 0.0, np.inf, -np.inf)
 
-        # Tile-level metadata (enrichment) — now exact for this attr.
+        self._enrich_and_split(tile_id, vals, attr, split)
+        return contrib
+
+    def _enrich_and_split(self, tile_id: int, vals: np.ndarray, attr: str,
+                          split: bool):
+        """Shared processing epilogue: tile-level metadata enrichment
+        (now exact for this attr) + the split-or-enrich decision."""
         self.meta_sum[attr][tile_id] = float(vals.sum(dtype=np.float64))
         self.meta_min[attr][tile_id] = float(vals.min())
         self.meta_max[attr][tile_id] = float(vals.max())
         self.meta_valid[attr][tile_id] = True
-
         if split:
             self._split(tile_id, vals, attr)
         else:
             self.adapt_stats.tiles_enriched += 1
-        return contrib
+
+    def process_heatmap(self, tile_id: int, window, attr: str, bins, *,
+                        split: bool = True):
+        """Sequential heatmap reference: one raw-file read + the tile's
+        exact per-bin in-window contribution, then enrich/split exactly
+        like :meth:`process`.
+
+        Returns ``(cnt_b, sum_b, min_b, max_b)`` — per-bin arrays of
+        length ``bx*by`` (bin id = by_row*bx + bx_col).
+        """
+        bx, by = bins
+        nbins = bx * by
+        self.ensure_attr(attr)
+        o, c = int(self.offset[tile_id]), int(self.count[tile_id])
+        if c == 0:
+            return (np.zeros(nbins, np.int64), np.zeros(nbins),
+                    np.full(nbins, np.inf), np.full(nbins, -np.inf))
+        rows = self.perm[o:o + c]
+        vals = self.ds.read_values(attr, rows)        # ← accounted file I/O
+        xs, ys = self.x_s[o:o + c], self.y_s[o:o + c]
+
+        agg = ref_mod.segment_window_bin_agg_np(
+            xs, ys, vals, np.array([0, c], np.int64), window, bx, by)[0]
+
+        self._enrich_and_split(tile_id, vals, attr, split)
+        return (agg[:, 0].astype(np.int64), agg[:, 1].copy(),
+                agg[:, 2].copy(), agg[:, 3].copy())
 
     def can_split(self, tile_id: int) -> bool:
         gx, gy = self.cfg.split_grid
@@ -337,6 +390,21 @@ class TileIndex:
     # ------------------------------------------------------------------ #
     # batched processing (the amortized, crack-in-batch path)
     # ------------------------------------------------------------------ #
+    def _read_batch_gather(self, tile_ids, attr: str):
+        """Shared phase-1 plumbing of a batched refinement round: ONE
+        gathered ``read_values`` over the tiles' concatenated segments,
+        plus the :meth:`apply_batch` payload describing them."""
+        self.ensure_attr(attr)
+        tile_ids = np.asarray(tile_ids, np.int64)
+        idx, bounds = self._gather_segments(tile_ids)
+        rows = self.perm[idx]
+        vals = self.ds.read_values(attr, rows)     # ← ONE accounted read
+        xs, ys = self.x_s[idx], self.y_s[idx]
+        self.adapt_stats.batch_rounds += 1
+        payload = {"tile_ids": tile_ids, "idx": idx, "bounds": bounds,
+                   "xs": xs, "ys": ys, "vals": vals, "attr": attr}
+        return tile_ids, idx, bounds, xs, ys, vals, payload
+
     def read_batch(self, tile_ids, window, attr: str):
         """Phase 1 of a batched refinement round: amortized read + kernel.
 
@@ -359,14 +427,8 @@ class TileIndex:
         backend override ("jnp"/"pallas" — the TPU deploy data plane)
         computes them in float32 and matches to f32 tolerance only.
         """
-        self.ensure_attr(attr)
-        tile_ids = np.asarray(tile_ids, np.int64)
-        idx, bounds = self._gather_segments(tile_ids)
-        rows = self.perm[idx]
-        vals = self.ds.read_values(attr, rows)     # ← ONE accounted read
-        xs, ys = self.x_s[idx], self.y_s[idx]
-        self.adapt_stats.batch_rounds += 1
-
+        tile_ids, idx, bounds, xs, ys, vals, payload = \
+            self._read_batch_gather(tile_ids, attr)
         # exact in-window contributions: one packed kernel over the batch
         contrib = np.asarray(ops.segment_window_agg(
             xs, ys, vals, bounds, window, backend=self._backend))
@@ -376,8 +438,40 @@ class TileIndex:
              float(contrib[s, 2]), float(contrib[s, 3]))
             if contrib[s, 0] else (0, 0.0, np.inf, -np.inf)
             for s in range(len(tile_ids))]
-        payload = {"tile_ids": tile_ids, "idx": idx, "bounds": bounds,
-                   "xs": xs, "ys": ys, "vals": vals, "attr": attr}
+        return contribs, payload
+
+    def read_batch_heatmap(self, tile_ids, window, attr: str, bins):
+        """Phase 1 of a batched HEATMAP refinement round.
+
+        Like :meth:`read_batch`, but the single packed pass is
+        ``segment_window_bin_agg`` — every tile's exact per-bin in-window
+        contribution from one gathered read. ``contribs`` is a list of
+        ``(cnt_b, sum_b, min_b, max_b)`` per-bin arrays aligned with
+        ``tile_ids``; ``payload`` is the same structure
+        :meth:`apply_batch` consumes (heatmap refinement enriches/splits
+        tiles identically to scalar refinement — only the folded
+        contribution shape differs).
+
+        Unlike :meth:`read_batch`, the fold contributions are ALWAYS
+        computed with the f64 host mirror, even under a device backend
+        override: per-bin counts must match the axis-index binning rule
+        (``window_bin_ids_np``) bit-for-bit — f32 device binning divides
+        in float32 and can move bin-edge objects across bins, which
+        would break the grouped accumulator's exact count bookkeeping.
+        The device kernels (``segment_window_bin_agg`` jnp/pallas)
+        remain the TPU bulk data plane, validated against this mirror in
+        tests/test_kernels.py.
+        """
+        bx, by = bins
+        tile_ids, idx, bounds, xs, ys, vals, payload = \
+            self._read_batch_gather(tile_ids, attr)
+        agg = ref_mod.segment_window_bin_agg_np(xs, ys, vals, bounds,
+                                                window, bx, by)
+        self.adapt_stats.kernel_calls += 1
+        contribs = [
+            (agg[s, :, 0].astype(np.int64), agg[s, :, 1].copy(),
+             agg[s, :, 2].copy(), agg[s, :, 3].copy())
+            for s in range(len(tile_ids))]
         return contribs, payload
 
     def apply_batch(self, payload, n_used: int, split_flags):
@@ -533,14 +627,23 @@ class TileIndex:
         ids = np.flatnonzero(self.active[:self.n_tiles])
         assert self.count[ids].sum() == self.ds.n, "object conservation"
         assert len(np.unique(np.sort(self.perm))) == self.ds.n, "perm is a permutation"
+        # Extent containment is approximate BY the ownership rule: cell
+        # assignment divides float32 coordinates (numpy 2 weak-scalar
+        # promotion keeps the quotient f32), so a boundary point can
+        # round one cell up/down relative to the f64 bbox edges — an
+        # excursion of up to ~1 f32 ulp at domain scale. The rule is
+        # applied consistently everywhere (init, splits, axis counting),
+        # so membership — and therefore metadata — stays exact.
+        scale = max(1.0, float(np.abs(np.asarray(self.domain)).max()))
+        tol = max(1e-6, 2.0 * float(np.finfo(np.float32).eps) * scale)
         for t in ids:
             o, c = self.offset[t], self.count[t]
             if c == 0:
                 continue
             x0, y0, x1, y1 = self.bbox[t]
             xs, ys = self.x_s[o:o + c], self.y_s[o:o + c]
-            assert (xs >= x0 - 1e-6).all() and (xs <= x1 + 1e-6).all()
-            assert (ys >= y0 - 1e-6).all() and (ys <= y1 + 1e-6).all()
+            assert (xs >= x0 - tol).all() and (xs <= x1 + tol).all()
+            assert (ys >= y0 - tol).all() and (ys <= y1 + tol).all()
         if attr is not None and attr in self.meta_sum:
             col = self.ds.read_all_unaccounted(attr)
             for t in ids:

@@ -36,15 +36,28 @@ Evaluation of a query (window Q, aggregate, attribute A, constraint φ):
 kernel per tile) that the batched pipeline must match bit-for-bit on
 counts and to f64 tolerance on sums; ``batch_k`` (default
 ``IndexConfig.batch_k``) sets the round size.
+
+:func:`evaluate_heatmap` generalizes the same classify → pending-CI →
+batched-refinement loop from one scalar aggregate to a ``bx × by`` grid
+of per-bin aggregates over the window (the VALINOR/RawVis binned-view
+workload): per-bin pending counts come from one zero-I/O axis pass
+(``TileIndex.bin_counts_in_window_batch``), a fully-contained tile whose
+objects all land in ONE bin contributes its metadata exactly with no
+file access, and refinement folds each processed tile's whole per-bin
+vector from one packed ``segment_window_bin_agg`` pass. The stopping
+rule compares φ against the query-level bound = max per-bin relative
+bound over occupied bins.
 """
 from __future__ import annotations
 
 import time
+from typing import Optional, Tuple
 
 import numpy as np
 
 from . import adapt
-from .bounds import PendingTile, QueryAccumulator, QueryResult
+from .bounds import (GroupedAccumulator, GroupedPendingTile, HeatmapResult,
+                     PendingTile, QueryAccumulator, QueryResult)
 from .index import TileIndex
 
 
@@ -110,7 +123,8 @@ def _min_folds_needed(acc, remaining, agg: str, phi: float,
 
 def evaluate(index: TileIndex, window, agg: str, attr: str,
              phi: float = 0.0, alpha: float = 1.0, *,
-             batch_k: int = None, sequential: bool = False) -> QueryResult:
+             batch_k: Optional[int] = None,
+             sequential: bool = False) -> QueryResult:
     t_start = time.perf_counter()
     io_before = index.ds.stats.snapshot()
     rounds_before = index.adapt_stats.batch_rounds
@@ -188,6 +202,182 @@ def evaluate(index: TileIndex, window, agg: str, attr: str,
         read_calls=io_delta.read_calls,
         batch_rounds=index.adapt_stats.batch_rounds - rounds_before,
         eval_time_s=time.perf_counter() - t_start)
+
+
+def _build_grouped_accumulator(index: TileIndex, window, agg: str,
+                               attr: str, bins):
+    """Heatmap steps 1–3: classification + per-bin pending construction.
+
+    ONE gathered axis pass gives every non-disjoint tile's per-bin
+    in-window counts (no file I/O). A fully-contained tile whose valid
+    metadata covers exactly the objects of one bin (all its in-window
+    count concentrated there) folds exactly into that bin; every other
+    overlapping tile becomes pending with per-bin interval
+    ``cnt_b · [vmin, vmax]``.
+    """
+    bx, by = bins
+    full_ids, partial_ids = index.classify(window)
+    full_set = set(int(i) for i in full_ids)
+    acc = GroupedAccumulator(agg, bx * by)
+
+    cand = np.concatenate([full_ids, partial_ids]).astype(np.int64)
+    cnt_bs = index.bin_counts_in_window_batch(cand, window, bins)
+    n_full = n_partial = 0
+    for row, t in enumerate(cand):
+        c_b = cnt_bs[row]
+        tot = int(c_b.sum())
+        if tot == 0:
+            continue
+        t = int(t)
+        is_full = t in full_set
+        if is_full:
+            n_full += 1
+        else:
+            n_partial += 1
+        nz = np.flatnonzero(c_b)
+        # metadata-exact path: full tile, valid sum, every owned object
+        # selected AND landing in the same bin — the tile's (count, sum,
+        # min, max) are that bin's exact contribution, zero file I/O
+        if (is_full and index.meta_valid[attr][t] and len(nz) == 1
+                and tot == int(index.count[t])):
+            b = int(nz[0])
+            acc.fold_full_bin(b, tot, index.meta_sum[attr][t],
+                              index.meta_min[attr][t],
+                              index.meta_max[attr][t])
+        else:
+            acc.add_pending(GroupedPendingTile(
+                tile_id=t, cnt_b=c_b.copy(),
+                vmin=float(index.meta_min[attr][t]),
+                vmax=float(index.meta_max[attr][t]),
+                cost=int(index.count[t])))
+    return acc, full_set, n_full, n_partial
+
+
+def evaluate_heatmap(index: TileIndex, window, agg: str, attr: str,
+                     bins: Tuple[int, int] = (8, 8), phi: float = 0.0,
+                     alpha: float = 1.0, *, batch_k: Optional[int] = None,
+                     sequential: bool = False) -> HeatmapResult:
+    """φ-constrained heatmap (2-D group-by) over the window's bx×by grid.
+
+    Same evaluation skeleton as :func:`evaluate`, vectorized over bins:
+    classify, build per-bin pending intervals (zero file I/O), then — if
+    the query-level bound (max per-bin relative bound) exceeds φ —
+    refine in batched rounds of up to ``batch_k`` tiles, folding each
+    processed tile's whole per-bin contribution from one packed
+    ``segment_window_bin_agg`` pass per round. Rounds ramp geometrically
+    (1, 2, 4, …, k) under φ>0 to bound speculative reads; φ=0 processes
+    every pending tile in full-size rounds. ``sequential=True`` is the
+    per-tile reference path the batched pipeline must match bit-for-bit
+    on counts, to f64 tolerance on sums, and exactly on index evolution.
+    """
+    t_start = time.perf_counter()
+    io_before = index.ds.stats.snapshot()
+    rounds_before = index.adapt_stats.batch_rounds
+    bx, by = int(bins[0]), int(bins[1])
+    assert bx > 0 and by > 0
+    assert np.isfinite(np.asarray(window, np.float64)).all(), \
+        "heatmap windows must be finite rectangles"
+    index.ensure_attr(attr)
+
+    acc, full_set, n_full, n_partial = _build_grouped_accumulator(
+        index, window, agg, attr, (bx, by))
+
+    values, lo, hi, bin_bound, bound = acc.interval()
+    processed = 0
+    if acc.pending and (phi <= 0.0 or bound > phi):
+        order = adapt.score_tiles_grouped(acc.pending, agg, alpha)
+        # Unlike the scalar rule (full tiles are enriched, never split —
+        # their metadata answers any containing query), heatmap
+        # refinement splits EVERY processed tile: a full tile spanning
+        # several bins must be re-read by every future heatmap until its
+        # descendants nest inside single bins and answer from metadata.
+        if sequential:
+            for t in order:
+                if phi > 0.0 and bound <= phi:
+                    break
+                cnt_b, s_b, mn_b, mx_b = index.process_heatmap(
+                    t, window, attr, (bx, by), split=True)
+                acc.fold_exact(t, cnt_b, s_b, mn_b, mx_b)
+                processed += 1
+                values, lo, hi, bin_bound, bound = acc.interval()
+        else:
+            from ..kernels.segment_agg import MAX_SEGMENTS, MAX_UNROLL
+            gx, gy = index.cfg.split_grid
+            k = index.cfg.batch_k if batch_k is None else int(batch_k)
+            # the fold contributions come from the host mirror (no unroll
+            # bound — see read_batch_heatmap), but apply_batch's packed
+            # split kernel unrolls statically over S·(gx·gy) — cap the
+            # round size at its limits, as the scalar path does
+            k = max(1, min(k, MAX_SEGMENTS, MAX_UNROLL // (gx * gy)))
+            # φ>0: geometric ramp (1, 2, 4, …, k) bounds the speculative
+            # overshoot by the last round (the scalar path's predictive
+            # sizing needs a scalar deviation model; the per-bin max has
+            # none as cheap — see ROADMAP open items). φ=0 processes
+            # every pending tile anyway → full-size rounds, zero waste.
+            size = 1 if phi > 0.0 else k
+            pos, stop = 0, False
+            while (pos < len(order) and not stop
+                   and not (phi > 0.0 and bound <= phi)):
+                batch = order[pos:pos + min(size, k)]
+                pos += len(batch)
+                size = min(size * 2, k)
+                contribs, payload = index.read_batch_heatmap(
+                    batch, window, attr, (bx, by))
+                n_used = 0
+                for t, (cnt_b, s_b, mn_b, mx_b) in zip(batch, contribs):
+                    if phi > 0.0 and bound <= phi:
+                        stop = True
+                        break
+                    acc.fold_exact(t, cnt_b, s_b, mn_b, mx_b)
+                    n_used += 1
+                    processed += 1
+                    values, lo, hi, bin_bound, bound = acc.interval()
+                # refinement applies to exactly the folded prefix →
+                # index evolution identical to the sequential reference
+                index.apply_batch(payload, n_used, [True] * n_used)
+
+    io_delta = index.ds.stats.delta(io_before)
+    return HeatmapResult(
+        agg=agg, attr=attr, bins=(bx, by),
+        values=np.asarray(values, np.float64),
+        lo=np.asarray(lo, np.float64), hi=np.asarray(hi, np.float64),
+        bin_bound=np.asarray(bin_bound, np.float64), bound=float(bound),
+        exact=not acc.pending, tiles_full=n_full, tiles_partial=n_partial,
+        tiles_processed=processed, objects_read=io_delta.rows_read,
+        read_calls=io_delta.read_calls,
+        batch_rounds=index.adapt_stats.batch_rounds - rounds_before,
+        eval_time_s=time.perf_counter() - t_start)
+
+
+def evaluate_heatmap_oracle(index: TileIndex, window, agg: str, attr: str,
+                            bins: Tuple[int, int]) -> np.ndarray:
+    """Per-bin ground truth straight off the raw arrays (tests only).
+
+    Returns a float64 ``(bx*by,)`` vector; empty bins are 0 for
+    count/sum/mean and ±inf for min/max (matching
+    :class:`~repro.core.bounds.HeatmapResult`).
+    """
+    from ..kernels.ref import window_bin_ids_np
+    bx, by = bins
+    nbins = bx * by
+    ds = index.ds
+    m, cid = window_bin_ids_np(ds.x, ds.y, window, bx, by)
+    vals = ds.read_all_unaccounted(attr)
+    out = np.zeros(nbins, np.float64)
+    if agg == "min":
+        out[:] = np.inf
+    elif agg == "max":
+        out[:] = -np.inf
+    for b in range(nbins):
+        sel = vals[m & (cid == b)]
+        if agg == "count":
+            out[b] = float((m & (cid == b)).sum())
+        elif sel.size:
+            out[b] = {"sum": lambda v: v.sum(dtype=np.float64),
+                      "mean": lambda v: v.mean(dtype=np.float64),
+                      "min": lambda v: v.min(),
+                      "max": lambda v: v.max()}[agg](sel)
+    return out
 
 
 def evaluate_oracle(index: TileIndex, window, agg: str,

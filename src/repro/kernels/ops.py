@@ -27,7 +27,8 @@ import numpy as np
 from . import ref
 from .window_agg import window_agg_pallas, LANES, DEFAULT_BLOCK_ROWS
 from .bin_agg import bin_agg_pallas
-from .segment_agg import segment_window_agg_pallas, segment_bin_agg_pallas
+from .segment_agg import (segment_window_agg_pallas, segment_bin_agg_pallas,
+                          segment_window_bin_agg_pallas)
 
 
 def default_backend() -> str:
@@ -258,6 +259,47 @@ def segment_bin_agg(xs, ys, vals, boundaries, bboxes, *, gx, gy,
         jnp.asarray(n, jnp.int32), n_seg, gx, gy, backend, interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("n_seg", "bx", "by", "backend",
+                                             "interpret"))
+def _segment_window_bin_agg_flat(xs, ys, vals, sids, window, n, n_seg, bx,
+                                 by, backend, interpret):
+    if backend == "jnp":
+        valid = jnp.arange(xs.shape[0]) < n
+        return ref.segment_window_bin_agg_ref(xs, ys, vals, sids, window,
+                                              (bx, by), valid, n_seg)
+    xs2, ys2, vs2, sid2, valid2 = pack2d(xs, ys, vals, sids, n=xs.shape[0])
+    valid2 = valid2 * (jnp.arange(valid2.size).reshape(valid2.shape) <
+                       n).astype(jnp.int8)
+    return segment_window_bin_agg_pallas(xs2, ys2, vs2, sid2, valid2, window,
+                                         n_seg=n_seg, bx=bx, by=by,
+                                         interpret=interpret)
+
+
+def segment_window_bin_agg(xs, ys, vals, boundaries, window, *, bx, by,
+                           backend=None, interpret=True):
+    """Per-segment, per-window-bin (count, sum, min, max) — the heatmap
+    primitive: one packed call bins every segment of the concatenated
+    stream by the SAME ``bx × by`` grid over the (finite, closed) query
+    window, in-window objects only. Returns ``(S, bx*by, 4)``;
+    bin id = by_row*bx + bx_col. Backend semantics as in
+    :func:`segment_window_agg` ("np" ⇒ float64 host mirror, bit-for-bit
+    the sequential per-tile heatmap path).
+    """
+    backend = backend or default_backend()
+    boundaries = np.asarray(boundaries, np.int64)
+    if backend == "np":
+        return ref.segment_window_bin_agg_np(xs, ys, vals, boundaries,
+                                             window, bx, by)
+    n_seg = len(boundaries) - 1
+    n = int(boundaries[-1])
+    sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
+    xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
+    return _segment_window_bin_agg_flat(
+        jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(vals),
+        jnp.asarray(sids), jnp.asarray(window, jnp.float32),
+        jnp.asarray(n, jnp.int32), n_seg, bx, by, backend, interpret)
+
+
 def window_count(xs, ys, window, *, n=None, backend=None):
     """Count of objects in window (axis attributes only — no file access)."""
     agg = window_agg(xs, ys, jnp.zeros_like(jnp.asarray(xs, jnp.float32)),
@@ -272,4 +314,5 @@ def window_mask_np(xs, ys, window):
 
 
 __all__ = ["window_agg", "bin_agg", "segment_window_agg", "segment_bin_agg",
-           "window_count", "window_mask_np", "pack2d", "default_backend"]
+           "segment_window_bin_agg", "window_count", "window_mask_np",
+           "pack2d", "default_backend"]

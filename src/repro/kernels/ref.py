@@ -103,6 +103,40 @@ def segment_window_agg_ref(xs, ys, vals, sids, window, valid, n_seg):
     return jnp.stack(out)
 
 
+def segment_window_bin_agg_ref(xs, ys, vals, sids, window, grid, valid,
+                               n_seg):
+    """Per-segment, per-bin aggregates over the WINDOW's own bx×by grid.
+
+    The heatmap primitive: unlike :func:`segment_bin_agg_ref` (each
+    segment binned by its own bbox, every object owned), here every
+    segment is binned by ONE shared grid laid over the query window and
+    only objects inside the closed window contribute. Returns float32
+    ``(n_seg, bx*by, 4)``; bin id = by_row * bx + bx_col.
+    """
+    bx, by = grid
+    m = window_mask(xs, ys, window, valid)
+    x0, y0 = window[0], window[1]
+    cw = jnp.maximum((window[2] - window[0]) / bx, 1e-30)
+    ch = jnp.maximum((window[3] - window[1]) / by, 1e-30)
+    cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32), 0, bx - 1)
+    cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32), 0, by - 1)
+    cid = cy * bx + cx
+    vm = vals.astype(jnp.float32)
+    out = []
+    for s in range(n_seg):
+        ms = m & (sids == s)
+        cells = []
+        for c in range(bx * by):
+            mc = ms & (cid == c)
+            cnt = jnp.sum(mc, dtype=jnp.float32)
+            total = jnp.sum(jnp.where(mc, vm, 0.0), dtype=jnp.float32)
+            mn = jnp.min(jnp.where(mc, vm, jnp.inf))
+            mx = jnp.max(jnp.where(mc, vm, -jnp.inf))
+            cells.append(jnp.stack([cnt, total, mn, mx]))
+        out.append(jnp.stack(cells))
+    return jnp.stack(out)
+
+
 def segment_bin_agg_ref(xs, ys, vals, sids, bboxes, grid, valid, n_seg):
     """Per-segment, per-cell aggregates; segment s binned by bboxes[s].
 
@@ -185,6 +219,59 @@ def segment_bin_agg_np(xs, ys, vals, boundaries, bboxes, gx, gy):
     cy = np.clip(np.floor((ys - bboxes[sid, 1]) / ch[sid]).astype(np.int64),
                  0, gy - 1)
     key = sid * k + cy * gx + cx
+    order = np.argsort(key, kind="stable")
+    vs_sorted = vals[order]
+    cell_bounds = np.searchsorted(key[order], np.arange(n_seg * k + 1))
+    out = np.empty((n_seg * k, 4), np.float64)
+    for c in range(n_seg * k):
+        a, b = cell_bounds[c], cell_bounds[c + 1]
+        if b > a:
+            seg = vs_sorted[a:b]
+            out[c] = (b - a, seg.sum(dtype=np.float64), seg.min(), seg.max())
+        else:
+            out[c] = (0, 0.0, np.inf, -np.inf)
+    return out.reshape(n_seg, k, 4)
+
+
+def window_bin_ids_np(xs, ys, window, bx, by):
+    """Host binning rule of a heatmap window: ``(in_window_mask, bin_id)``.
+
+    The ONE formula both the pending-tile per-bin counts (axis index, no
+    file I/O) and the processed per-bin contributions
+    (:func:`segment_window_bin_agg_np`) are derived from — they must
+    agree bit-for-bit or the grouped accumulator's count cross-check
+    fails. Bin id = by_row * bx + bx_col; objects on the closed max edge
+    are clipped into the last bin (every selected object lands in
+    exactly one bin).
+    """
+    x0, y0, x1, y1 = (float(window[0]), float(window[1]),
+                      float(window[2]), float(window[3]))
+    m = (xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1)
+    cw = max((x1 - x0) / bx, 1e-30)
+    ch = max((y1 - y0) / by, 1e-30)
+    cx = np.clip(np.floor((xs - x0) / cw).astype(np.int64), 0, bx - 1)
+    cy = np.clip(np.floor((ys - y0) / ch).astype(np.int64), 0, by - 1)
+    return m, cy * bx + cx
+
+
+def segment_window_bin_agg_np(xs, ys, vals, boundaries, window, bx, by):
+    """Per-contiguous-segment, per-window-bin aggregates (f64 ``(S,K,4)``).
+
+    Host mirror of :func:`segment_window_bin_agg_ref` in the contiguous
+    layout. Each (segment, bin) cell's sum accumulates the cell's own
+    sorted slice in float64 — per-cell arithmetic is independent of the
+    batch composition, so a k-segment call is bit-for-bit the
+    concatenation of k single-segment calls (the sequential heatmap
+    reference path).
+    """
+    xs, ys = np.asarray(xs), np.asarray(ys)
+    vals = np.asarray(vals, np.float32)
+    n_seg = len(boundaries) - 1
+    k = bx * by
+    m, cid = window_bin_ids_np(xs, ys, window, bx, by)
+    sid = np.repeat(np.arange(n_seg), np.diff(boundaries))
+    # out-of-window objects go to a sentinel key past every real cell
+    key = np.where(m, sid * k + cid, n_seg * k)
     order = np.argsort(key, kind="stable")
     vs_sorted = vals[order]
     cell_bounds = np.searchsorted(key[order], np.arange(n_seg * k + 1))

@@ -9,7 +9,11 @@ in a single kernel invocation,
   exact in-window contribution of every tile in the batch; and
 - per-segment, per-cell aggregates over each tile's own ``gx × gy`` split
   (``segment_bin_agg_pallas``) — the child metadata of every tile split in
-  the batch.
+  the batch; and
+- per-segment, per-cell aggregates over ONE shared ``bx × by`` grid laid
+  over the query window, in-window objects only
+  (``segment_window_bin_agg_pallas``) — every tile's exact per-bin heatmap
+  contribution for a refinement round.
 
 Both reuse the ``pack2d`` block layout of :mod:`repro.kernels.window_agg`
 (flat object arrays padded to ``(rows, 128)`` f32 planes + validity plane)
@@ -106,6 +110,89 @@ def segment_window_agg_pallas(xs2d, ys2d, vals2d, sid2d, valid2d, window,
     mn = jnp.min(partial[:, :, 2], axis=0)
     mx = jnp.max(partial[:, :, 3], axis=0)
     return jnp.stack([cnt, s, mn, mx], axis=-1)
+
+
+def _make_segment_window_bin_agg_kernel(n_seg: int, bx: int, by: int):
+    k = bx * by
+
+    def kernel(win_ref, x_ref, y_ref, v_ref, sid_ref, valid_ref, out_ref):
+        x0 = win_ref[0, 0]
+        y0 = win_ref[0, 1]
+        x1 = win_ref[0, 2]
+        y1 = win_ref[0, 3]
+        xs = x_ref[...]
+        ys = y_ref[...]
+        vs = v_ref[...]
+        sid = sid_ref[...]
+        valid = valid_ref[...] != 0
+        inw = (xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1) & valid
+        # ONE shared bin grid over the window (unlike segment_bin_agg's
+        # per-segment bboxes): bin ids are computed once, outside the
+        # segment unroll
+        cw = jnp.maximum((x1 - x0) / bx, 1e-30)
+        ch = jnp.maximum((y1 - y0) / by, 1e-30)
+        cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32), 0, bx - 1)
+        cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32), 0, by - 1)
+        cid = cy * bx + cx
+        for s in range(n_seg):  # static unroll over segments…
+            ms = inw & (sid == s)
+            for c in range(k):  # …and window bins: S·K masked reductions
+                m = ms & (cid == c)
+                out_ref[0, s * k + c, 0] = jnp.sum(m.astype(jnp.float32))
+                out_ref[0, s * k + c, 1] = jnp.sum(jnp.where(m, vs, 0.0))
+                out_ref[0, s * k + c, 2] = jnp.min(jnp.where(m, vs, jnp.inf))
+                out_ref[0, s * k + c, 3] = jnp.max(
+                    jnp.where(m, vs, -jnp.inf))
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_seg", "bx", "by", "block_rows",
+                                    "interpret"))
+def segment_window_bin_agg_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
+                                  window, *, n_seg, bx, by,
+                                  block_rows=DEFAULT_BLOCK_ROWS,
+                                  interpret=True):
+    """Per-segment, per-window-bin aggregation — the heatmap primitive.
+
+    One invocation gives, for every segment (= tile) of a refinement
+    batch, the ``(count, sum, min, max)`` of its in-window objects in
+    every cell of the ``bx × by`` grid laid over the (finite, closed)
+    query window. Args mirror :func:`segment_window_agg_pallas`.
+    Returns float32 ``(n_seg, bx*by, 4)``; bin id = by_row*bx + bx_col;
+    empty selection ⇒ (0, 0, +inf, -inf).
+    """
+    k = bx * by
+    assert n_seg <= MAX_SEGMENTS, n_seg
+    assert n_seg * k <= MAX_UNROLL, (n_seg, bx, by)
+    rows = xs2d.shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = rows // block_rows
+    win2d = window.reshape(1, 4).astype(jnp.float32)
+    valid2d = valid2d.astype(jnp.int8)
+
+    partial = pl.pallas_call(
+        _make_segment_window_bin_agg_kernel(n_seg, bx, by),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda i: (0, 0)),           # window (broadcast)
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_seg * k, 4), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid, n_seg * k, 4), jnp.float32),
+        interpret=interpret,
+    )(win2d, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
+      vals2d.astype(jnp.float32), sid2d.astype(jnp.float32), valid2d)
+
+    cnt = jnp.sum(partial[:, :, 0], axis=0)
+    s = jnp.sum(partial[:, :, 1], axis=0)
+    mn = jnp.min(partial[:, :, 2], axis=0)
+    mx = jnp.max(partial[:, :, 3], axis=0)
+    return jnp.stack([cnt, s, mn, mx], axis=-1).reshape(n_seg, k, 4)
 
 
 def _make_segment_bin_agg_kernel(n_seg: int, gx: int, gy: int):

@@ -1,0 +1,189 @@
+"""Heatmap (2-D group-by) queries: per-bin guarantees + batched pipeline.
+
+The heatmap path must honor the same guarantees as scalar queries,
+per bin: φ=0 equals the per-bin oracle, every per-bin [lo, hi] contains
+its oracle value, the returned query-level bound ≤ φ (or the answer is
+exact), and the batched refinement path is indistinguishable from the
+sequential per-tile reference in everything but cost — same per-bin
+results, same index evolution, fewer raw-file read calls than tiles
+processed.
+"""
+import numpy as np
+import pytest
+
+from repro.core import AQPEngine, IndexConfig
+from repro.data import make_synthetic_dataset
+from repro.data.synthetic import exploration_path
+
+AGGS = ["count", "sum", "mean", "min", "max"]
+
+
+def small_engine(n=40_000, seed=5, **kw):
+    ds = make_synthetic_dataset(n=n, seed=seed)
+    cfg = IndexConfig(grid0=(8, 8), min_split_count=64,
+                      init_metadata_attrs=("a0",), **kw)
+    return AQPEngine(ds, cfg)
+
+
+@pytest.mark.parametrize("agg", AGGS)
+def test_exact_heatmap_equals_oracle(agg):
+    eng = small_engine(seed=11)
+    wins = exploration_path(eng.dataset, n_queries=3, target_objects=5000)
+    for w in wins:
+        r = eng.heatmap(w, agg, "a0", bins=(4, 4), phi=0.0)
+        truth = eng.heatmap_oracle(w, agg, "a0", bins=(4, 4))
+        assert r.exact
+        fin = np.isfinite(truth)
+        np.testing.assert_array_equal(np.isfinite(r.values), fin)
+        np.testing.assert_allclose(r.values[fin], truth[fin],
+                                   rtol=1e-5, atol=1e-3)
+        assert r.grid().shape == (4, 4)
+
+
+@pytest.mark.parametrize("agg", ["sum", "mean", "min", "max"])
+@pytest.mark.parametrize("phi", [0.05, 0.2])
+def test_per_bin_bound_guarantees(agg, phi):
+    eng = small_engine(seed=13)
+    wins = exploration_path(eng.dataset, n_queries=4, target_objects=4000)
+    for w in wins:
+        r = eng.heatmap(w, agg, "a0", bins=(3, 3), phi=phi)
+        truth = eng.heatmap_oracle(w, agg, "a0", bins=(3, 3))
+        fin = np.isfinite(truth)
+        # P2 per bin: every CI contains its oracle value
+        assert (r.lo[fin] - 1e-3 <= truth[fin]).all(), (agg, phi)
+        assert (truth[fin] <= r.hi[fin] + 1e-3).all(), (agg, phi)
+        # P3: the query-level bound met the constraint (or exact)
+        assert r.exact or r.bound <= phi + 1e-9
+        # P3 per bin: observed error within the reported per-bin bound
+        err = np.abs(r.values[fin] - truth[fin])
+        cap = r.bin_bound[fin] * np.maximum(np.abs(r.values[fin]), 1e-12)
+        assert (err <= cap + 1e-3).all(), (agg, phi)
+
+
+@pytest.mark.parametrize("agg", ["sum", "mean", "min"])
+@pytest.mark.parametrize("phi", [0.0, 0.05])
+def test_batched_matches_sequential_heatmap(agg, phi):
+    e_seq = small_engine(seed=5)
+    e_bat = small_engine(seed=5)
+    wins = exploration_path(e_seq.dataset, n_queries=3, target_objects=4000)
+    for w in wins:
+        rs = e_seq.heatmap(w, agg, "a0", bins=(4, 4), phi=phi,
+                           sequential=True)
+        rb = e_bat.heatmap(w, agg, "a0", bins=(4, 4), phi=phi)
+        # counts bit-for-bit; sums/bounds to f64 identity (the host
+        # mirror's per-cell arithmetic is batch-composition invariant)
+        assert rb.tiles_processed == rs.tiles_processed
+        assert rb.tiles_full == rs.tiles_full
+        assert rb.tiles_partial == rs.tiles_partial
+        assert rb.exact == rs.exact
+        np.testing.assert_allclose(rb.values, rs.values, rtol=1e-12,
+                                   atol=1e-9)
+        np.testing.assert_allclose(rb.lo, rs.lo, rtol=1e-12, atol=1e-9)
+        np.testing.assert_allclose(rb.hi, rs.hi, rtol=1e-12, atol=1e-9)
+        assert rb.bound == pytest.approx(rs.bound, rel=1e-12, abs=1e-12)
+    # identical index evolution across the whole workload
+    i_seq, i_bat = e_seq.index, e_bat.index
+    assert i_bat.n_tiles == i_seq.n_tiles
+    n = i_seq.n_tiles
+    assert np.array_equal(i_bat.perm, i_seq.perm)
+    assert np.array_equal(i_bat.offset[:n], i_seq.offset[:n])
+    assert np.array_equal(i_bat.count[:n], i_seq.count[:n])
+    assert np.array_equal(i_bat.active[:n], i_seq.active[:n])
+    assert np.array_equal(i_bat.meta_valid["a0"][:n],
+                          i_seq.meta_valid["a0"][:n])
+    np.testing.assert_allclose(i_bat.meta_sum["a0"][:n],
+                               i_seq.meta_sum["a0"][:n], rtol=1e-12)
+    i_seq.check_invariants("a0")
+    i_bat.check_invariants("a0")
+
+
+def test_heatmap_amortizes_reads():
+    """Batched heatmap: one gathered read per round, fewer read calls
+    than tiles processed (the acceptance criterion)."""
+    e_seq = small_engine(seed=11)
+    e_bat = small_engine(seed=11)
+    w = exploration_path(e_seq.dataset, n_queries=1,
+                         target_objects=20_000)[0]
+    rs = e_seq.heatmap(w, "mean", "a0", bins=(8, 8), phi=0.0,
+                       sequential=True)
+    rb = e_bat.heatmap(w, "mean", "a0", bins=(8, 8), phi=0.0)
+    assert rs.tiles_processed == rb.tiles_processed > 8
+    # sequential reference: one read call per tile
+    assert rs.read_calls == rs.tiles_processed
+    assert rb.read_calls == rb.batch_rounds < rb.tiles_processed
+    # φ=0: full-size rounds, no speculative overshoot
+    assert rb.objects_read == rs.objects_read
+
+
+def test_heatmap_count_is_exact_and_free_of_file_io():
+    """Per-bin counts come from the axis index: a count heatmap with
+    φ>0 answers exactly without touching the raw file."""
+    eng = small_engine(seed=17)
+    w = exploration_path(eng.dataset, n_queries=1, target_objects=8000)[0]
+    r = eng.heatmap(w, "count", "a0", bins=(5, 5), phi=0.01)
+    truth = eng.heatmap_oracle(w, "count", "a0", bins=(5, 5))
+    np.testing.assert_array_equal(r.values, truth)
+    assert r.bound == 0.0
+    assert r.objects_read == 0 and r.read_calls == 0
+    np.testing.assert_array_equal(r.lo, r.hi)
+
+
+def test_heatmap_adapts_index_for_repeats():
+    """The first exact heatmap refines the index; repeating it answers
+    more from metadata (fewer objects read), like scalar queries."""
+    eng = small_engine(seed=23)
+    w = exploration_path(eng.dataset, n_queries=1, target_objects=15_000)[0]
+    first = eng.heatmap(w, "sum", "a0", bins=(4, 4), phi=0.0)
+    second = eng.heatmap(w, "sum", "a0", bins=(4, 4), phi=0.0)
+    assert first.objects_read > 0
+    assert second.objects_read < first.objects_read
+    # and an approximate repeat needs even less
+    third = eng.heatmap(w, "sum", "a0", bins=(4, 4), phi=0.05)
+    assert third.objects_read <= second.objects_read
+
+
+def test_heatmap_mixed_with_scalar_queries_shares_index_and_trace():
+    """Heatmaps ride the same index/data plane as scalar queries: the
+    refinement one mode pays for benefits the other, and the engine
+    trace aggregates both result kinds."""
+    eng = small_engine(seed=29)
+    w = exploration_path(eng.dataset, n_queries=1, target_objects=12_000)[0]
+    r_scalar = eng.query(w, "sum", "a0", phi=0.0)
+    # per-bin sums must recombine to the scalar answer
+    r_heat = eng.heatmap(w, "sum", "a0", bins=(4, 4), phi=0.0)
+    np.testing.assert_allclose(r_heat.values.sum(), r_scalar.value,
+                               rtol=1e-9)
+    # heatmap refinement benefits the next scalar query on the window
+    # (shared index), and vice versa
+    r_scalar2 = eng.query(w, "sum", "a0", phi=0.0)
+    assert r_scalar2.objects_read < r_scalar.objects_read
+    tot = eng.trace.totals()
+    assert tot["queries"] == 3
+    assert tot["total_read_calls"] == (r_scalar.read_calls
+                                       + r_heat.read_calls
+                                       + r_scalar2.read_calls)
+    assert tot["total_batch_rounds"] == (r_scalar.batch_rounds
+                                         + r_heat.batch_rounds
+                                         + r_scalar2.batch_rounds)
+    eng.index.check_invariants("a0")
+
+
+def test_heatmap_second_attribute_and_batch_k_knob():
+    """Heatmaps on a non-initialized attribute stay sound; batch_k
+    changes only the cost, never the per-bin answers."""
+    results = {}
+    for k in (1, 8):
+        eng = small_engine(seed=31)
+        w = exploration_path(eng.dataset, n_queries=1,
+                             target_objects=8000)[0]
+        results[k] = eng.heatmap(w, "mean", "a2", bins=(3, 3), phi=0.0,
+                                 batch_k=k)
+        truth = eng.heatmap_oracle(w, "mean", "a2", bins=(3, 3))
+        fin = np.isfinite(truth)
+        np.testing.assert_allclose(results[k].values[fin], truth[fin],
+                                   rtol=1e-5, atol=1e-3)
+        eng.index.check_invariants("a2")
+    assert results[1].batch_rounds == results[1].tiles_processed
+    assert results[8].batch_rounds < results[1].batch_rounds
+    np.testing.assert_allclose(results[8].values, results[1].values,
+                               rtol=1e-12)

@@ -197,6 +197,55 @@ def test_segment_bin_agg_backends_agree(lens, grid):
         np.testing.assert_allclose(a[s], want, rtol=1e-4, atol=2e-3)
 
 
+@pytest.mark.parametrize("lens", [[1, 300], [0, 37, 500, 128, 3]])
+@pytest.mark.parametrize("grid", [(2, 2), (4, 3)])
+def test_segment_window_bin_agg_backends_agree(lens, grid):
+    bx, by = grid
+    xs, ys, vs, bounds = _segments(lens)
+    win = np.array([15, 25, 80, 75], np.float32)
+    a = np.asarray(ops.segment_window_bin_agg(xs, ys, vs, bounds, win,
+                                              bx=bx, by=by, backend="np"))
+    b = np.asarray(ops.segment_window_bin_agg(xs, ys, vs, bounds, win,
+                                              bx=bx, by=by, backend="jnp"))
+    c = np.asarray(ops.segment_window_bin_agg(xs, ys, vs, bounds, win,
+                                              bx=bx, by=by,
+                                              backend="pallas"))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=2e-3)
+    np.testing.assert_allclose(b, c, rtol=1e-5, atol=2e-3)
+    np.testing.assert_array_equal(a[:, :, 0], b[:, :, 0])  # counts exact
+    np.testing.assert_array_equal(b[:, :, 0], c[:, :, 0])
+    # per-segment bins partition the segment's in-window selection, and
+    # summing a segment's bins reproduces its window_agg
+    m = (xs >= win[0]) & (xs <= win[2]) & (ys >= win[1]) & (ys <= win[3])
+    for s in range(len(lens)):
+        sl = slice(bounds[s], bounds[s + 1])
+        assert a[s, :, 0].sum() == m[sl].sum()
+        want = np.asarray(ops.segment_window_agg(
+            xs[sl], ys[sl], vs[sl], [0, lens[s]], win, backend="np"))[0]
+        np.testing.assert_allclose(a[s, :, 1].sum(), want[1],
+                                   rtol=1e-9, atol=1e-9)
+        if m[sl].any():
+            assert a[s, :, 2].min() == want[2]
+            assert a[s, :, 3].max() == want[3]
+
+
+def test_segment_window_bin_agg_batch_composition_invariant():
+    """k-segment packed call == concatenation of k single-segment calls
+    bit-for-bit (the np mirror's per-cell slice arithmetic is independent
+    of batch composition — what makes batched == sequential exact)."""
+    lens = [64, 0, 129, 1000]
+    xs, ys, vs, bounds = _segments(lens)
+    win = np.array([10, 10, 90, 90], np.float32)
+    packed = np.asarray(ops.segment_window_bin_agg(
+        xs, ys, vs, bounds, win, bx=3, by=3, backend="np"))
+    for s in range(len(lens)):
+        sl = slice(bounds[s], bounds[s + 1])
+        solo = np.asarray(ops.segment_window_bin_agg(
+            xs[sl], ys[sl], vs[sl], [0, lens[s]], win, bx=3, by=3,
+            backend="np"))[0]
+        np.testing.assert_array_equal(packed[s], solo)
+
+
 def test_segment_window_agg_everywhere_is_full_segment():
     """An all-covering window yields full-segment (enrichment) stats."""
     xs, ys, vs, bounds = _segments([64, 0, 129])

@@ -1,0 +1,176 @@
+"""Randomized differential harness: P1–P6 over random query/heatmap
+sessions, across storage modes and refinement pipelines.
+
+Each session draws a random sequence of scalar and heatmap queries
+(random windows, aggregates, φ, bin grids, attributes) and runs it twice
+— once through the sequential per-tile reference path, once through the
+batched pipeline — against the same dataset, asserting after every step:
+
+- P2/P3: the oracle lies inside every reported CI (scalar and per-bin),
+  and the returned bound honors φ (or the answer is exact);
+- differential: the batched path matches the sequential reference on
+  values/lo/hi/bound (f64 identity) and on tile-processing counts;
+- amortization: batched refinement never issues more read calls than it
+  processes tiles;
+
+and at session end: identical index evolution (perm, tile table,
+metadata) plus the P5 structural invariants, on both engines.
+
+Runs with hypothesis when installed (randomized seeds, widened CI mode);
+degrades to a fixed seeded sweep otherwise.
+"""
+import numpy as np
+import pytest
+
+try:  # optional: random seeds + example shrinking when present
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import AQPEngine, IndexConfig
+from repro.data import make_synthetic_dataset
+
+AGGS = ["count", "sum", "mean", "min", "max"]
+PHIS = [0.0, 0.02, 0.1]
+ATTRS = ["a0", "a1", "a2"]
+N_ROWS = 24_000
+
+# datasets are pure and expensive to format (csv mode) — cache per
+# storage; every session builds fresh engines (index state is per-engine)
+_DS = {}
+
+
+def dataset(storage: str):
+    if storage not in _DS:
+        _DS[storage] = make_synthetic_dataset(
+            n=N_ROWS, n_columns=3, seed=101, storage=storage)
+    return _DS[storage]
+
+
+def fresh_engine(ds):
+    return AQPEngine(ds, IndexConfig(grid0=(6, 6), min_split_count=64,
+                                     init_metadata_attrs=("a0",)))
+
+
+def random_window(rng, ds):
+    x0d, y0d, x1d, y1d = ds.domain()
+    wx = rng.uniform(0.05, 0.5) * (x1d - x0d)
+    wy = rng.uniform(0.05, 0.5) * (y1d - y0d)
+    x0 = rng.uniform(x0d, x1d - wx)
+    y0 = rng.uniform(y0d, y1d - wy)
+    return (float(x0), float(y0), float(x0 + wx), float(y0 + wy))
+
+
+def _check_scalar(rs, rb, truth, phi):
+    assert rb.tiles_processed == rs.tiles_processed
+    assert rb.exact == rs.exact
+    assert rb.value == pytest.approx(rs.value, rel=1e-12, abs=1e-9)
+    assert rb.lo == pytest.approx(rs.lo, rel=1e-12, abs=1e-9)
+    assert rb.hi == pytest.approx(rs.hi, rel=1e-12, abs=1e-9)
+    assert rb.bound == pytest.approx(rs.bound, rel=1e-12, abs=1e-12)
+    if np.isfinite(truth):
+        assert rb.lo - 1e-3 <= truth <= rb.hi + 1e-3        # P2
+        assert rb.exact or rb.bound <= phi + 1e-9           # P3
+        err = abs(rb.value - truth)
+        assert err <= rb.bound * max(abs(rb.value), 1e-12) + 1e-3
+    if phi == 0.0:
+        assert rb.exact                                     # P1
+        if np.isfinite(truth):
+            np.testing.assert_allclose(rb.value, truth, rtol=1e-5,
+                                       atol=1e-3)
+
+
+def _check_heatmap(rs, rb, truth, phi):
+    assert rb.tiles_processed == rs.tiles_processed
+    assert rb.exact == rs.exact
+    np.testing.assert_allclose(rb.values, rs.values, rtol=1e-12, atol=1e-9)
+    np.testing.assert_allclose(rb.lo, rs.lo, rtol=1e-12, atol=1e-9)
+    np.testing.assert_allclose(rb.hi, rs.hi, rtol=1e-12, atol=1e-9)
+    assert rb.bound == pytest.approx(rs.bound, rel=1e-12, abs=1e-12)
+    fin = np.isfinite(truth)
+    assert (rb.lo[fin] - 1e-3 <= truth[fin]).all()          # P2 per bin
+    assert (truth[fin] <= rb.hi[fin] + 1e-3).all()
+    assert rb.exact or rb.bound <= phi + 1e-9               # P3
+    err = np.abs(rb.values[fin] - truth[fin])
+    cap = rb.bin_bound[fin] * np.maximum(np.abs(rb.values[fin]), 1e-12)
+    assert (err <= cap + 1e-3).all()
+    if phi == 0.0:
+        assert rb.exact                                     # P1 per bin
+        np.testing.assert_allclose(rb.values[fin], truth[fin], rtol=1e-5,
+                                   atol=1e-3)
+    # amortization: batched rounds gather reads
+    assert rb.read_calls <= rb.tiles_processed
+    assert rb.read_calls == rb.batch_rounds
+
+
+def run_session(op_seed: int, storage: str, n_ops: int = 5):
+    ds = dataset(storage)
+    e_seq, e_bat = fresh_engine(ds), fresh_engine(ds)
+    rng = np.random.default_rng(op_seed)
+    attrs_used = {"a0"}
+    for _ in range(n_ops):
+        w = random_window(rng, ds)
+        agg = AGGS[rng.integers(len(AGGS))]
+        phi = PHIS[rng.integers(len(PHIS))]
+        attr = ATTRS[rng.integers(len(ATTRS))]
+        attrs_used.add(attr)
+        if rng.random() < 0.5:
+            rs = e_seq.query(w, agg, attr, phi=phi, sequential=True)
+            rb = e_bat.query(w, agg, attr, phi=phi)
+            _check_scalar(rs, rb, e_bat.oracle(w, agg, attr), phi)
+        else:
+            bins = (int(rng.integers(2, 5)), int(rng.integers(2, 5)))
+            rs = e_seq.heatmap(w, agg, attr, bins=bins, phi=phi,
+                               sequential=True)
+            rb = e_bat.heatmap(w, agg, attr, bins=bins, phi=phi)
+            _check_heatmap(rs, rb,
+                           e_bat.heatmap_oracle(w, agg, attr, bins=bins),
+                           phi)
+    # identical index evolution (the differential core of the harness)
+    i_seq, i_bat = e_seq.index, e_bat.index
+    assert i_bat.n_tiles == i_seq.n_tiles
+    n = i_seq.n_tiles
+    assert np.array_equal(i_bat.perm, i_seq.perm)
+    assert np.array_equal(i_bat.offset[:n], i_seq.offset[:n])
+    assert np.array_equal(i_bat.count[:n], i_seq.count[:n])
+    assert np.array_equal(i_bat.active[:n], i_seq.active[:n])
+    for a in attrs_used:
+        assert np.array_equal(i_bat.meta_valid[a][:n],
+                              i_seq.meta_valid[a][:n])
+        np.testing.assert_allclose(i_bat.meta_sum[a][:n],
+                                   i_seq.meta_sum[a][:n], rtol=1e-12)
+        # P5 on both engines
+        i_seq.check_invariants(a)
+        i_bat.check_invariants(a)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(op_seed=st.integers(0, 2**20),
+           storage=st.sampled_from(["array", "csv"]))
+    def test_random_sessions(op_seed, storage):
+        run_session(op_seed, storage)
+else:
+    @pytest.mark.parametrize("storage", ["array", "csv"])
+    @pytest.mark.parametrize("op_seed", [0, 1, 2])
+    def test_random_sessions(op_seed, storage):
+        run_session(op_seed, storage)
+
+
+def test_p6_heatmap_approx_reads_no_more_than_exact():
+    """P6 for heatmaps: a φ>0 session on a fresh index never reads more
+    objects than the exact session."""
+    for storage in ("array", "csv"):
+        ds = dataset(storage)
+        e_exact, e_aprx = fresh_engine(ds), fresh_engine(ds)
+        rng = np.random.default_rng(7)
+        wins = [random_window(rng, ds) for _ in range(4)]
+        reads_exact = sum(
+            e_exact.heatmap(w, "mean", "a0", bins=(3, 3),
+                            phi=0.0).objects_read for w in wins)
+        reads_aprx = sum(
+            e_aprx.heatmap(w, "mean", "a0", bins=(3, 3),
+                           phi=0.1).objects_read for w in wins)
+        assert reads_aprx <= reads_exact
