@@ -20,8 +20,21 @@ N_ROWS = 4_000_000
 N_QUERIES = 50
 TARGET_OBJECTS = 20_000
 SEED = 7
+SMOKE = False
 
 _DS_CACHE = {}
+
+
+def configure_smoke():
+    """Shrink the workload to a tiny-n CI smoke (same code paths, seconds
+    not minutes): ``benchmarks.run --smoke`` calls this BEFORE the
+    benchmark modules import their constants."""
+    global N_ROWS, N_QUERIES, TARGET_OBJECTS, SMOKE
+    N_ROWS = 120_000
+    N_QUERIES = 12
+    TARGET_OBJECTS = 2_000
+    SMOKE = True
+    _DS_CACHE.clear()
 
 
 def fresh_engine(seed=SEED, **kw):
@@ -37,12 +50,15 @@ def fresh_engine(seed=SEED, **kw):
     return AQPEngine(_DS_CACHE[seed], cfg)
 
 
-def workload(ds, n_queries=N_QUERIES, target=TARGET_OBJECTS):
+def workload(ds, n_queries=None, target=None):
+    # None ⇒ the module globals AT CALL TIME (so configure_smoke applies)
+    n_queries = N_QUERIES if n_queries is None else n_queries
+    target = TARGET_OBJECTS if target is None else target
     return exploration_path(ds, n_queries=n_queries, target_objects=target,
                             seed=11)
 
 
-def run_sequence(phi, agg="mean", attr="a0", n_queries=N_QUERIES):
+def run_sequence(phi, agg="mean", attr="a0", n_queries=None):
     eng = fresh_engine()
     wins = workload(eng.dataset, n_queries)
     times, reads, bounds = [], [], []
@@ -57,3 +73,21 @@ def run_sequence(phi, agg="mean", attr="a0", n_queries=N_QUERIES):
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def mixed_io_summary(tot) -> str:
+    """Attribute a session's I/O per query type from
+    ``EngineTrace.totals()``'s scalar/heatmap breakdown (+ the
+    speculative-rows accounting that makes predictive round sizing's
+    zero-overshoot measurable in BENCH output)."""
+    parts = [f"rows_read={tot['total_objects_read']}",
+             f"read_calls={tot['total_read_calls']}",
+             f"speculative_rows={tot['total_speculative_rows']}"]
+    for kind in ("scalar", "heatmap"):
+        if tot[f"{kind}_queries"]:
+            parts.append(
+                f"{kind}:q={tot[f'{kind}_queries']}"
+                f";rows={tot[f'{kind}_objects_read']}"
+                f";reads={tot[f'{kind}_read_calls']}"
+                f";spec={tot[f'{kind}_speculative_rows']}")
+    return ";".join(parts)

@@ -11,7 +11,7 @@ finer than bins and start answering from metadata alone.
 """
 from __future__ import annotations
 
-from .common import emit, fresh_engine, workload
+from .common import emit, fresh_engine, mixed_io_summary, workload
 
 BINS = (8, 8)
 N_QUERIES = 20
@@ -32,9 +32,11 @@ def main():
         half = len(eng.trace.results) // 2
         early = sum(r.objects_read for r in eng.trace.results[:half])
         late = sum(r.objects_read for r in eng.trace.results[half:])
+        # speculative_rows: rows read past the stopping point — 0 under
+        # predictive grouped round sizing (sum/mean), so any nonzero
+        # value here is a regression in the per-bin sizing bound
         emit(f"heatmap_{name}", tot["total_time_s"] * 1e6 / tot["queries"],
-             f"rows_read={tot['total_objects_read']};"
-             f"read_calls={tot['total_read_calls']};"
+             f"{mixed_io_summary(tot)};"
              f"batch_rounds={tot['total_batch_rounds']};"
              f"tiles_processed={tot['total_tiles_processed']};"
              f"rows_early_half={early};rows_late_half={late};"
@@ -45,7 +47,8 @@ def main():
     emit("heatmap_speedup", 0.0,
          f"exact_vs_phi5={s5:.2f}x;"
          f"reads_exact={out['exact']['total_objects_read']};"
-         f"reads_phi5={out['phi5']['total_objects_read']}")
+         f"reads_phi5={out['phi5']['total_objects_read']};"
+         f"speculative_phi5={out['phi5']['total_speculative_rows']}")
     return out
 
 

@@ -17,6 +17,7 @@ import numpy as np
 from repro.kernels import ops
 from repro.kernels.window_agg import DEFAULT_BLOCK_ROWS, LANES
 
+from . import common
 from .common import emit
 
 
@@ -29,9 +30,15 @@ def _time(fn, *args, reps=5, **kw):
     return (time.perf_counter() - t0) / reps
 
 
+def _klabel(n: int) -> str:
+    """Row label suffix derived from the actual element count, so smoke
+    rows can't be mistaken for full-size numbers in BENCH output."""
+    return f"{n // 1000}K" if n < 1_000_000 else f"{n // 1_000_000}M"
+
+
 def main():
     rng = np.random.default_rng(0)
-    n = 1_000_000
+    n = 200_000 if common.SMOKE else 1_000_000
     xs = rng.uniform(0, 1000, n).astype(np.float32)
     ys = rng.uniform(0, 1000, n).astype(np.float32)
     vs = rng.normal(0, 10, n).astype(np.float32)
@@ -40,18 +47,19 @@ def main():
 
     t = _time(ops.window_agg, xs, ys, vs, win, backend="jnp")
     gbps = 3 * n * 4 / t / 1e9
-    emit("window_agg_jnp_1M", t * 1e6, f"GB_s={gbps:.2f}")
+    emit(f"window_agg_jnp_{_klabel(n)}", t * 1e6, f"GB_s={gbps:.2f}")
 
     t = _time(ops.bin_agg, xs, ys, vs, bbox, gx=2, gy=2, backend="jnp")
-    emit("bin_agg_jnp_1M_2x2", t * 1e6, f"GB_s={3*n*4/t/1e9:.2f}")
+    emit(f"bin_agg_jnp_{_klabel(n)}_2x2", t * 1e6, f"GB_s={3*n*4/t/1e9:.2f}")
 
     t = _time(ops.window_agg, xs, ys, vs, win, backend="np")
-    emit("window_agg_np_1M", t * 1e6, f"GB_s={3*n*4/t/1e9:.2f}")
+    emit(f"window_agg_np_{_klabel(n)}", t * 1e6, f"GB_s={3*n*4/t/1e9:.2f}")
 
-    n2 = 65_536
+    n2 = 16_384 if common.SMOKE else 65_536
     t = _time(ops.window_agg, xs[:n2], ys[:n2], vs[:n2], win,
               backend="pallas", reps=2)
-    emit("window_agg_pallas_interpret_64K", t * 1e6, "validation_path")
+    emit(f"window_agg_pallas_interpret_{_klabel(n2)}", t * 1e6,
+         "validation_path")
 
     vmem = 3 * DEFAULT_BLOCK_ROWS * LANES * 4 + 4 * DEFAULT_BLOCK_ROWS * \
         LANES

@@ -3,14 +3,25 @@
 Prints ``name,us_per_call,derived`` CSV rows (B1–B6), then the roofline
 table (§Roofline) if dry-run artifacts exist under experiments/dryrun.
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run            # full size
+    PYTHONPATH=src python -m benchmarks.run --smoke    # tiny-n CI smoke
+
+``--smoke`` runs every benchmark at toy size (120 K rows, 12-query
+paths) so CI exercises B1–B6 end-to-end each push — the numbers are
+meaningless, the code paths are not.
 """
 from __future__ import annotations
 
 import os
+import sys
 
 
-def main() -> None:
+def main(smoke: bool = False) -> None:
+    # smoke config must land BEFORE the benchmark modules bind their
+    # imported constants
+    from . import common
+    if smoke:
+        common.configure_smoke()
     print("name,us_per_call,derived")
     from . import (accuracy_sweep, adaptation_cost, fig2_exploration,
                    heatmap_exploration, kernels_bench, objects_read)
@@ -34,4 +45,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv[1:])

@@ -6,11 +6,14 @@ from .engine import AQPEngine, EngineTrace
 from .index import AdaptStats, IndexConfig, TileIndex
 from .query import (evaluate, evaluate_heatmap, evaluate_heatmap_oracle,
                     evaluate_oracle)
+from .refine import (HeatmapQueryAdapter, RefinementDriver,
+                     ScalarQueryAdapter)
 
 __all__ = [
     "AQPEngine", "EngineTrace", "TileIndex", "IndexConfig", "AdaptStats",
     "QueryResult", "QueryAccumulator", "PendingTile",
     "HeatmapResult", "GroupedAccumulator", "GroupedPendingTile",
+    "RefinementDriver", "ScalarQueryAdapter", "HeatmapQueryAdapter",
     "evaluate", "evaluate_oracle",
     "evaluate_heatmap", "evaluate_heatmap_oracle",
 ]

@@ -14,11 +14,12 @@ The selection policy processes tiles in descending score order,
 re-evaluating the query error bound after each processed tile, and stops
 as soon as the bound meets the user constraint φ.
 
-The batched pipeline (``query.evaluate``, ``TileIndex.read_batch``)
-consumes this same order in rounds of ``IndexConfig.batch_k`` tiles —
-one gathered raw-file read + one packed segment kernel per round — and
-applies the identical per-tile stopping rule while folding, so the
-selection semantics (and results) are unchanged; only the cost model is.
+The unified refinement driver (``repro.core.refine``) consumes this same
+order — for scalar queries via :func:`score_tiles`, for heatmaps via
+:func:`score_tiles_grouped` — in batched rounds (one gathered raw-file
+read + one packed segment kernel per round) and applies the identical
+per-tile stopping rule while folding, so the selection semantics (and
+results) are unchanged; only the cost model is.
 """
 from __future__ import annotations
 

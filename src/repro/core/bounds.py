@@ -19,6 +19,13 @@ interval-contribution to exact-contribution, exactly like the paper's
 processing loop, and every ``interval()`` call is O(#pending) (with
 cached partial sums, O(1) amortized).
 
+Both accumulators implement the *refinement protocol* consumed by
+:class:`repro.core.refine.RefinementDriver` — ``agg``, ``pending``,
+``fold_exact``, ``query_bound`` (the scalar stopping quantity), and
+``min_folds_needed`` (a certain lower bound on the folds still required
+to reach a bound ≤ φ, used for predictive round sizing: a round of that
+size reads zero speculative rows).
+
 :class:`GroupedAccumulator` generalizes the same machinery to heatmap
 (2-D group-by) queries: every quantity above becomes a per-bin vector
 over the window's ``bx × by`` grid, a pending tile contributes
@@ -71,6 +78,7 @@ class QueryResult:
     objects_read: int = 0
     read_calls: int = 0        # raw-file read invocations (gathered = 1/round)
     batch_rounds: int = 0      # batched refinement rounds (0 ⇒ sequential)
+    speculative_rows: int = 0  # rows read past the stopping point
     eval_time_s: float = 0.0
 
 
@@ -179,6 +187,35 @@ class QueryAccumulator:
         mid = 0.5 * (lo + hi) if np.isfinite(lo) and np.isfinite(hi) else hi
         return mid, lo, hi, _rel_bound(mid, lo, hi)
 
+    # ---------------------- refinement protocol ----------------------- #
+    def query_bound(self) -> float:
+        """Stopping quantity for the refinement driver: the current
+        relative upper error bound."""
+        return self.interval()[3]
+
+    def min_folds_needed(self, remaining, phi: float) -> int:
+        """Certain lower bound on how many more folds reach bound ≤ φ.
+
+        For sum/mean the deviation after folding the first j tiles of
+        ``remaining`` is deterministic — half the CI width of the
+        still-pending tiles (folded tiles contribute exactly) — and the
+        approximate value always stays inside the current [lo, hi]. Hence
+        ``bound_j ≥ W_j / (2·max(|lo|, |hi|))`` whatever the raw file
+        holds, and the sequential stopping rule cannot fire before that
+        many folds: a batched round of this size reads ZERO speculative
+        rows.
+        """
+        _, lo, hi, _ = self.interval()
+        w = np.array([tile_ci_width(self.pending[t], self.agg)
+                      for t in remaining], np.float64)
+        if self.agg == "mean":
+            w = w / max(self.total_count(), 1)
+        v_max = max(abs(lo), abs(hi), EPS)
+        suffix = w.sum() - np.cumsum(w)      # pending width after j folds
+        hit = np.flatnonzero(suffix <= 2.0 * phi * v_max)
+        j = int(hit[0]) + 1 if hit.size else len(remaining)
+        return max(1, j)
+
 
 @dataclasses.dataclass
 class GroupedPendingTile:
@@ -224,6 +261,7 @@ class HeatmapResult:
     objects_read: int = 0
     read_calls: int = 0        # raw-file read invocations (gathered = 1/round)
     batch_rounds: int = 0      # batched refinement rounds (0 ⇒ sequential)
+    speculative_rows: int = 0  # rows read past the stopping point
     eval_time_s: float = 0.0
 
     def grid(self, a: Optional[np.ndarray] = None) -> np.ndarray:
@@ -354,6 +392,46 @@ class GroupedAccumulator:
                            0.5 * (lo + hi), hi)
         bb = _rel_bound_vec(mid, lo, hi, occ)
         return mid, lo, hi, bb, float(bb.max(initial=0.0))
+
+    # ---------------------- refinement protocol ----------------------- #
+    def query_bound(self) -> float:
+        """Stopping quantity for the refinement driver: the query-level
+        bound = max per-bin relative bound over occupied bins."""
+        return self.interval()[4]
+
+    def min_folds_needed(self, remaining, phi: float) -> int:
+        """Certain lower bound on the folds needed for the per-bin-max
+        stopping rule to reach bound ≤ φ (grouped analog of the scalar
+        :meth:`QueryAccumulator.min_folds_needed`).
+
+        For sum/mean, bin b's deviation after folding the first j tiles
+        of ``remaining`` is exactly half its remaining pending width
+        ``W_jb`` (per-bin counts are exact, so folding tile t removes its
+        ``cnt_b·(vmax−vmin)`` contribution deterministically), and every
+        bin's approximate value stays inside its current ``[lo_b, hi_b]``
+        (a fold replaces an interval with an exact value inside it, so
+        intervals only shrink). Hence
+
+            bound_jb ≥ W_jb / (2·max(|lo_b|, |hi_b|, EPS))
+
+        whatever the raw file holds, and the per-bin-max rule cannot fire
+        before the smallest j at which EVERY bin's certain bound is ≤ φ.
+        One cumsum over the (tiles × bins) pending-width matrix gives all
+        suffixes at once; a round sized by the result reads zero
+        speculative rows (it replaces the heatmap geometric ramp).
+        """
+        _, lo, hi, _, _ = self.interval()
+        w = np.stack([self.pending[t].cnt_b.astype(np.float64)
+                      * self.pending[t].width
+                      for t in remaining])             # (T, nbins)
+        if self.agg == "mean":
+            w = w / np.maximum(self.ex_cnt + self._p_cnt, 1)
+        v_max = np.maximum(np.maximum(np.abs(lo), np.abs(hi)), EPS)
+        suffix = w.sum(axis=0) - np.cumsum(w, axis=0)  # widths after j folds
+        ok = (suffix <= 2.0 * phi * v_max).all(axis=1)
+        hit = np.flatnonzero(ok)
+        j = int(hit[0]) + 1 if hit.size else len(remaining)
+        return max(1, j)
 
 
 def _rel_bound_vec(value, lo, hi, occ):

@@ -4,7 +4,10 @@ Deployment model (DESIGN.md §2): the raw object store is sharded across
 every chip (each device owns N/D objects in HBM — the in-situ "file").
 The *logical* tile grid is replicated; per-tile metadata is the psum of
 per-shard partial aggregates. One φ-constrained window-aggregate query
-is then a fully-jitted SPMD program:
+— scalar (:func:`make_query_step`) or heatmap
+(:func:`make_heatmap_step`, the per-(tile, bin) generalization that
+merges shard-local grouped state and computes every per-bin bound
+in-SPMD) — is then a fully-jitted SPMD program:
 
   1. per-device masked binned aggregation over its local objects
      (count/sum/min/max per tile ∩ window) — the Pallas ``bin_agg``/
@@ -65,6 +68,46 @@ def _all_axes(mesh: Mesh):
     return tuple(mesh.axis_names)
 
 
+def _grid_cell_ids(xs, ys, domain, gx: int, gy: int):
+    """Tile cell id of every local object under the implicit gx×gy grid
+    over ``domain`` (the same clip-binning ownership rule as the host
+    index) — shared by the scalar, heatmap, and refine steps."""
+    x0, y0 = domain[0], domain[1]
+    cw = (domain[2] - x0) / gx
+    ch = (domain[3] - y0) / gy
+    cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32), 0, gx - 1)
+    cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32), 0, gy - 1)
+    return cy * gx + cx
+
+
+def _window_mask(xs, ys, window):
+    """Closed-rectangle selection mask (the paper's query semantics)."""
+    return ((xs >= window[0]) & (xs <= window[2])
+            & (ys >= window[1]) & (ys <= window[3]))
+
+
+def _classify_grid_tiles(domain, window, gx: int, gy: int):
+    """(disjoint, full) masks of the gx·gy implicit grid tiles against
+    the closed query window (tile extents are implicit in the grid).
+    Conservative like the host ``geometry.classify_tiles``: borderline
+    tiles demote to partial. Shared by the scalar and heatmap steps so
+    both classify identically."""
+    x0, y0 = domain[0], domain[1]
+    cw = (domain[2] - x0) / gx
+    ch = (domain[3] - y0) / gy
+    qx0, qy0, qx1, qy1 = window[0], window[1], window[2], window[3]
+    t = gx * gy
+    tx = jnp.arange(t) % gx
+    ty = jnp.arange(t) // gx
+    tx0 = x0 + tx * cw
+    tx1 = tx0 + cw
+    ty0 = y0 + ty * ch
+    ty1 = ty0 + ch
+    disjoint = (tx1 < qx0) | (tx0 > qx1) | (ty1 < qy0) | (ty0 > qy1)
+    full = (tx0 >= qx0) & (tx1 <= qx1) & (ty0 >= qy0) & (ty1 <= qy1)
+    return disjoint, full
+
+
 def make_query_step(mesh: Mesh, cfg: DistConfig = DistConfig()):
     """Build the jitted distributed query step.
 
@@ -79,16 +122,8 @@ def make_query_step(mesh: Mesh, cfg: DistConfig = DistConfig()):
     axes = _all_axes(mesh)
 
     def local(xs, ys, vals, domain, window, phi):
-        x0, y0, x1, y1 = domain[0], domain[1], domain[2], domain[3]
-        qx0, qy0, qx1, qy1 = (window[0], window[1], window[2], window[3])
-        cw = (x1 - x0) / gx
-        ch = (y1 - y0) / gy
-        cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32), 0,
-                      gx - 1)
-        cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32), 0,
-                      gy - 1)
-        cid = cy * gx + cx
-        inq = (xs >= qx0) & (xs <= qx1) & (ys >= qy0) & (ys <= qy1)
+        cid = _grid_cell_ids(xs, ys, domain, gx, gy)
+        inq = _window_mask(xs, ys, window)
 
         vf = vals.astype(jnp.float32)
         if cfg.fused_passes:
@@ -142,15 +177,8 @@ def make_query_step(mesh: Mesh, cfg: DistConfig = DistConfig()):
             mn_q = jax.lax.pmin(mn_q, axes)
             mx_q = jax.lax.pmax(mx_q, axes)
 
-        # --- classification (tile extents are implicit in the grid) ---
-        tx = jnp.arange(t) % gx
-        ty = jnp.arange(t) // gx
-        tx0 = x0 + tx * cw
-        tx1 = tx0 + cw
-        ty0 = y0 + ty * ch
-        ty1 = ty0 + ch
-        disjoint = (tx1 < qx0) | (tx0 > qx1) | (ty1 < qy0) | (ty0 > qy1)
-        full = (tx0 >= qx0) & (tx1 <= qx1) & (ty0 >= qy0) & (ty1 <= qy1)
+        # --- classification (shared with the heatmap step) ---
+        disjoint, full = _classify_grid_tiles(domain, window, gx, gy)
         partial = (~disjoint) & (~full) & (cnt_q > 0)
 
         # --- CI from metadata (sum aggregate; paper §3.1) ---
@@ -207,6 +235,146 @@ def make_query_step(mesh: Mesh, cfg: DistConfig = DistConfig()):
     return jax.jit(fn)
 
 
+def make_heatmap_step(mesh: Mesh, cfg: DistConfig,
+                      bins: Tuple[int, int]):
+    """Build the jitted distributed HEATMAP (2-D group-by) query step.
+
+    The SPMD unrolling of the unified refinement driver's grouped loop
+    (``core.refine`` + ``GroupedAccumulator``), mirroring
+    :func:`make_query_step`'s shape:
+
+      1. per-device masked binned scatter over local objects — one
+         ``segment_window_bin_agg``-style pass giving every (tile, bin)
+         cell's in-window count and sum, plus per-tile metadata
+         (count/min/max) — then ``psum``/``pmin``/``pmax`` merge the
+         shard-local grouped state (exact parts add; value bounds
+         min/max) into replicated global state;
+      2. the per-bin query CI from metadata: full tiles contribute their
+         (tile, bin) sums exactly; partial (pending) tiles contribute
+         ``cnt_tb · [mn_t, mx_t]`` per bin — exactly the grouped
+         accumulator's pending intervals;
+      3. greedy selection is the driver's grouped scoring vectorized:
+         tiles sorted by worst per-bin CI width, one cumsum over the
+         sorted (tiles × bins) width matrix gives every prefix's
+         residual per-bin width at once (the same suffix algebra as
+         ``GroupedAccumulator.min_folds_needed``), and the smallest
+         prefix whose surrogate per-bin-max bound meets φ is selected;
+      4. selected tiles' exact (tile, bin) contributions replace their
+         intervals; the final per-bin bound is re-computed post-read,
+         in-SPMD.
+
+    Signature: step(xs, ys, vals, domain, window, phi) → dict of
+    replicated per-bin arrays (values/lo/hi/bin_bound, (bx·by,)) and
+    scalars (bound, n_processed, n_partial, objects_read).
+    """
+    gx, gy = cfg.grid
+    t = gx * gy
+    bx, by = int(bins[0]), int(bins[1])
+    nb = bx * by
+    axes = _all_axes(mesh)
+
+    def local(xs, ys, vals, domain, window, phi):
+        qx0, qy0, qx1, qy1 = (window[0], window[1], window[2], window[3])
+        cid = _grid_cell_ids(xs, ys, domain, gx, gy)
+        inq = _window_mask(xs, ys, window)
+        # window-bin ids (the heatmap grid laid over the query window)
+        wcw = jnp.maximum((qx1 - qx0) / bx, 1e-30)
+        wch = jnp.maximum((qy1 - qy0) / by, 1e-30)
+        wx = jnp.clip(jnp.floor((xs - qx0) / wcw).astype(jnp.int32), 0,
+                      bx - 1)
+        wy = jnp.clip(jnp.floor((ys - qy0) / wch).astype(jnp.int32), 0,
+                      by - 1)
+        wid = wy * bx + wx
+        key = cid * nb + wid
+
+        vf = vals.astype(jnp.float32)
+        one_q = jnp.where(inq, 1.0, 0.0)
+        # per-(tile, bin) in-window scatter + per-tile metadata, merged
+        # across shards (exact parts psum; value bounds pmin/pmax)
+        cnt_tb = jnp.zeros((t * nb,), jnp.float32).at[key].add(one_q)
+        s_tb = jnp.zeros((t * nb,), jnp.float32).at[key].add(
+            jnp.where(inq, vf, 0.0))
+        cnt = jnp.zeros((t,), jnp.float32).at[cid].add(jnp.ones_like(vf))
+        mn = jnp.full((t,), POS, jnp.float32).at[cid].min(vf)
+        mx = jnp.full((t,), NEG, jnp.float32).at[cid].max(vf)
+        cnt_tb = jax.lax.psum(cnt_tb, axes).reshape(t, nb)
+        s_tb = jax.lax.psum(s_tb, axes).reshape(t, nb)
+        cnt = jax.lax.psum(cnt, axes)
+        mn = jax.lax.pmin(mn, axes)
+        mx = jax.lax.pmax(mx, axes)
+
+        # --- classification (shared with the scalar step) ---
+        disjoint, full = _classify_grid_tiles(domain, window, gx, gy)
+        cnt_q = jnp.sum(cnt_tb, axis=1)
+        partial = (~disjoint) & (~full) & (cnt_q > 0)
+
+        # --- per-bin CI from metadata (sum aggregate; grouped §3.1) ---
+        exact_b = jnp.sum(jnp.where(full[:, None], s_tb, 0.0), axis=0)
+        lo_tb = jnp.where(partial[:, None], cnt_tb * mn[:, None], 0.0)
+        hi_tb = jnp.where(partial[:, None], cnt_tb * mx[:, None], 0.0)
+        mid_tb = jnp.where(partial[:, None],
+                           cnt_tb * (0.5 * (mn + mx))[:, None], 0.0)
+        occ = jnp.sum(cnt_tb, axis=0) > 0
+
+        # --- grouped score + static-k greedy selection via cumsum ---
+        width_tb = hi_tb - lo_tb
+        w_t = jnp.max(width_tb, axis=1)      # worst per-bin CI width
+        w_hat = w_t / jnp.maximum(jnp.max(w_t), 1e-9)
+        c_hat = cnt_q / jnp.maximum(jnp.max(jnp.where(partial, cnt_q, 0.0)),
+                                    1e-9)
+        score = jnp.where(
+            partial,
+            cfg.alpha * w_hat + (1 - cfg.alpha) / jnp.maximum(c_hat, 1e-9),
+            -jnp.inf)
+        order = jnp.argsort(-score)
+        width_sorted = width_tb[order]       # (t, nb)
+        # residual per-bin width if tiles [0..j) are processed. Reversed
+        # cumsum, not total−prefix: the f32 subtraction leaves ≈+ε at
+        # j = n_partial and φ=0 would then select nothing.
+        resid = jnp.concatenate(
+            [jnp.cumsum(width_sorted[::-1], axis=0)[::-1],
+             jnp.zeros((1, nb))])            # (t+1, nb)
+        approx0_b = exact_b + jnp.sum(mid_tb, axis=0)
+        surr = jnp.where(occ[None, :],
+                         (0.5 * resid) / jnp.maximum(jnp.abs(approx0_b),
+                                                     1e-9)[None, :],
+                         0.0)
+        surrogate = jnp.max(surr, axis=1)    # per-bin-max bound per prefix
+        n_partial = jnp.sum(partial.astype(jnp.int32))
+        jmeet = jnp.argmax(surrogate <= phi)  # smallest prefix meeting φ
+        j = jnp.minimum(jnp.minimum(jmeet, n_partial), cfg.max_process)
+
+        sel = jnp.zeros((t,), bool).at[order].set(jnp.arange(t) < j)
+        sel = sel & partial
+        # processed tiles contribute exact per-bin values; rest midpoints
+        sel_c = sel[:, None]
+        values = exact_b + jnp.sum(jnp.where(sel_c, s_tb, mid_tb), axis=0)
+        lo = exact_b + jnp.sum(jnp.where(sel_c, s_tb, lo_tb), axis=0)
+        hi = exact_b + jnp.sum(jnp.where(sel_c, s_tb, hi_tb), axis=0)
+        dev = jnp.maximum(hi - values, values - lo)
+        bin_bound = jnp.where(
+            occ & (dev > 0),
+            dev / jnp.maximum(jnp.abs(values), 1e-9), 0.0)
+        bound = jnp.max(bin_bound, initial=0.0)
+        objects_read = jnp.sum(jnp.where(sel, cnt, 0.0))
+        return {"values": values, "lo": lo, "hi": hi,
+                "bin_bound": bin_bound, "bound": bound,
+                "n_processed": j.astype(jnp.int32),
+                "n_partial": n_partial,
+                "objects_read": objects_read}
+
+    obj = P(axes)
+    rep = P()
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(obj, obj, obj, rep, rep, rep),
+                   out_specs={k: rep for k in
+                              ("values", "lo", "hi", "bin_bound", "bound",
+                               "n_processed", "n_partial",
+                               "objects_read")},
+                   check_rep=False)
+    return jax.jit(fn)
+
+
 def make_refine_step(mesh: Mesh, cfg: DistConfig = DistConfig()):
     """Metadata refinement at 2× grid resolution for a window (the
     distributed analogue of tile splitting): one binned pass + psum."""
@@ -215,14 +383,7 @@ def make_refine_step(mesh: Mesh, cfg: DistConfig = DistConfig()):
     axes = _all_axes(mesh)
 
     def local(xs, ys, vals, domain):
-        x0, y0, x1, y1 = domain[0], domain[1], domain[2], domain[3]
-        cw = (x1 - x0) / gx
-        ch = (y1 - y0) / gy
-        cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32), 0,
-                      gx - 1)
-        cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32), 0,
-                      gy - 1)
-        cid = cy * gx + cx
+        cid = _grid_cell_ids(xs, ys, domain, gx, gy)
         v = vals.astype(jnp.float32)
         cnt = jnp.zeros((t,), jnp.float32).at[cid].add(
             jnp.ones_like(v))
@@ -263,18 +424,54 @@ class DistributedAQPEngine:
         self.domain = jnp.asarray(dataset.domain(), jnp.float32)
         self._step = make_query_step(mesh, cfg)
         self._refine = make_refine_step(mesh, cfg)
+        self._heatmap_steps = {}   # (bx, by) → jitted heatmap step
 
     def query(self, window, attr: str, phi: float):
         out = self._step(self.xs, self.ys, self.vals[attr], self.domain,
                          jnp.asarray(window, jnp.float32),
                          jnp.asarray(phi, jnp.float32))
         out = {k: np.asarray(v) for k, v in out.items()}
+        # rerun only when there is anything left to process (same guard
+        # as heatmap(): once every partial tile is exact, a φ=0 pass
+        # would return the identical answer)
         if phi > 0 and out["bound"] > phi and \
-                out["n_processed"] < self.cfg.max_process:
+                out["n_processed"] < min(out["n_partial"],
+                                         self.cfg.max_process):
             out2 = self._step(self.xs, self.ys, self.vals[attr],
                               self.domain,
                               jnp.asarray(window, jnp.float32),
                               jnp.asarray(0.0, jnp.float32))
+            out = {k: np.asarray(v) for k, v in out2.items()}
+        return out
+
+    def heatmap(self, window, attr: str, bins: Tuple[int, int] = (8, 8),
+                phi: float = 0.0):
+        """One φ-constrained heatmap (2-D group-by) query over the mesh.
+
+        Returns a dict of per-bin numpy arrays (``values``/``lo``/``hi``/
+        ``bin_bound``, flat ``bx·by`` with bin id = by_row·bx + bx_col —
+        the single-host :class:`~repro.core.bounds.HeatmapResult`
+        layout) plus the query-level ``bound`` (max per-bin bound over
+        occupied bins) and cost scalars. Like :meth:`query`, selection
+        uses the width-based surrogate bound, the reported bound is
+        re-computed post-read, and a second exact-ish round runs on the
+        rare miss.
+        """
+        bins = (int(bins[0]), int(bins[1]))
+        if bins not in self._heatmap_steps:
+            self._heatmap_steps[bins] = make_heatmap_step(self.mesh,
+                                                          self.cfg, bins)
+        step = self._heatmap_steps[bins]
+        out = step(self.xs, self.ys, self.vals[attr], self.domain,
+                   jnp.asarray(window, jnp.float32),
+                   jnp.asarray(phi, jnp.float32))
+        out = {k: np.asarray(v) for k, v in out.items()}
+        if phi > 0 and out["bound"] > phi and \
+                out["n_processed"] < min(out["n_partial"],
+                                         self.cfg.max_process):
+            out2 = step(self.xs, self.ys, self.vals[attr], self.domain,
+                        jnp.asarray(window, jnp.float32),
+                        jnp.asarray(0.0, jnp.float32))
             out = {k: np.asarray(v) for k, v in out2.items()}
         return out
 

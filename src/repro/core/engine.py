@@ -26,11 +26,25 @@ True
 
 Each bin carries its own deterministic ``[lo, hi]`` interval and
 relative bound; the query-level ``bound`` is the worst per-bin bound
-over occupied bins. Refinement runs through the same batched
-classify → pending-CI → fold loop as scalar queries (one gathered read +
-one packed ``segment_window_bin_agg`` kernel per round), and tiles the
-index has already split finer than one bin answer from metadata with
-zero file I/O.
+over occupied bins.
+
+Both query types refine through ONE engine — the unified
+:class:`~repro.core.refine.RefinementDriver` (classify → score →
+round-size → gathered read → fold → apply): scalar and heatmap queries
+differ only in their accumulator (:class:`~repro.core.bounds
+.QueryAccumulator` vs :class:`~repro.core.bounds.GroupedAccumulator`)
+and index adapter (packed ``segment_window_agg`` vs
+``segment_window_bin_agg`` reads, enrich-full vs split-everything
+policy). Under φ>0 the driver sizes sum/mean rounds by the
+accumulator's *certain* ``min_folds_needed`` bound — zero speculative
+rows for both query types, reported per query as
+``speculative_rows``. Heatmap refinement splits tiles along lines
+snapped to the query's bin grid (``IndexConfig.bin_aligned_splits``),
+so children nest inside single bins after one split and repeat
+viewports answer from metadata with zero file I/O. The same loop runs
+distributed: ``repro.core.distributed.DistributedAQPEngine`` executes
+the scalar and heatmap steps as fully-jitted SPMD programs over a
+sharded object store.
 """
 from __future__ import annotations
 
@@ -51,7 +65,9 @@ class EngineTrace:
         default_factory=list)
 
     def totals(self):
-        return {
+        """Session totals, plus a per-query-type (scalar vs heatmap)
+        breakdown so mixed-session benchmarks can attribute I/O."""
+        out = {
             "queries": len(self.results),
             "total_time_s": sum(r.eval_time_s for r in self.results),
             "total_objects_read": sum(r.objects_read for r in self.results),
@@ -60,7 +76,21 @@ class EngineTrace:
             "total_read_calls": sum(r.read_calls for r in self.results),
             "total_batch_rounds": sum(r.batch_rounds
                                       for r in self.results),
+            "total_speculative_rows": sum(r.speculative_rows
+                                          for r in self.results),
         }
+        for kind, rs in (
+                ("scalar", [r for r in self.results
+                            if isinstance(r, QueryResult)]),
+                ("heatmap", [r for r in self.results
+                             if isinstance(r, HeatmapResult)])):
+            out[f"{kind}_queries"] = len(rs)
+            out[f"{kind}_objects_read"] = sum(r.objects_read for r in rs)
+            out[f"{kind}_read_calls"] = sum(r.read_calls for r in rs)
+            out[f"{kind}_time_s"] = sum(r.eval_time_s for r in rs)
+            out[f"{kind}_speculative_rows"] = sum(r.speculative_rows
+                                                  for r in rs)
+        return out
 
 
 class AQPEngine:

@@ -14,6 +14,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..kernels import ref as ref_mod
+
 DISJOINT, PARTIAL, FULL = 0, 1, 2
 
 
@@ -50,8 +52,84 @@ def subtile_bboxes(bbox, gx: int, gy: int) -> np.ndarray:
     x0, y0, x1, y1 = bbox
     xs = np.linspace(x0, x1, gx + 1)
     ys = np.linspace(y0, y1, gy + 1)
+    return bboxes_from_edges(xs, ys)
+
+
+def bboxes_from_edges(x_edges: np.ndarray, y_edges: np.ndarray) -> np.ndarray:
+    """(gx*gy, 4) child extents from explicit per-axis edge arrays
+    (lengths gx+1 / gy+1, increasing; row-major y, like subtile_bboxes)."""
+    gx, gy = len(x_edges) - 1, len(y_edges) - 1
     out = np.empty((gx * gy, 4), np.float64)
     for cy in range(gy):
         for cx in range(gx):
-            out[cy * gx + cx] = (xs[cx], ys[cy], xs[cx + 1], ys[cy + 1])
+            out[cy * gx + cx] = (x_edges[cx], y_edges[cy],
+                                 x_edges[cx + 1], y_edges[cy + 1])
     return out
+
+
+def _snap_axis_edges(e0: float, e1: float, g: int, q0: float, q1: float,
+                     b: int) -> np.ndarray:
+    """Uniform g+1 split edges of [e0, e1] with each interior edge snapped
+    to the nearest bin-grid line of ([q0, q1], b) strictly inside the
+    extent; falls back to the uniform edges when no grid line crosses the
+    extent or snapping would collapse two children."""
+    edges = np.linspace(e0, e1, g + 1)
+    if b <= 1 or not (q1 > q0):
+        return edges
+    lines = q0 + (q1 - q0) / b * np.arange(1, b)
+    inside = lines[(lines > e0) & (lines < e1)]
+    if inside.size == 0:
+        return edges
+    snapped = edges.copy()
+    for i in range(1, g):
+        snapped[i] = inside[np.argmin(np.abs(inside - edges[i]))]
+    snapped.sort()
+    if np.unique(snapped).size < snapped.size:   # two edges hit one line
+        return edges
+    return snapped
+
+
+def snapped_split_edges(bbox, gx: int, gy: int, window, bx: int, by: int):
+    """Bin-aligned split lines: the tile's gx×gy split edges snapped to
+    the heatmap grid laid over ``window`` (``bx × by`` bins).
+
+    Children of a snapped split nest inside single bins of that grid
+    after ONE split (for tiles spanning ≤ gx bins per axis), so repeat
+    heatmaps over the same grid answer them from metadata with zero file
+    I/O — instead of re-reading until several midpoint splits happen to
+    land inside bin boundaries. Degenerates to the uniform split when
+    the tile lies inside one bin. Returns ``(x_edges, y_edges)`` float64
+    arrays of lengths gx+1 / gy+1.
+    """
+    x0, y0, x1, y1 = (float(bbox[0]), float(bbox[1]), float(bbox[2]),
+                      float(bbox[3]))
+    qx0, qy0, qx1, qy1 = (float(window[0]), float(window[1]),
+                          float(window[2]), float(window[3]))
+    return (_snap_axis_edges(x0, x1, gx, qx0, qx1, bx),
+            _snap_axis_edges(y0, y1, gy, qy0, qy1, by))
+
+
+def edge_cell_ids_segmented(xs: np.ndarray, ys: np.ndarray,
+                            x_edges: np.ndarray, y_edges: np.ndarray,
+                            sid: np.ndarray) -> np.ndarray:
+    """Cell id (cy*gx + cx) under explicit per-segment split edges.
+
+    The ownership rule for snapped (bin-aligned) splits: child cx of
+    segment s owns ``[x_edges[s, cx], x_edges[s, cx+1])``, points past
+    the outer edges are clamped into the boundary cells — every object
+    lands in exactly one cell, like :func:`bin_cell_ids`. Delegates to
+    the ONE implementation (``kernels.ref.edge_cell_ids_np``) the
+    child-metadata mirror also uses, so segment reorganization and
+    metadata can never disagree on a boundary object.
+    """
+    return ref_mod.edge_cell_ids_np(np.asarray(xs), np.asarray(ys),
+                                    x_edges, y_edges, sid)
+
+
+def edge_cell_ids(xs: np.ndarray, ys: np.ndarray, x_edges: np.ndarray,
+                  y_edges: np.ndarray) -> np.ndarray:
+    """Single-tile form of :func:`edge_cell_ids_segmented` (one edge
+    array, every object in segment 0)."""
+    return edge_cell_ids_segmented(
+        np.asarray(xs), np.asarray(ys), np.asarray(x_edges)[None],
+        np.asarray(y_edges)[None], np.zeros(len(xs), np.int64))

@@ -53,6 +53,10 @@ class IndexConfig:
     min_split_count: int = 256            # I/O-cost split factor (paper §2.2)
     max_level: int = 12
     batch_k: int = 8                      # tiles refined per batched round
+    # heatmap refinement snaps split lines to the query's bin grid so
+    # children nest inside single bins after ONE split (False ⇒ the even
+    # 2×2-style subdivision everywhere — the pre-bin-aligned policy)
+    bin_aligned_splits: bool = True
     init_metadata_attrs: Sequence[str] = ()   # metadata computed at init pass
     backend: Optional[str] = None             # kernels backend override
 
@@ -64,6 +68,7 @@ class AdaptStats:
     objects_reorganized: int = 0
     kernel_calls: int = 0      # device/mirror kernel invocations (ops.*)
     batch_rounds: int = 0      # gathered-read refinement rounds
+    speculative_rows: int = 0  # rows read in a round but never folded
 
     def snapshot(self):
         return dataclasses.replace(self)
@@ -270,15 +275,17 @@ class TileIndex:
         return contrib
 
     def _enrich_and_split(self, tile_id: int, vals: np.ndarray, attr: str,
-                          split: bool):
+                          split: bool, edges=None):
         """Shared processing epilogue: tile-level metadata enrichment
-        (now exact for this attr) + the split-or-enrich decision."""
+        (now exact for this attr) + the split-or-enrich decision.
+        ``edges`` optionally carries bin-aligned split lines
+        (``(x_edges, y_edges)``, see :meth:`_split`)."""
         self.meta_sum[attr][tile_id] = float(vals.sum(dtype=np.float64))
         self.meta_min[attr][tile_id] = float(vals.min())
         self.meta_max[attr][tile_id] = float(vals.max())
         self.meta_valid[attr][tile_id] = True
         if split:
-            self._split(tile_id, vals, attr)
+            self._split(tile_id, vals, attr, edges=edges)
         else:
             self.adapt_stats.tiles_enriched += 1
 
@@ -305,9 +312,33 @@ class TileIndex:
         agg = ref_mod.segment_window_bin_agg_np(
             xs, ys, vals, np.array([0, c], np.int64), window, bx, by)[0]
 
-        self._enrich_and_split(tile_id, vals, attr, split)
+        # bin-aligned split lines: snap this tile's split edges to the
+        # query's bin grid so children nest inside single bins (the
+        # batched path computes the identical edges in read_batch_heatmap)
+        edges = self._heatmap_split_edges(
+            np.array([tile_id], np.int64), window, bins)
+        self._enrich_and_split(tile_id, vals, attr, split,
+                               edges=None if edges is None else
+                               (edges[0][0], edges[1][0]))
         return (agg[:, 0].astype(np.int64), agg[:, 1].copy(),
                 agg[:, 2].copy(), agg[:, 3].copy())
+
+    def _heatmap_split_edges(self, tile_ids: np.ndarray, window, bins):
+        """Per-tile bin-aligned split edges for heatmap refinement, or
+        ``None`` under the uniform-split policy. Returns
+        ``(x_edges (T, gx+1), y_edges (T, gy+1))`` float64 arrays — the
+        ONE place both the sequential and batched paths derive their
+        split lines from, so the index evolution stays identical."""
+        if not self.cfg.bin_aligned_splits:
+            return None
+        gx, gy = self.cfg.split_grid
+        bx, by = bins
+        xe = np.empty((len(tile_ids), gx + 1), np.float64)
+        ye = np.empty((len(tile_ids), gy + 1), np.float64)
+        for i, t in enumerate(tile_ids):
+            xe[i], ye[i] = geometry.snapped_split_edges(
+                self.bbox[t], gx, gy, window, bx, by)
+        return xe, ye
 
     def can_split(self, tile_id: int) -> bool:
         gx, gy = self.cfg.split_grid
@@ -315,8 +346,15 @@ class TileIndex:
                 and self.level[tile_id] < self.cfg.max_level
                 and self.n_tiles + gx * gy <= self.cfg.capacity)
 
-    def _split(self, tile_id: int, vals: np.ndarray, attr: str):
-        """Split + reorganize + per-child metadata (one bin_agg pass)."""
+    def _split(self, tile_id: int, vals: np.ndarray, attr: str,
+               edges=None):
+        """Split + reorganize + per-child metadata (one bin_agg pass).
+
+        ``edges=(x_edges, y_edges)`` cuts along explicit (bin-aligned)
+        split lines instead of the even gx×gy subdivision; ownership is
+        then ``geometry.edge_cell_ids``'s rule and child metadata comes
+        from the edges variant of the packed split kernel.
+        """
         if not self.can_split(tile_id):
             self.adapt_stats.tiles_enriched += 1
             return
@@ -329,15 +367,24 @@ class TileIndex:
         ys = self.y_s[o:o + c].copy()
         bbox = self.bbox[tile_id]
 
-        cell = geometry.bin_cell_ids(xs, ys, bbox, gx, gy)
+        if edges is None:
+            cell = geometry.bin_cell_ids(xs, ys, bbox, gx, gy)
+            boxes = geometry.subtile_bboxes(bbox, gx, gy)
+        else:
+            cell = geometry.edge_cell_ids(xs, ys, edges[0], edges[1])
+            boxes = geometry.bboxes_from_edges(edges[0], edges[1])
         counts = np.bincount(cell, minlength=gx * gy)
         child_off = o + np.concatenate([[0], np.cumsum(counts)[:-1]])
-        boxes = geometry.subtile_bboxes(bbox, gx, gy)
 
         # child metadata for the processed attribute: one binned pass
         # (data plane — Pallas bin_agg kernel on TPU)
-        agg = np.asarray(ops.bin_agg(xs, ys, vals, bbox, gx=gx, gy=gy,
-                                     backend=self._backend))
+        if edges is None:
+            agg = np.asarray(ops.bin_agg(xs, ys, vals, bbox, gx=gx, gy=gy,
+                                         backend=self._backend))
+        else:
+            agg = np.asarray(ops.segment_bin_agg_edges(
+                xs, ys, vals, np.array([0, c], np.int64),
+                edges[0][None], edges[1][None], backend=self._backend))[0]
         self.adapt_stats.kernel_calls += 1
 
         order = np.argsort(cell, kind="stable")
@@ -468,6 +515,11 @@ class TileIndex:
         agg = ref_mod.segment_window_bin_agg_np(xs, ys, vals, bounds,
                                                 window, bx, by)
         self.adapt_stats.kernel_calls += 1
+        # bin-aligned split lines for every tile of the round (the same
+        # edges process_heatmap computes) — apply_batch slices the folded
+        # prefix, keeping the index evolution identical to sequential
+        payload["split_edges"] = self._heatmap_split_edges(
+            tile_ids, window, bins)
         contribs = [
             (agg[s, :, 0].astype(np.int64), agg[s, :, 1].copy(),
              agg[s, :, 2].copy(), agg[s, :, 3].copy())
@@ -522,12 +574,16 @@ class TileIndex:
         self.adapt_stats.tiles_enriched += int(nz.sum() - will_split.sum())
 
         if will_split.any():
+            edges = payload.get("split_edges")
+            if edges is not None:
+                edges = (edges[0][:n_used][will_split],
+                         edges[1][:n_used][will_split])
             # boolean indexing copies, and xs/ys are gathered copies to
             # begin with — _split_batch may reorganize x_s/y_s in place
             # without corrupting them
             keep = np.repeat(will_split, counts)
             self._split_batch(tile_ids[will_split], idx[keep], xs[keep],
-                              ys[keep], vals[keep], attr)
+                              ys[keep], vals[keep], attr, edges=edges)
 
     def process_batch(self, tile_ids, window, attr: str, split_flags):
         """Read + fully apply one batch (convenience one-shot wrapper)."""
@@ -535,11 +591,14 @@ class TileIndex:
         self.apply_batch(payload, len(payload["tile_ids"]), split_flags)
         return contribs
 
-    def _split_batch(self, parents, idx, xs, ys, vals, attr: str):
+    def _split_batch(self, parents, idx, xs, ys, vals, attr: str,
+                     edges=None):
         """Vectorized multi-tile split: every parent's segment is binned
-        against its own bbox, reorganized in place, and ALL children are
-        appended in one SoA update. ``idx/xs/ys/vals`` cover the parents'
-        concatenated segments (pristine copies, concat order).
+        against its own bbox — or its own bin-aligned split edges, when
+        ``edges=(x_edges (S, gx+1), y_edges (S, gy+1))`` is given —
+        reorganized in place, and ALL children are appended in one SoA
+        update. ``idx/xs/ys/vals`` cover the parents' concatenated
+        segments (pristine copies, concat order).
         """
         gx, gy = self.cfg.split_grid
         k = gx * gy
@@ -550,23 +609,33 @@ class TileIndex:
         bounds = np.concatenate([[0], np.cumsum(cnt)]).astype(np.int64)
         sid = np.repeat(np.arange(s_n), cnt)
 
-        # per-element cell ids under each parent's own ownership rule
-        cw = np.maximum((bboxes[:, 2] - bboxes[:, 0]) / gx, 1e-30)
-        ch = np.maximum((bboxes[:, 3] - bboxes[:, 1]) / gy, 1e-30)
-        cx = np.clip(np.floor((xs - bboxes[sid, 0]) / cw[sid]).astype(
-            np.int64), 0, gx - 1)
-        cy = np.clip(np.floor((ys - bboxes[sid, 1]) / ch[sid]).astype(
-            np.int64), 0, gy - 1)
-        key = sid * k + cy * gx + cx
+        if edges is None:
+            # per-element cell ids under each parent's own ownership rule
+            cw = np.maximum((bboxes[:, 2] - bboxes[:, 0]) / gx, 1e-30)
+            ch = np.maximum((bboxes[:, 3] - bboxes[:, 1]) / gy, 1e-30)
+            cx = np.clip(np.floor((xs - bboxes[sid, 0]) / cw[sid]).astype(
+                np.int64), 0, gx - 1)
+            cy = np.clip(np.floor((ys - bboxes[sid, 1]) / ch[sid]).astype(
+                np.int64), 0, gy - 1)
+            key = sid * k + cy * gx + cx
+        else:
+            # ownership along explicit split lines — the ONE host rule
+            key = sid * k + geometry.edge_cell_ids_segmented(
+                xs, ys, edges[0], edges[1], sid)
         counts_sk = np.bincount(key, minlength=s_n * k).reshape(s_n, k)
         child_off = off[:, None] + np.concatenate(
             [np.zeros((s_n, 1), np.int64),
              np.cumsum(counts_sk, axis=1)[:, :-1]], axis=1)
 
         # child metadata for the processed attribute: one packed kernel
-        agg = np.asarray(ops.segment_bin_agg(
-            xs, ys, vals, bounds, bboxes, gx=gx, gy=gy,
-            backend=self._backend))
+        if edges is None:
+            agg = np.asarray(ops.segment_bin_agg(
+                xs, ys, vals, bounds, bboxes, gx=gx, gy=gy,
+                backend=self._backend))
+        else:
+            agg = np.asarray(ops.segment_bin_agg_edges(
+                xs, ys, vals, bounds, edges[0], edges[1],
+                backend=self._backend))
         self.adapt_stats.kernel_calls += 1
 
         # one global stable argsort reorganizes every parent's segment
@@ -583,7 +652,10 @@ class TileIndex:
         t0 = self.n_tiles
         sl = slice(t0, t0 + s_n * k)
         self.bbox[sl] = np.concatenate(
-            [geometry.subtile_bboxes(b, gx, gy) for b in bboxes])
+            [geometry.subtile_bboxes(b, gx, gy) for b in bboxes]
+            if edges is None else
+            [geometry.bboxes_from_edges(edges[0][s], edges[1][s])
+             for s in range(s_n)])
         self.offset[sl] = child_off.reshape(-1)
         self.count[sl] = counts_sk.reshape(-1)
         self.active[sl] = True

@@ -5,48 +5,43 @@ case that processes every pending tile), matching the paper's comparison
 setup: "the evaluation time under 1% and 5% accuracy constraints compared
 to the exact query answering method".
 
+Architecture: this module owns only the two *accumulator builders*
+(steps 1–3 below — classification + pending-set construction, zero file
+I/O) and the result plumbing. The refinement loop itself — score order,
+predictive/geometric round sizing, gathered reads, the per-item stopping
+rule, and prefix-exact side-effect application — lives in ONE place,
+:class:`repro.core.refine.RefinementDriver`, shared verbatim by scalar
+and heatmap queries (and mirrored in SPMD form by
+``core.distributed``). :func:`evaluate` and :func:`evaluate_heatmap`
+are thin wrappers: build the accumulator, hand it to the driver with the
+matching index adapter, read the final interval off the accumulator.
+
 Evaluation of a query (window Q, aggregate, attribute A, constraint φ):
 
 1. classify active tiles against Q (disjoint / partial / full);
 2. fully-contained tiles with valid metadata contribute exactly — zero
-   file I/O; fully-contained tiles *without* valid sum metadata for A are
-   queued as pending-enrichment (bounded by their sound min/max);
-3. partially-contained tiles: ``count(t∩Q)`` for ALL partial tiles comes
-   from ONE vectorized pass over the axis index
-   (``TileIndex.count_in_window_batch`` — no file I/O); tiles with zero
-   selected objects are skipped; the rest become pending with tile CI
-   ``[cnt·min, cnt·max]``;
-4. if the relative upper error bound exceeds φ, refine in **batched
-   rounds**: take the next chunk of the score order
-   (``adapt.score_tiles``) — up to ``batch_k`` tiles, sized for sum/mean
-   by a *certain* lower bound on the folds still needed
-   (``_min_folds_needed``; zero speculative rows) and by a geometric
-   ramp otherwise — issue one gathered raw-file read over their
-   concatenated segments and one packed ``segment_window_agg`` kernel
-   for their exact contributions (``TileIndex.read_batch``), then fold
-   the contributions tile-by-tile in score order, stopping as soon as
-   the bound ≤ φ. Refinement side effects (enrichment, splits via one
-   packed ``segment_bin_agg`` + one vectorized SoA child append) apply
-   to exactly the folded prefix (``TileIndex.apply_batch``), so the
-   stopping rule, decision sequence, f64 arithmetic, AND the index
-   evolution are identical to the sequential reference — batching
-   changes the cost model, not the semantics.
+   file I/O (for heatmaps: when all their objects land in ONE bin);
+   fully-contained tiles without usable metadata are queued as pending,
+   bounded by their sound min/max;
+3. partially-contained tiles: per-tile (scalar) or per-tile-per-bin
+   (heatmap) in-window counts come from ONE vectorized pass over the
+   axis index — no file I/O; tiles with zero selected objects are
+   skipped; the rest become pending with interval ``cnt · [min, max]``;
+4. if the bound exceeds φ, the driver refines in batched rounds: one
+   gathered raw-file read + one packed segment kernel per round
+   (``segment_window_agg`` / ``segment_window_bin_agg``), folding
+   contributions tile-by-tile in score order and stopping as soon as
+   the bound ≤ φ. Under φ>0, sum/mean rounds are sized by the
+   accumulator's certain ``min_folds_needed`` bound — zero speculative
+   rows for BOTH query types — and min/max rounds ramp geometrically.
+   Side effects (enrichment, splits — bin-aligned for heatmaps) apply
+   to exactly the folded prefix, so the batched pipeline matches the
+   sequential reference bit-for-bit on counts, decisions, and index
+   evolution.
 
 ``sequential=True`` selects the per-tile reference path (one read + one
-kernel per tile) that the batched pipeline must match bit-for-bit on
-counts and to f64 tolerance on sums; ``batch_k`` (default
-``IndexConfig.batch_k``) sets the round size.
-
-:func:`evaluate_heatmap` generalizes the same classify → pending-CI →
-batched-refinement loop from one scalar aggregate to a ``bx × by`` grid
-of per-bin aggregates over the window (the VALINOR/RawVis binned-view
-workload): per-bin pending counts come from one zero-I/O axis pass
-(``TileIndex.bin_counts_in_window_batch``), a fully-contained tile whose
-objects all land in ONE bin contributes its metadata exactly with no
-file access, and refinement folds each processed tile's whole per-bin
-vector from one packed ``segment_window_bin_agg`` pass. The stopping
-rule compares φ against the query-level bound = max per-bin relative
-bound over occupied bins.
+kernel per tile); ``batch_k`` (default ``IndexConfig.batch_k``) sets the
+round size.
 """
 from __future__ import annotations
 
@@ -55,10 +50,12 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from . import adapt
 from .bounds import (GroupedAccumulator, GroupedPendingTile, HeatmapResult,
                      PendingTile, QueryAccumulator, QueryResult)
 from .index import TileIndex
+from .refine import HeatmapQueryAdapter, RefinementDriver, ScalarQueryAdapter
+from ..kernels.ops import window_mask_np
+from ..kernels.ref import window_bin_ids_np
 
 
 def _build_accumulator(index: TileIndex, window, agg: str, attr: str):
@@ -97,110 +94,33 @@ def _build_accumulator(index: TileIndex, window, agg: str, attr: str):
     return acc, full_ids, n_full, n_partial
 
 
-def _min_folds_needed(acc, remaining, agg: str, phi: float,
-                      lo: float, hi: float) -> int:
-    """Optimistic lower bound on how many more folds reach bound ≤ φ.
-
-    For sum/mean the deviation after folding the first j tiles of
-    ``remaining`` is deterministic — half the CI width of the still-pending
-    tiles (folded tiles contribute exactly) — and the approximate value
-    always stays inside the current [lo, hi]. Hence
-    ``bound_j ≥ W_j / (2·max(|lo|, |hi|))`` whatever the raw file holds,
-    and the sequential stopping rule cannot fire before that many folds:
-    a batched round of this size reads ZERO speculative rows.
-    """
-    from .bounds import EPS, tile_ci_width
-    w = np.array([tile_ci_width(acc.pending[t], agg) for t in remaining],
-                 np.float64)
-    if agg == "mean":
-        w = w / max(acc.total_count(), 1)
-    v_max = max(abs(lo), abs(hi), EPS)
-    suffix = w.sum() - np.cumsum(w)          # pending width after j folds
-    hit = np.flatnonzero(suffix <= 2.0 * phi * v_max)
-    j = int(hit[0]) + 1 if hit.size else len(remaining)
-    return max(1, j)
-
-
 def evaluate(index: TileIndex, window, agg: str, attr: str,
              phi: float = 0.0, alpha: float = 1.0, *,
              batch_k: Optional[int] = None,
              sequential: bool = False) -> QueryResult:
     t_start = time.perf_counter()
     io_before = index.ds.stats.snapshot()
-    rounds_before = index.adapt_stats.batch_rounds
+    adapt_before = index.adapt_stats.snapshot()
     index.ensure_attr(attr)
 
     acc, full_ids, n_full, n_partial = _build_accumulator(
         index, window, agg, attr)
 
-    value, lo, hi, bound = acc.interval()
-    processed = 0
-    if acc.pending and (phi <= 0.0 or bound > phi):
-        order = adapt.score_tiles(acc.pending, agg, alpha)
-        full_set = set(int(i) for i in full_ids)
-        if sequential:
-            for t in order:
-                if phi > 0.0 and bound <= phi:
-                    break
-                # fully-contained pending tiles are enriched, not split
-                # (splitting them brings no future pruning benefit — their
-                # metadata already answers any containing query exactly)
-                do_split = t not in full_set
-                cnt_q, s_q, mn_q, mx_q = index.process(t, window, attr,
-                                                       split=do_split)
-                acc.fold_exact(t, cnt_q, s_q, mn_q, mx_q)
-                processed += 1
-                value, lo, hi, bound = acc.interval()
-        else:
-            from ..kernels.segment_agg import MAX_SEGMENTS, MAX_UNROLL
-            gx, gy = index.cfg.split_grid
-            k = index.cfg.batch_k if batch_k is None else int(batch_k)
-            # packed kernels unroll statically over segments (and cells in
-            # the split kernel) — cap the round size at their limits
-            k = max(1, min(k, MAX_SEGMENTS, MAX_UNROLL // (gx * gy)))
-            # Round sizing under φ>0: the stopping rule can fire mid-round
-            # and rows read past it are speculative. For sum/mean the
-            # needed fold count has a certain lower bound
-            # (_min_folds_needed) — rounds sized by it read no speculative
-            # rows at all; for min/max a geometric ramp (1, 2, 4, …, k)
-            # bounds the overshoot by the last round. φ=0 processes every
-            # pending tile anyway → full-size rounds, zero waste.
-            predictive = phi > 0.0 and agg in ("sum", "mean")
-            size = 1 if phi > 0.0 else k
-            pos, stop = 0, False
-            while (pos < len(order) and not stop
-                   and not (phi > 0.0 and bound <= phi)):
-                if predictive:
-                    size = _min_folds_needed(acc, order[pos:], agg, phi,
-                                             lo, hi)
-                batch = order[pos:pos + min(size, k)]
-                pos += len(batch)
-                if not predictive:
-                    size = min(size * 2, k)   # geometric ramp (min/max)
-                contribs, payload = index.read_batch(batch, window, attr)
-                n_used = 0
-                for t, (cnt_q, s_q, mn_q, mx_q) in zip(batch, contribs):
-                    if phi > 0.0 and bound <= phi:
-                        stop = True
-                        break
-                    acc.fold_exact(t, cnt_q, s_q, mn_q, mx_q)
-                    n_used += 1
-                    processed += 1
-                    value, lo, hi, bound = acc.interval()
-                # refinement applies to exactly the folded prefix, so the
-                # index evolves bit-for-bit as under sequential processing
-                index.apply_batch(payload, n_used,
-                                  [t not in full_set
-                                   for t in batch[:n_used]])
+    driver = RefinementDriver(
+        acc, ScalarQueryAdapter(index, window, attr, full_ids), phi, alpha)
+    processed = driver.run(batch_k=batch_k, sequential=sequential)
 
+    value, lo, hi, bound = acc.interval()
     io_delta = index.ds.stats.delta(io_before)
+    adapt_delta = index.adapt_stats.delta(adapt_before)
     return QueryResult(
         agg=agg, attr=attr, value=float(value), lo=float(lo), hi=float(hi),
         bound=float(bound), exact=not acc.pending,
         tiles_full=n_full, tiles_partial=n_partial,
         tiles_processed=processed, objects_read=io_delta.rows_read,
         read_calls=io_delta.read_calls,
-        batch_rounds=index.adapt_stats.batch_rounds - rounds_before,
+        batch_rounds=adapt_delta.batch_rounds,
+        speculative_rows=adapt_delta.speculative_rows,
         eval_time_s=time.perf_counter() - t_start)
 
 
@@ -259,84 +179,41 @@ def evaluate_heatmap(index: TileIndex, window, agg: str, attr: str,
                      sequential: bool = False) -> HeatmapResult:
     """φ-constrained heatmap (2-D group-by) over the window's bx×by grid.
 
-    Same evaluation skeleton as :func:`evaluate`, vectorized over bins:
-    classify, build per-bin pending intervals (zero file I/O), then — if
-    the query-level bound (max per-bin relative bound) exceeds φ —
-    refine in batched rounds of up to ``batch_k`` tiles, folding each
-    processed tile's whole per-bin contribution from one packed
-    ``segment_window_bin_agg`` pass per round. Rounds ramp geometrically
-    (1, 2, 4, …, k) under φ>0 to bound speculative reads; φ=0 processes
-    every pending tile in full-size rounds. ``sequential=True`` is the
-    per-tile reference path the batched pipeline must match bit-for-bit
-    on counts, to f64 tolerance on sums, and exactly on index evolution.
+    Same evaluation skeleton as :func:`evaluate` — literally the same
+    :class:`~repro.core.refine.RefinementDriver` loop — vectorized over
+    bins via the :class:`~repro.core.bounds.GroupedAccumulator` and the
+    heatmap index adapter: classify, build per-bin pending intervals
+    (zero file I/O), then refine until the query-level bound (max
+    per-bin relative bound) meets φ, folding each processed tile's whole
+    per-bin contribution from one packed ``segment_window_bin_agg`` pass
+    per round. Under φ>0, sum/mean rounds are sized by the grouped
+    ``min_folds_needed`` bound (zero speculative rows); splits snap to
+    this query's bin grid when ``IndexConfig.bin_aligned_splits`` is on.
+    ``sequential=True`` is the per-tile reference path the batched
+    pipeline must match bit-for-bit on counts, to f64 tolerance on sums,
+    and exactly on index evolution.
     """
     t_start = time.perf_counter()
     io_before = index.ds.stats.snapshot()
-    rounds_before = index.adapt_stats.batch_rounds
+    adapt_before = index.adapt_stats.snapshot()
     bx, by = int(bins[0]), int(bins[1])
     assert bx > 0 and by > 0
     assert np.isfinite(np.asarray(window, np.float64)).all(), \
         "heatmap windows must be finite rectangles"
     index.ensure_attr(attr)
 
-    acc, full_set, n_full, n_partial = _build_grouped_accumulator(
+    # (the grouped builder's full-tile set is not needed here: heatmap
+    # refinement splits every processed tile — see HeatmapQueryAdapter)
+    acc, _, n_full, n_partial = _build_grouped_accumulator(
         index, window, agg, attr, (bx, by))
 
-    values, lo, hi, bin_bound, bound = acc.interval()
-    processed = 0
-    if acc.pending and (phi <= 0.0 or bound > phi):
-        order = adapt.score_tiles_grouped(acc.pending, agg, alpha)
-        # Unlike the scalar rule (full tiles are enriched, never split —
-        # their metadata answers any containing query), heatmap
-        # refinement splits EVERY processed tile: a full tile spanning
-        # several bins must be re-read by every future heatmap until its
-        # descendants nest inside single bins and answer from metadata.
-        if sequential:
-            for t in order:
-                if phi > 0.0 and bound <= phi:
-                    break
-                cnt_b, s_b, mn_b, mx_b = index.process_heatmap(
-                    t, window, attr, (bx, by), split=True)
-                acc.fold_exact(t, cnt_b, s_b, mn_b, mx_b)
-                processed += 1
-                values, lo, hi, bin_bound, bound = acc.interval()
-        else:
-            from ..kernels.segment_agg import MAX_SEGMENTS, MAX_UNROLL
-            gx, gy = index.cfg.split_grid
-            k = index.cfg.batch_k if batch_k is None else int(batch_k)
-            # the fold contributions come from the host mirror (no unroll
-            # bound — see read_batch_heatmap), but apply_batch's packed
-            # split kernel unrolls statically over S·(gx·gy) — cap the
-            # round size at its limits, as the scalar path does
-            k = max(1, min(k, MAX_SEGMENTS, MAX_UNROLL // (gx * gy)))
-            # φ>0: geometric ramp (1, 2, 4, …, k) bounds the speculative
-            # overshoot by the last round (the scalar path's predictive
-            # sizing needs a scalar deviation model; the per-bin max has
-            # none as cheap — see ROADMAP open items). φ=0 processes
-            # every pending tile anyway → full-size rounds, zero waste.
-            size = 1 if phi > 0.0 else k
-            pos, stop = 0, False
-            while (pos < len(order) and not stop
-                   and not (phi > 0.0 and bound <= phi)):
-                batch = order[pos:pos + min(size, k)]
-                pos += len(batch)
-                size = min(size * 2, k)
-                contribs, payload = index.read_batch_heatmap(
-                    batch, window, attr, (bx, by))
-                n_used = 0
-                for t, (cnt_b, s_b, mn_b, mx_b) in zip(batch, contribs):
-                    if phi > 0.0 and bound <= phi:
-                        stop = True
-                        break
-                    acc.fold_exact(t, cnt_b, s_b, mn_b, mx_b)
-                    n_used += 1
-                    processed += 1
-                    values, lo, hi, bin_bound, bound = acc.interval()
-                # refinement applies to exactly the folded prefix →
-                # index evolution identical to the sequential reference
-                index.apply_batch(payload, n_used, [True] * n_used)
+    driver = RefinementDriver(
+        acc, HeatmapQueryAdapter(index, window, attr, (bx, by)), phi, alpha)
+    processed = driver.run(batch_k=batch_k, sequential=sequential)
 
+    values, lo, hi, bin_bound, bound = acc.interval()
     io_delta = index.ds.stats.delta(io_before)
+    adapt_delta = index.adapt_stats.delta(adapt_before)
     return HeatmapResult(
         agg=agg, attr=attr, bins=(bx, by),
         values=np.asarray(values, np.float64),
@@ -345,7 +222,8 @@ def evaluate_heatmap(index: TileIndex, window, agg: str, attr: str,
         exact=not acc.pending, tiles_full=n_full, tiles_partial=n_partial,
         tiles_processed=processed, objects_read=io_delta.rows_read,
         read_calls=io_delta.read_calls,
-        batch_rounds=index.adapt_stats.batch_rounds - rounds_before,
+        batch_rounds=adapt_delta.batch_rounds,
+        speculative_rows=adapt_delta.speculative_rows,
         eval_time_s=time.perf_counter() - t_start)
 
 
@@ -357,7 +235,6 @@ def evaluate_heatmap_oracle(index: TileIndex, window, agg: str, attr: str,
     count/sum/mean and ±inf for min/max (matching
     :class:`~repro.core.bounds.HeatmapResult`).
     """
-    from ..kernels.ref import window_bin_ids_np
     bx, by = bins
     nbins = bx * by
     ds = index.ds
@@ -383,7 +260,6 @@ def evaluate_heatmap_oracle(index: TileIndex, window, agg: str, attr: str,
 def evaluate_oracle(index: TileIndex, window, agg: str,
                     attr: str) -> float:
     """Ground truth straight off the raw arrays (unaccounted; tests only)."""
-    from ..kernels.ops import window_mask_np
     ds = index.ds
     m = window_mask_np(ds.x, ds.y, window)
     vals = ds.read_all_unaccounted(attr)[m]

@@ -1,0 +1,205 @@
+"""The unified refinement driver: one batched classify→score→fold engine.
+
+The paper's core loop — classify tiles, bound the error from metadata,
+partially refine in score order until the bound meets φ — is the same
+whatever the *answer structure* (one scalar aggregate, a bx×by grid of
+per-bin aggregates) and whatever the *read primitive* (packed
+``segment_window_agg`` vs ``segment_window_bin_agg``). This module
+factors that loop out of ``query.evaluate`` / ``query.evaluate_heatmap``
+into a single :class:`RefinementDriver`, parameterized by
+
+- an **accumulator** implementing the refinement protocol (see
+  :mod:`repro.core.bounds`): ``agg``, ``pending``,
+  ``fold_exact(tile_id, *contrib)``, ``query_bound()`` — the scalar
+  stopping quantity — and ``min_folds_needed(remaining, phi)`` — a
+  *certain* lower bound on the folds still required, used for
+  predictive round sizing;
+- an **index adapter** (:class:`ScalarQueryAdapter` /
+  :class:`HeatmapQueryAdapter`) supplying the score order, the
+  per-tile reference read (``process_one``), the batched gathered read
+  (``read_batch``), and the split policy (``split_flags``).
+
+Round sizing under φ > 0: for sum/mean the accumulator's
+``min_folds_needed`` is certain — rounds sized by it read zero
+speculative rows (now for BOTH scalar and heatmap queries; the grouped
+bound is one cumsum over the (tiles × bins) pending-width matrix); for
+min/max a geometric ramp (1, 2, 4, …, k) bounds the overshoot by the
+last round. φ = 0 processes every pending tile in full-size rounds.
+Rows read past the stopping point are counted in
+``AdaptStats.speculative_rows`` (and surfaced per query), so the
+predictive-sizing win is directly measurable.
+
+Refinement side effects apply to exactly the folded prefix of each round
+(``TileIndex.apply_batch``), so the stopping rule, decision sequence,
+f64 arithmetic, AND the index evolution are identical to the sequential
+per-tile reference path (``sequential=True``) — batching changes the
+cost model, not the semantics. ``core.distributed`` reuses the same
+shape in SPMD form: the scoring + prefix-sum selection of its jitted
+query/heatmap steps is this loop with the fold unrolled into one
+vectorized prefix selection.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from . import adapt
+from ..kernels.segment_agg import MAX_SEGMENTS, MAX_UNROLL
+from .index import TileIndex
+
+
+class ScalarQueryAdapter:
+    """Index adapter for scalar window aggregates.
+
+    Fully-contained pending tiles are enriched, never split — their
+    metadata already answers any containing query exactly, so splitting
+    them brings no future pruning benefit.
+    """
+
+    def __init__(self, index: TileIndex, window, attr: str,
+                 full_ids: Sequence[int]):
+        self.index = index
+        self.window = window
+        self.attr = attr
+        self.full_set = set(int(i) for i in full_ids)
+
+    def score_order(self, acc, alpha: float) -> List[int]:
+        return adapt.score_tiles(acc.pending, acc.agg, alpha)
+
+    def process_one(self, tile_id: int):
+        return self.index.process(tile_id, self.window, self.attr,
+                                  split=tile_id not in self.full_set)
+
+    def read_batch(self, tile_ids):
+        return self.index.read_batch(tile_ids, self.window, self.attr)
+
+    def split_flags(self, tile_ids) -> List[bool]:
+        return [t not in self.full_set for t in tile_ids]
+
+
+class HeatmapQueryAdapter:
+    """Index adapter for heatmap (2-D group-by) queries.
+
+    Unlike the scalar policy, heatmap refinement splits EVERY processed
+    tile: a full tile spanning several bins must be re-read by every
+    future heatmap until its descendants nest inside single bins and
+    answer from metadata. Splits are bin-aligned when
+    ``IndexConfig.bin_aligned_splits`` is set: the index snaps each
+    tile's split lines to this query's bin grid so children nest after
+    ONE split (see ``TileIndex.process_heatmap`` /
+    ``read_batch_heatmap``).
+    """
+
+    def __init__(self, index: TileIndex, window, attr: str,
+                 bins: Tuple[int, int]):
+        self.index = index
+        self.window = window
+        self.attr = attr
+        self.bins = (int(bins[0]), int(bins[1]))
+
+    def score_order(self, acc, alpha: float) -> List[int]:
+        return adapt.score_tiles_grouped(acc.pending, acc.agg, alpha)
+
+    def process_one(self, tile_id: int):
+        return self.index.process_heatmap(tile_id, self.window, self.attr,
+                                          self.bins, split=True)
+
+    def read_batch(self, tile_ids):
+        return self.index.read_batch_heatmap(tile_ids, self.window,
+                                             self.attr, self.bins)
+
+    def split_flags(self, tile_ids) -> List[bool]:
+        return [True] * len(tile_ids)
+
+
+class RefinementDriver:
+    """One score → round-size → read → fold → apply loop for every query
+    type; see the module docstring for the contract."""
+
+    def __init__(self, acc, adapter, phi: float, alpha: float = 1.0):
+        # the index is the adapter's: reads, splits, and accounting must
+        # hit the same object, so the driver never takes a separate one
+        self.index: TileIndex = adapter.index
+        self.acc = acc
+        self.adapter = adapter
+        self.phi = float(phi)
+        self.alpha = float(alpha)
+
+    def _met(self, bound: float) -> bool:
+        return self.phi > 0.0 and bound <= self.phi
+
+    def run(self, *, batch_k: Optional[int] = None,
+            sequential: bool = False) -> int:
+        """Refine until the bound meets φ (or pending is exhausted).
+
+        Returns the number of tiles processed (folded). Mutates the
+        accumulator and — through ``process_one`` / ``apply_batch`` —
+        the index.
+        """
+        acc, phi = self.acc, self.phi
+        bound = acc.query_bound()
+        if not acc.pending or self._met(bound):
+            return 0
+        order = self.adapter.score_order(acc, self.alpha)
+        if sequential:
+            return self._run_sequential(order, bound)
+        return self._run_batched(order, bound, batch_k)
+
+    def _run_sequential(self, order, bound) -> int:
+        """Per-tile reference path: one read + one kernel per tile. The
+        batched path must match it bit-for-bit on counts and index
+        evolution, to f64 tolerance on sums."""
+        acc = self.acc
+        processed = 0
+        for t in order:
+            if self._met(bound):
+                break
+            acc.fold_exact(t, *self.adapter.process_one(t))
+            processed += 1
+            bound = acc.query_bound()
+        return processed
+
+    def _run_batched(self, order, bound, batch_k: Optional[int]) -> int:
+        acc, phi, index = self.acc, self.phi, self.index
+        gx, gy = index.cfg.split_grid
+        k = index.cfg.batch_k if batch_k is None else int(batch_k)
+        # packed kernels unroll statically over segments (and cells in
+        # the split kernel) — cap the round size at their limits
+        k = max(1, min(k, MAX_SEGMENTS, MAX_UNROLL // (gx * gy)))
+        # Round sizing under φ>0: the stopping rule can fire mid-round
+        # and rows read past it are speculative. For sum/mean the needed
+        # fold count has a certain lower bound (min_folds_needed) —
+        # rounds sized by it read no speculative rows at all; for
+        # min/max a geometric ramp (1, 2, 4, …, k) bounds the overshoot
+        # by the last round. φ=0 processes every pending tile anyway →
+        # full-size rounds, zero waste.
+        predictive = phi > 0.0 and acc.agg in ("sum", "mean")
+        size = 1 if phi > 0.0 else k
+        processed, pos, stop = 0, 0, False
+        while pos < len(order) and not stop and not self._met(bound):
+            if predictive:
+                size = acc.min_folds_needed(order[pos:], phi)
+            batch = order[pos:pos + min(size, k)]
+            pos += len(batch)
+            if not predictive:
+                size = min(size * 2, k)
+            contribs, payload = self.adapter.read_batch(batch)
+            n_used = 0
+            for t, contrib in zip(batch, contribs):
+                if self._met(bound):
+                    stop = True
+                    break
+                acc.fold_exact(t, *contrib)
+                n_used += 1
+                processed += 1
+                bound = acc.query_bound()
+            # rows of tiles read this round but never folded were
+            # speculative — account them so predictive sizing's zero-
+            # overshoot guarantee is observable per query
+            bounds_ = payload["bounds"]
+            index.adapt_stats.speculative_rows += int(
+                bounds_[len(batch)] - bounds_[n_used])
+            # refinement applies to exactly the folded prefix, so the
+            # index evolves bit-for-bit as under sequential processing
+            index.apply_batch(payload, n_used,
+                              self.adapter.split_flags(batch[:n_used]))
+        return processed

@@ -28,6 +28,7 @@ from . import ref
 from .window_agg import window_agg_pallas, LANES, DEFAULT_BLOCK_ROWS
 from .bin_agg import bin_agg_pallas
 from .segment_agg import (segment_window_agg_pallas, segment_bin_agg_pallas,
+                          segment_bin_agg_edges_pallas,
                           segment_window_bin_agg_pallas)
 
 
@@ -259,6 +260,54 @@ def segment_bin_agg(xs, ys, vals, boundaries, bboxes, *, gx, gy,
         jnp.asarray(n, jnp.int32), n_seg, gx, gy, backend, interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("n_seg", "gx", "gy", "backend",
+                                             "interpret"))
+def _segment_bin_agg_edges_flat(xs, ys, vals, sids, x_edges, y_edges, n,
+                                n_seg, gx, gy, backend, interpret):
+    if backend == "jnp":
+        valid = jnp.arange(xs.shape[0]) < n
+        return ref.segment_bin_agg_edges_ref(xs, ys, vals, sids, x_edges,
+                                             y_edges, valid, n_seg)
+    xs2, ys2, vs2, sid2, valid2 = pack2d(xs, ys, vals, sids, n=xs.shape[0])
+    valid2 = valid2 * (jnp.arange(valid2.size).reshape(valid2.shape) <
+                       n).astype(jnp.int8)
+    return segment_bin_agg_edges_pallas(xs2, ys2, vs2, sid2, valid2,
+                                        x_edges, y_edges, n_seg=n_seg,
+                                        gx=gx, gy=gy, interpret=interpret)
+
+
+def segment_bin_agg_edges(xs, ys, vals, boundaries, x_edges, y_edges, *,
+                          backend=None, interpret=True):
+    """Per-segment, per-cell (count, sum, min, max) under per-segment
+    SPLIT EDGES: one packed call that cuts every segment s of the
+    concatenated stream along its own ``x_edges[s]`` (gx+1,) /
+    ``y_edges[s]`` (gy+1,) — the bin-aligned multi-tile-split metadata
+    kernel (split lines snapped to a heatmap grid instead of the even
+    gx×gy subdivision). Returns ``(S, gx*gy, 4)``; cell id = cy*gx + cx.
+    Backend semantics as in :func:`segment_window_agg` ("np" ⇒ float64
+    host mirror whose cell assignment matches
+    ``geometry.edge_cell_ids`` bit-for-bit).
+    """
+    backend = backend or default_backend()
+    boundaries = np.asarray(boundaries, np.int64)
+    x_edges = np.asarray(x_edges, np.float64)
+    y_edges = np.asarray(y_edges, np.float64)
+    if backend == "np":
+        return ref.segment_bin_agg_edges_np(xs, ys, vals, boundaries,
+                                            x_edges, y_edges)
+    n_seg = len(boundaries) - 1
+    gx = x_edges.shape[1] - 1
+    gy = y_edges.shape[1] - 1
+    n = int(boundaries[-1])
+    sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
+    xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
+    return _segment_bin_agg_edges_flat(
+        jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(vals),
+        jnp.asarray(sids), jnp.asarray(x_edges, jnp.float32),
+        jnp.asarray(y_edges, jnp.float32), jnp.asarray(n, jnp.int32),
+        n_seg, gx, gy, backend, interpret)
+
+
 @functools.partial(jax.jit, static_argnames=("n_seg", "bx", "by", "backend",
                                              "interpret"))
 def _segment_window_bin_agg_flat(xs, ys, vals, sids, window, n, n_seg, bx,
@@ -314,5 +363,5 @@ def window_mask_np(xs, ys, window):
 
 
 __all__ = ["window_agg", "bin_agg", "segment_window_agg", "segment_bin_agg",
-           "segment_window_bin_agg", "window_count", "window_mask_np",
-           "pack2d", "default_backend"]
+           "segment_bin_agg_edges", "segment_window_bin_agg",
+           "window_count", "window_mask_np", "pack2d", "default_backend"]

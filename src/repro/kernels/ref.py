@@ -137,6 +137,45 @@ def segment_window_bin_agg_ref(xs, ys, vals, sids, window, grid, valid,
     return jnp.stack(out)
 
 
+def segment_bin_agg_edges_ref(xs, ys, vals, sids, x_edges, y_edges, valid,
+                              n_seg):
+    """Per-segment, per-cell aggregates under per-segment SPLIT EDGES.
+
+    The bin-aligned-split primitive: instead of the even gx×gy grid of
+    each segment's bbox (:func:`segment_bin_agg_ref`), segment s is cut
+    along its own explicit edge arrays ``x_edges[s]`` (gx+1,) /
+    ``y_edges[s]`` (gy+1,) — e.g. snapped to a heatmap bin grid. Cell
+    ownership: child cx owns ``[x_edges[s, cx], x_edges[s, cx+1])``,
+    objects past the outer edges are clamped into the boundary cells
+    (``cx = Σ_i 1[x ≥ x_edges[s, i]]`` over interior edges — every valid
+    object lands in exactly one cell). Returns float32
+    ``(n_seg, gx*gy, 4)``; cell id = cy*gx + cx.
+    """
+    gx = x_edges.shape[1] - 1
+    gy = y_edges.shape[1] - 1
+    vm = vals.astype(jnp.float32)
+    out = []
+    for s in range(n_seg):
+        cx = jnp.zeros(xs.shape, jnp.int32)
+        for i in range(1, gx):
+            cx = cx + (xs >= x_edges[s, i]).astype(jnp.int32)
+        cy = jnp.zeros(ys.shape, jnp.int32)
+        for i in range(1, gy):
+            cy = cy + (ys >= y_edges[s, i]).astype(jnp.int32)
+        cid = cy * gx + cx
+        ms = valid & (sids == s)
+        cells = []
+        for c in range(gx * gy):
+            m = ms & (cid == c)
+            cnt = jnp.sum(m, dtype=jnp.float32)
+            total = jnp.sum(jnp.where(m, vm, 0.0), dtype=jnp.float32)
+            mn = jnp.min(jnp.where(m, vm, jnp.inf))
+            mx = jnp.max(jnp.where(m, vm, -jnp.inf))
+            cells.append(jnp.stack([cnt, total, mn, mx]))
+        out.append(jnp.stack(cells))
+    return jnp.stack(out)
+
+
 def segment_bin_agg_ref(xs, ys, vals, sids, bboxes, grid, valid, n_seg):
     """Per-segment, per-cell aggregates; segment s binned by bboxes[s].
 
@@ -219,6 +258,67 @@ def segment_bin_agg_np(xs, ys, vals, boundaries, bboxes, gx, gy):
     cy = np.clip(np.floor((ys - bboxes[sid, 1]) / ch[sid]).astype(np.int64),
                  0, gy - 1)
     key = sid * k + cy * gx + cx
+    order = np.argsort(key, kind="stable")
+    vs_sorted = vals[order]
+    cell_bounds = np.searchsorted(key[order], np.arange(n_seg * k + 1))
+    out = np.empty((n_seg * k, 4), np.float64)
+    for c in range(n_seg * k):
+        a, b = cell_bounds[c], cell_bounds[c + 1]
+        if b > a:
+            seg = vs_sorted[a:b]
+            out[c] = (b - a, seg.sum(dtype=np.float64), seg.min(), seg.max())
+        else:
+            out[c] = (0, 0.0, np.inf, -np.inf)
+    return out.reshape(n_seg, k, 4)
+
+
+def edge_cell_ids_np(xs, ys, x_edges, y_edges, sid):
+    """THE host ownership rule for explicit (bin-aligned) split edges.
+
+    Child cx of segment s owns ``[x_edges[s, cx], x_edges[s, cx+1])``
+    (``cx = Σ_i 1[x ≥ edge_i]`` over interior edges, f64 comparisons);
+    points past the outer edges clamp into the boundary cells, so every
+    object lands in exactly one cell. This single implementation serves
+    both the index's segment reorganization
+    (``core.geometry.edge_cell_ids_segmented`` delegates here) and the
+    child-metadata mirror below — they MUST agree bit-for-bit or
+    reorganized segments desynchronize from their metadata.
+    ``x_edges``/``y_edges`` are ``(S, gx+1)`` / ``(S, gy+1)``; ``sid``
+    maps each object to its segment row. Returns cell id = cy*gx + cx.
+    """
+    x_edges = np.asarray(x_edges, np.float64)
+    y_edges = np.asarray(y_edges, np.float64)
+    gx = x_edges.shape[1] - 1
+    gy = y_edges.shape[1] - 1
+    cx = (xs[:, None] >= x_edges[sid][:, 1:-1]).sum(axis=1) \
+        if gx > 1 else np.zeros(len(xs), np.int64)
+    cy = (ys[:, None] >= y_edges[sid][:, 1:-1]).sum(axis=1) \
+        if gy > 1 else np.zeros(len(ys), np.int64)
+    return cy * gx + cx
+
+
+def segment_bin_agg_edges_np(xs, ys, vals, boundaries, x_edges, y_edges):
+    """Per-contiguous-segment, per-cell aggregates under per-segment
+    split edges (f64 ``(S, K, 4)``) — host mirror of
+    :func:`segment_bin_agg_edges_ref` in the contiguous layout.
+
+    Cell ids come from :func:`edge_cell_ids_np` — the one host
+    ownership rule, shared with the index's segment reorganization —
+    and each cell's sum accumulates its own sorted slice in float64, so
+    a k-segment call is bit-for-bit the concatenation of k
+    single-segment calls (the sequential split path the batched
+    multi-tile split replaces).
+    """
+    xs, ys = np.asarray(xs), np.asarray(ys)
+    vals = np.asarray(vals, np.float32)
+    x_edges = np.asarray(x_edges, np.float64)
+    y_edges = np.asarray(y_edges, np.float64)
+    n_seg = len(boundaries) - 1
+    gx = x_edges.shape[1] - 1
+    gy = y_edges.shape[1] - 1
+    k = gx * gy
+    sid = np.repeat(np.arange(n_seg), np.diff(boundaries))
+    key = sid * k + edge_cell_ids_np(xs, ys, x_edges, y_edges, sid)
     order = np.argsort(key, kind="stable")
     vs_sorted = vals[order]
     cell_bounds = np.searchsorted(key[order], np.arange(n_seg * k + 1))

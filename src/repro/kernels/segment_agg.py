@@ -9,7 +9,10 @@ in a single kernel invocation,
   exact in-window contribution of every tile in the batch; and
 - per-segment, per-cell aggregates over each tile's own ``gx × gy`` split
   (``segment_bin_agg_pallas``) — the child metadata of every tile split in
-  the batch; and
+  the batch; or, when splits are bin-aligned, over each tile's own
+  explicit split-edge arrays (``segment_bin_agg_edges_pallas`` — cell ids
+  are a static unroll of ``Σ_i 1[x ≥ edge_i]`` compares instead of the
+  uniform floor-divide, so split lines can snap to a heatmap grid); and
 - per-segment, per-cell aggregates over ONE shared ``bx × by`` grid laid
   over the query window, in-window objects only
   (``segment_window_bin_agg_pallas``) — every tile's exact per-bin heatmap
@@ -186,6 +189,87 @@ def segment_window_bin_agg_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
         out_shape=jax.ShapeDtypeStruct((grid, n_seg * k, 4), jnp.float32),
         interpret=interpret,
     )(win2d, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
+      vals2d.astype(jnp.float32), sid2d.astype(jnp.float32), valid2d)
+
+    cnt = jnp.sum(partial[:, :, 0], axis=0)
+    s = jnp.sum(partial[:, :, 1], axis=0)
+    mn = jnp.min(partial[:, :, 2], axis=0)
+    mx = jnp.max(partial[:, :, 3], axis=0)
+    return jnp.stack([cnt, s, mn, mx], axis=-1).reshape(n_seg, k, 4)
+
+
+def _make_segment_bin_agg_edges_kernel(n_seg: int, gx: int, gy: int):
+    k = gx * gy
+
+    def kernel(xe_ref, ye_ref, x_ref, y_ref, v_ref, sid_ref, valid_ref,
+               out_ref):
+        xs = x_ref[...]
+        ys = y_ref[...]
+        vs = v_ref[...]
+        sid = sid_ref[...]
+        valid = valid_ref[...] != 0
+        for s in range(n_seg):  # static unroll over segments…
+            # ownership under explicit edges: child i owns
+            # [edge_i, edge_{i+1}); outer overflow clamps into the
+            # boundary cells — same rule as geometry.edge_cell_ids
+            cx = jnp.zeros_like(xs, jnp.int32)
+            for i in range(1, gx):
+                cx = cx + (xs >= xe_ref[s, i]).astype(jnp.int32)
+            cy = jnp.zeros_like(ys, jnp.int32)
+            for i in range(1, gy):
+                cy = cy + (ys >= ye_ref[s, i]).astype(jnp.int32)
+            cid = cy * gx + cx
+            ms = valid & (sid == s)
+            for c in range(k):  # …and cells: S·K masked reductions
+                m = ms & (cid == c)
+                out_ref[0, s * k + c, 0] = jnp.sum(m.astype(jnp.float32))
+                out_ref[0, s * k + c, 1] = jnp.sum(jnp.where(m, vs, 0.0))
+                out_ref[0, s * k + c, 2] = jnp.min(jnp.where(m, vs, jnp.inf))
+                out_ref[0, s * k + c, 3] = jnp.max(
+                    jnp.where(m, vs, -jnp.inf))
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_seg", "gx", "gy", "block_rows",
+                                    "interpret"))
+def segment_bin_agg_edges_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
+                                 x_edges, y_edges, *, n_seg, gx, gy,
+                                 block_rows=DEFAULT_BLOCK_ROWS,
+                                 interpret=True):
+    """Per-segment, per-cell aggregation along explicit split edges.
+
+    Like :func:`segment_bin_agg_pallas`, but segment s is cut along its
+    own ``x_edges[s]`` (gx+1,) / ``y_edges[s]`` (gy+1,) instead of the
+    even grid of a bbox — the bin-aligned-split metadata kernel. Returns
+    float32 ``(n_seg, gx*gy, 4)``; cell id = cy*gx + cx.
+    """
+    k = gx * gy
+    assert n_seg <= MAX_SEGMENTS, n_seg
+    assert n_seg * k <= MAX_UNROLL, (n_seg, gx, gy)
+    rows = xs2d.shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = rows // block_rows
+    xe2d = x_edges.reshape(n_seg, gx + 1).astype(jnp.float32)
+    ye2d = y_edges.reshape(n_seg, gy + 1).astype(jnp.float32)
+    valid2d = valid2d.astype(jnp.int8)
+
+    partial = pl.pallas_call(
+        _make_segment_bin_agg_edges_kernel(n_seg, gx, gy),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((n_seg, gx + 1), lambda i: (0, 0)),  # x edges (broadcast)
+            pl.BlockSpec((n_seg, gy + 1), lambda i: (0, 0)),  # y edges (broadcast)
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_seg * k, 4), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid, n_seg * k, 4), jnp.float32),
+        interpret=interpret,
+    )(xe2d, ye2d, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
       vals2d.astype(jnp.float32), sid2d.astype(jnp.float32), valid2d)
 
     cnt = jnp.sum(partial[:, :, 0], axis=0)

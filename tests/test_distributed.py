@@ -57,6 +57,55 @@ def test_distributed_query_matches_oracle_and_bound():
     """))
 
 
+def test_distributed_heatmap_matches_oracle_and_bounds():
+    """Per-bin values + bounds from the SPMD heatmap step match the
+    single-host oracle: every occupied bin's CI contains its ground
+    truth, φ=0 equals the truth to f32 tolerance, and under φ>0 the
+    reported per-bin-max bound meets φ (or everything was processed)."""
+    print(run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.core.distributed import DistributedAQPEngine, DistConfig
+        from repro.data import make_synthetic_dataset
+        from repro.data.synthetic import exploration_path
+        from repro.kernels.ref import window_bin_ids_np
+
+        BX, BY = 6, 4
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        ds = make_synthetic_dataset(n=80_000, seed=3)
+        eng = DistributedAQPEngine(ds, mesh, DistConfig(grid=(16, 16)))
+        wins = exploration_path(ds, n_queries=4, target_objects=8000)
+        n = len(eng.xs)
+        xs = np.asarray(ds.x[:n]); ys = np.asarray(ds.y[:n])
+        col = ds.read_all_unaccounted("a0")[:n]
+        for phi in (0.0, 0.05):
+            for w in wins:
+                out = eng.heatmap(w, "a0", bins=(BX, BY), phi=phi)
+                m, cid = window_bin_ids_np(xs, ys, w, BX, BY)
+                truth = np.bincount(cid[m], weights=col[m].astype(
+                    np.float64), minlength=BX * BY)
+                occ = np.bincount(cid[m], minlength=BX * BY) > 0
+                eps = 1e-4 * np.abs(truth) + 0.5   # f32 partial-sum slack
+                assert (out["lo"][occ] - eps[occ] <= truth[occ]).all(), \\
+                    (phi, w)
+                assert (truth[occ] <= out["hi"][occ] + eps[occ]).all(), \\
+                    (phi, w)
+                if phi == 0.0:
+                    np.testing.assert_allclose(out["values"][occ],
+                                               truth[occ], rtol=1e-3,
+                                               atol=1.0)
+                else:
+                    assert out["bound"] <= phi + 1e-6 or \\
+                        out["n_processed"] == out["n_partial"]
+                # per-bin bound covers each bin's observed deviation
+                err = np.abs(out["values"][occ] - truth[occ])
+                cap = out["bin_bound"][occ] * np.maximum(
+                    np.abs(out["values"][occ]), 1e-9) + eps[occ]
+                assert (err <= cap).all(), (phi, w)
+        print("DIST-HEATMAP-OK")
+    """))
+
+
 def test_distributed_refine_metadata():
     print(run_sub("""
         import jax, numpy as np

@@ -81,6 +81,10 @@ def test_batched_matches_sequential_heatmap(agg, phi):
         np.testing.assert_allclose(rb.lo, rs.lo, rtol=1e-12, atol=1e-9)
         np.testing.assert_allclose(rb.hi, rs.hi, rtol=1e-12, atol=1e-9)
         assert rb.bound == pytest.approx(rs.bound, rel=1e-12, abs=1e-12)
+        if agg in ("sum", "mean"):
+            # predictive grouped round sizing: zero speculative rows
+            assert rb.objects_read == rs.objects_read
+            assert rb.speculative_rows == 0
     # identical index evolution across the whole workload
     i_seq, i_bat = e_seq.index, e_bat.index
     assert i_bat.n_tiles == i_seq.n_tiles

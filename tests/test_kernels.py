@@ -197,6 +197,50 @@ def test_segment_bin_agg_backends_agree(lens, grid):
         np.testing.assert_allclose(a[s], want, rtol=1e-4, atol=2e-3)
 
 
+@pytest.mark.parametrize("lens", [[1, 300], [0, 37, 500, 128, 3],
+                                  [700] * 6])
+@pytest.mark.parametrize("grid", [(2, 2), (3, 2)])
+def test_segment_bin_agg_edges_backends_agree(lens, grid):
+    """Bin-aligned split kernel: per-segment explicit edges across all
+    backends; uniform edges reproduce cell totals of the bbox variant."""
+    gx, gy = grid
+    xs, ys, vs, bounds = _segments(lens)
+    rng = np.random.default_rng(11)
+    n_seg = len(lens)
+    lo = rng.uniform(0, 40, (n_seg, 2))
+    hi = lo + rng.uniform(30, 60, (n_seg, 2))
+    # non-uniform interior edges (snapped-split shape): random cuts
+    # strictly inside each extent, sorted
+    xe = np.concatenate(
+        [lo[:, :1], np.sort(rng.uniform(lo[:, :1] + 1, hi[:, :1] - 1,
+                                        (n_seg, gx - 1)), axis=1),
+         hi[:, :1]], axis=1)
+    ye = np.concatenate(
+        [lo[:, 1:], np.sort(rng.uniform(lo[:, 1:] + 1, hi[:, 1:] - 1,
+                                        (n_seg, gy - 1)), axis=1),
+         hi[:, 1:]], axis=1)
+    a = np.asarray(ops.segment_bin_agg_edges(xs, ys, vs, bounds, xe, ye,
+                                             backend="np"))
+    b = np.asarray(ops.segment_bin_agg_edges(xs, ys, vs, bounds, xe, ye,
+                                             backend="jnp"))
+    c = np.asarray(ops.segment_bin_agg_edges(xs, ys, vs, bounds, xe, ye,
+                                             backend="pallas"))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=2e-3)
+    np.testing.assert_allclose(b, c, rtol=1e-5, atol=2e-3)
+    np.testing.assert_array_equal(b[:, :, 0], c[:, :, 0])
+    # cells partition every segment (ownership: each object in exactly
+    # one cell, outer overflow clamped in)
+    np.testing.assert_array_equal(a[:, :, 0].sum(axis=1),
+                                  np.diff(bounds))
+    # composition invariance of the np mirror: packed == per-segment
+    for s in range(n_seg):
+        sl = slice(bounds[s], bounds[s + 1])
+        solo = np.asarray(ops.segment_bin_agg_edges(
+            xs[sl], ys[sl], vs[sl], [0, lens[s]], xe[s:s + 1],
+            ye[s:s + 1], backend="np"))[0]
+        np.testing.assert_array_equal(a[s], solo)
+
+
 @pytest.mark.parametrize("lens", [[1, 300], [0, 37, 500, 128, 3]])
 @pytest.mark.parametrize("grid", [(2, 2), (4, 3)])
 def test_segment_window_bin_agg_backends_agree(lens, grid):
