@@ -75,11 +75,13 @@ def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
-def mixed_io_summary(tot) -> str:
+def mixed_io_summary(tot, extra=None) -> str:
     """Attribute a session's I/O per query type from
     ``EngineTrace.totals()``'s scalar/heatmap breakdown (+ the
     speculative-rows accounting that makes predictive round sizing's
-    zero-overshoot measurable in BENCH output)."""
+    zero-overshoot measurable in BENCH output). ``extra`` passes
+    additional ``key=value`` parts through into the same derived field
+    (e.g. the per-bin achieved-error stats of a φ_b heatmap session)."""
     parts = [f"rows_read={tot['total_objects_read']}",
              f"read_calls={tot['total_read_calls']}",
              f"speculative_rows={tot['total_speculative_rows']}"]
@@ -90,4 +92,6 @@ def mixed_io_summary(tot) -> str:
                 f";rows={tot[f'{kind}_objects_read']}"
                 f";reads={tot[f'{kind}_read_calls']}"
                 f";spec={tot[f'{kind}_speculative_rows']}")
+    if extra:
+        parts.extend([extra] if isinstance(extra, str) else list(extra))
     return ";".join(parts)

@@ -8,13 +8,39 @@ each viewport renders a bx×by heatmap, and the φ-constrained path should
 refinement into one gathered read + one packed segment_window_bin_agg
 kernel per round, and (c) get cheaper along the path as tiles split
 finer than bins and start answering from metadata alone.
+
+The φ_b section runs the same viewport workload on a SKEWED dataset (one
+hot spatial corner, near-zero values everywhere else) three ways —
+uniform φ, ε_abs-floored φ_b (``AccuracyPolicy``), center-salience φ_b —
+and reports objects read plus the per-bin ACHIEVED error
+(worst/mean |value − oracle| over occupied bins, via the
+``common.mixed_io_summary`` passthrough): uniform φ is dragged toward
+exactness by the near-zero bins, the floored allocation is not.
+
+    python -m benchmarks.heatmap_exploration --phi-floor 0.02 \
+        --salience center
+
+``--phi-floor`` is RELATIVE to the hottest bin's |oracle| (a scale-free
+spec for the absolute ε_abs floor); ``--salience none`` drops the
+salience session.
 """
 from __future__ import annotations
 
+import argparse
+
+import numpy as np
+
+from repro.core import AQPEngine, AccuracyPolicy, IndexConfig
+from repro.data.rawfile import RawDataset
+
+from . import common
 from .common import emit, fresh_engine, mixed_io_summary, workload
 
 BINS = (8, 8)
 N_QUERIES = 20
+PHI_B = 0.05              # constraint of the φ_b comparison sessions
+FLOOR_FRAC = 0.02         # default ε_abs = 2% of the hottest bin
+SALIENCE = "center"
 
 
 def run_session(phi: float, bins=BINS, n_queries=N_QUERIES):
@@ -25,7 +51,87 @@ def run_session(phi: float, bins=BINS, n_queries=N_QUERIES):
     return eng, eng.trace.totals()
 
 
-def main():
+def skewed_dataset(n=None, seed=3):
+    """One hot corner of large values, near-zero noise elsewhere — the
+    regime where uniform φ degenerates to exact per-bin answering."""
+    n = (common.N_ROWS // 4) if n is None else n
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 1000, n).astype(np.float32)
+    y = rng.uniform(0, 1000, n).astype(np.float32)
+    hot = (x > 750) & (y > 750)
+    v = np.where(hot, rng.normal(100, 10, n),
+                 rng.normal(0, 0.02, n)).astype(np.float32)
+    return RawDataset(x, y, {"a0": v}, storage="csv")
+
+
+def run_phi_b_session(policy, ds, wins, truths, bins=BINS, phi=PHI_B):
+    """One skewed-viewport session; returns (totals, achieved-error and
+    bound stats vs the per-bin oracle, summed over the path).
+    ``truths`` carries the per-window oracle grids — they depend only on
+    (ds, window, bins), so the caller computes them once and shares them
+    across the uniform/floored/salience sessions."""
+    eng = AQPEngine(ds, IndexConfig(grid0=(8, 8), min_split_count=512,
+                                    init_metadata_attrs=("a0",)))
+    worst_err = worst_bound = mean_err = 0.0
+    unmet = 0
+    for w, truth in zip(wins, truths):
+        r = eng.heatmap(w, "sum", "a0", bins=bins, phi=phi, policy=policy)
+        fin = np.isfinite(truth)
+        err = np.abs(r.values[fin] - truth[fin])
+        worst_err = max(worst_err, float(err.max(initial=0.0)))
+        mean_err += float(err.mean()) / len(wins)
+        worst_bound = max(worst_bound, r.bound)
+        if r.bin_met is not None and not r.bin_met.all():
+            unmet += 1
+    return eng.trace.totals(), {
+        "worst_bin_err": worst_err, "mean_bin_err": mean_err,
+        "worst_bin_bound": worst_bound, "queries_unmet": unmet}
+
+
+def phi_b_comparison(floor_frac=FLOOR_FRAC, salience=SALIENCE):
+    """Uniform φ vs floored/salience φ_b on the skewed dataset — the
+    per-bin-allocation acceptance numbers."""
+    ds = skewed_dataset()
+    wins = [(500.0 + 20.0 * (i % 5), 500.0 + 20.0 * (i // 5),
+             1000.0, 1000.0) for i in range(min(N_QUERIES, 10))]
+    # per-window oracles, computed ONCE and shared by every session (and
+    # by the floor calibration) — they depend only on (ds, window, bins)
+    eng0 = AQPEngine(ds, IndexConfig(grid0=(8, 8)))
+    truths = [eng0.heatmap_oracle(w, "sum", "a0", bins=BINS)
+              for w in wins]
+    # calibrate the absolute floor off the hottest bin (scale-free spec)
+    eps_abs = floor_frac * float(np.nanmax(np.abs(
+        np.where(np.isfinite(truths[0]), truths[0], 0.0))))
+
+    sessions = [("uniform", None),
+                ("floored", AccuracyPolicy(eps_abs=eps_abs))]
+    if salience != "none":
+        sessions.append(
+            ("salience", AccuracyPolicy(eps_abs=eps_abs,
+                                        salience=salience)))
+    out = {}
+    for name, policy in sessions:
+        tot, errs = run_phi_b_session(policy, ds, wins, truths)
+        emit(f"heatmap_phi_b_{name}",
+             tot["total_time_s"] * 1e6 / tot["queries"],
+             mixed_io_summary(tot, extra=[
+                 f"worst_bin_err={errs['worst_bin_err']:.3f}",
+                 f"mean_bin_err={errs['mean_bin_err']:.3f}",
+                 f"worst_bin_bound={errs['worst_bin_bound']:.4f}",
+                 f"queries_unmet={errs['queries_unmet']}",
+                 f"eps_abs={eps_abs:.1f}"]))
+        out[name] = tot
+    ratio = out["floored"]["total_objects_read"] / max(
+        out["uniform"]["total_objects_read"], 1)
+    emit("heatmap_phi_b_gain", 0.0,
+         f"reads_uniform={out['uniform']['total_objects_read']};"
+         f"reads_floored={out['floored']['total_objects_read']};"
+         f"floored_read_frac={ratio:.3f};"
+         f"speculative_floored={out['floored']['total_speculative_rows']}")
+    return out
+
+
+def main(floor_frac=FLOOR_FRAC, salience=SALIENCE):
     out = {}
     for name, phi in (("exact", 0.0), ("phi1", 0.01), ("phi5", 0.05)):
         eng, tot = run_session(phi)
@@ -49,8 +155,21 @@ def main():
          f"reads_exact={out['exact']['total_objects_read']};"
          f"reads_phi5={out['phi5']['total_objects_read']};"
          f"speculative_phi5={out['phi5']['total_speculative_rows']}")
+    out["phi_b"] = phi_b_comparison(floor_frac, salience)
     return out
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--phi-floor", type=float, default=FLOOR_FRAC,
+                    help="eps_abs floor as a fraction of the hottest "
+                         "bin's |oracle| (default 0.02)")
+    ap.add_argument("--salience", choices=["center", "none"],
+                    default=SALIENCE)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-n smoke sizing (same code paths)")
+    a = ap.parse_args()
+    if a.smoke:
+        common.configure_smoke()
+    print("name,us_per_call,derived")
+    main(floor_frac=a.phi_floor, salience=a.salience)

@@ -1,7 +1,8 @@
 # The paper's primary contribution: partial adaptive indexing for
 # approximate query answering (Maroulis et al., BigVis@VLDB 2024).
-from .bounds import (GroupedAccumulator, GroupedPendingTile, HeatmapResult,
-                     PendingTile, QueryAccumulator, QueryResult)
+from .bounds import (AccuracyPolicy, GroupedAccumulator, GroupedPendingTile,
+                     HeatmapResult, PendingTile, QueryAccumulator,
+                     QueryResult)
 from .engine import AQPEngine, EngineTrace
 from .index import AdaptStats, IndexConfig, TileIndex
 from .query import (evaluate, evaluate_heatmap, evaluate_heatmap_oracle,
@@ -11,6 +12,7 @@ from .refine import (HeatmapQueryAdapter, RefinementDriver,
 
 __all__ = [
     "AQPEngine", "EngineTrace", "TileIndex", "IndexConfig", "AdaptStats",
+    "AccuracyPolicy",
     "QueryResult", "QueryAccumulator", "PendingTile",
     "HeatmapResult", "GroupedAccumulator", "GroupedPendingTile",
     "RefinementDriver", "ScalarQueryAdapter", "HeatmapQueryAdapter",

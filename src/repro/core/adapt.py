@@ -53,7 +53,8 @@ def score_tiles(pending: Dict[int, PendingTile], agg: str,
 
 
 def score_tiles_grouped(pending: Dict[int, GroupedPendingTile], agg: str,
-                        alpha: float = 1.0) -> List[int]:
+                        alpha: float = 1.0,
+                        bin_weight=None) -> List[int]:
     """Heatmap processing order: same policy, but ŵ(t) is the tile's
     WORST per-bin CI-width contribution.
 
@@ -63,14 +64,34 @@ def score_tiles_grouped(pending: Dict[int, GroupedPendingTile], agg: str,
     is the most valuable to process); for min/max it is the value-range
     width, as in the scalar policy. The cost term uses the tile's total
     in-window count.
+
+    ``bin_weight`` (per-bin, from
+    :meth:`~repro.core.bounds.GroupedAccumulator.score_bin_weight`)
+    turns ŵ(t) into the worst *budget-normalized* contribution — each
+    bin's CI width is divided by its own deviation budget
+    ``max(φ_b·v_max_b, ε_abs)`` before the max, so under a non-uniform
+    :class:`~repro.core.bounds.AccuracyPolicy` refinement effort flows
+    to the bins whose constraints are tight (and skips don't-care bins,
+    weight 0). ``None`` keeps the uniform-φ score order bit-for-bit.
     """
     if not pending:
         return []
     ids = list(pending.keys())
     if agg in ("sum", "mean"):
-        w = np.array([pending[t].width * pending[t].cnt_b.max()
-                      for t in ids], np.float64)
-    else:
+        if bin_weight is None:
+            w = np.array([pending[t].width * pending[t].cnt_b.max()
+                          for t in ids], np.float64)
+        else:
+            w = np.array([pending[t].width
+                          * (pending[t].cnt_b * bin_weight).max()
+                          for t in ids], np.float64)
+    elif bin_weight is None:
         w = np.array([pending[t].width for t in ids], np.float64)
+    else:
+        # min/max: the tile's value-range width lands on every bin it
+        # touches — weigh by the tightest-budget touched bin
+        w = np.array([pending[t].width
+                      * ((pending[t].cnt_b > 0) * bin_weight).max()
+                      for t in ids], np.float64)
     c = np.array([pending[t].cnt_b.sum() for t in ids], np.float64)
     return _score_order(ids, w, c, alpha)

@@ -32,16 +32,119 @@ over the window's ``bx × by`` grid, a pending tile contributes
 ``cnt_b · [vmin, vmax]`` to every bin it touches (per-bin counts are
 exact, from the axis index), and the query-level bound is the max per-bin
 relative bound over occupied bins.
+
+Per-bin constraint allocation: by default every bin shares the query's
+scalar φ, but an :class:`AccuracyPolicy` turns the single constraint into
+a **per-bin vector φ_b** (user weights × rendered-pixel salience) plus an
+**absolute-error floor ε_abs**. Bin b is then satisfied once its CI
+half-width fits its own budget ``max(φ_b·|value_b|, ε_abs)`` — so a
+near-zero-valued bin can no longer drag refinement to exactness, and
+refinement effort flows to the bins the user actually cares about.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 AGGS = ("sum", "mean", "min", "max", "count")
 EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class AccuracyPolicy:
+    """Per-bin accuracy allocation for heatmap queries.
+
+    Composes the query's scalar constraint φ into a per-bin vector φ_b
+    and an absolute-error floor:
+
+    - ``weights`` — per-bin multipliers on φ (flat ``(bx·by,)`` or grid
+      ``(by, bx)``; broadcastable scalar allowed). ``w_b > 1`` loosens a
+      bin, ``w_b < 1`` tightens it, ``np.inf`` means "don't care" (the
+      bin never blocks refinement and never attracts effort).
+    - ``salience`` — rendered-pixel importance in ``(0, 1]``: either the
+      string ``"center"`` (a viewport-center-weighted falloff — the bins
+      the eye fixates get the tight constraint, the periphery relaxes
+      toward ``φ/salience_floor``) or a caller-supplied per-bin mask of
+      the same shapes as ``weights``. φ_b is divided by salience, so
+      ``s_b = 1`` keeps φ and ``s_b → 0⁺`` loosens without bound.
+    - ``eps_abs`` — absolute deviation floor: bin b's budget is
+      ``max(φ_b·|value_b|, ε_abs)``, so a near-zero-valued bin stops
+      once its CI half-width is within ε_abs instead of refining to
+      exactness (the uniform-φ failure mode on skewed data).
+
+    The policy only modulates an approximate query (φ > 0); φ = 0 stays
+    the exact method regardless. All three components are optional —
+    ``AccuracyPolicy()`` is the uniform policy and leaves behavior (and
+    the refinement order) bit-for-bit unchanged.
+    """
+    weights: Optional[Union[float, np.ndarray]] = None
+    eps_abs: float = 0.0
+    salience: Optional[Union[str, np.ndarray]] = None
+    salience_floor: float = 0.25
+
+    def __post_init__(self):
+        if self.eps_abs < 0:
+            raise ValueError(f"eps_abs must be >= 0, got {self.eps_abs}")
+        if not 0.0 < self.salience_floor <= 1.0:
+            raise ValueError("salience_floor must be in (0, 1], got "
+                             f"{self.salience_floor}")
+        if isinstance(self.salience, str) and self.salience != "center":
+            raise ValueError("salience must be 'center' or a per-bin "
+                             f"array, got {self.salience!r}")
+
+    def is_uniform(self) -> bool:
+        """True when the policy cannot change any bin's budget relative
+        to the plain scalar-φ path (weights/salience/floor all trivial)."""
+        return (self.weights is None and self.salience is None
+                and self.eps_abs == 0.0)
+
+    @staticmethod
+    def _flat(a, bins, name: str) -> np.ndarray:
+        """Accepts a scalar, a flat ``(bx·by,)`` vector, or a ``(by, bx)``
+        grid; returns the flat per-bin vector."""
+        bx, by = bins
+        a = np.asarray(a, np.float64)
+        if a.shape == ():
+            return np.full(bx * by, float(a))
+        if a.shape in ((bx * by,), (by, bx)):
+            return a.reshape(-1).copy()
+        raise ValueError(f"{name} shape {a.shape} does not match "
+                         f"bins {bins}")
+
+    def salience_map(self, bins: Tuple[int, int]) -> np.ndarray:
+        """Per-bin salience ``s_b ∈ (0, 1]`` (flat, bin id = by_row·bx +
+        bx_col). ``None`` ⇒ all ones; ``"center"`` ⇒ linear falloff with
+        distance from the viewport center, clamped at salience_floor."""
+        bx, by = bins
+        if self.salience is None:
+            return np.ones(bx * by)
+        if isinstance(self.salience, str):  # "center" (validated above)
+            cx = (np.arange(bx) + 0.5) / bx - 0.5
+            cy = (np.arange(by) + 0.5) / by - 0.5
+            d = np.hypot(*np.meshgrid(cx, cy))       # (by, bx)
+            d = d / max(float(d.max()), EPS)         # 0 center … 1 corner
+            s = self.salience_floor + (1.0 - self.salience_floor) * (1 - d)
+            return s.reshape(-1)
+        s = self._flat(self.salience, bins, "salience")
+        if not ((s > 0) & (s <= 1)).all():
+            raise ValueError("salience values must lie in (0, 1]")
+        return s
+
+    def phi_b(self, phi: float, bins: Tuple[int, int]) -> np.ndarray:
+        """The composed per-bin constraint vector
+        ``φ_b = φ · weights_b / salience_b`` (flat ``(bx·by,)``)."""
+        bx, by = bins
+        out = np.full(bx * by, float(phi))
+        if self.weights is not None:
+            w = self._flat(self.weights, bins, "weights")
+            if not (w > 0).all():
+                raise ValueError("weights must be > 0 (use np.inf for "
+                                 "don't-care bins)")
+            out *= w
+        out /= self.salience_map(bins)
+        return out
 
 
 @dataclasses.dataclass
@@ -263,6 +366,14 @@ class HeatmapResult:
     batch_rounds: int = 0      # batched refinement rounds (0 ⇒ sequential)
     speculative_rows: int = 0  # rows read past the stopping point
     eval_time_s: float = 0.0
+    # per-bin allocation (AccuracyPolicy queries; None ⇒ uniform φ).
+    # NOTE: under a non-trivial policy the query-level ``bound`` (max
+    # RELATIVE per-bin bound) may legitimately exceed φ — ``bin_met`` is
+    # the per-bin verdict against each bin's own budget
+    # ``max(φ_b·|value_b|, ε_abs)``.
+    phi_b: Optional[np.ndarray] = None
+    eps_abs: float = 0.0
+    bin_met: Optional[np.ndarray] = None
 
     def grid(self, a: Optional[np.ndarray] = None) -> np.ndarray:
         """Reshape a per-bin vector (default: values) to (by, bx)."""
@@ -282,12 +393,25 @@ class GroupedAccumulator:
     (max per-bin relative bound over occupied bins). Fold order and the
     cached-sum arithmetic mirror the scalar accumulator exactly, so the
     batched and sequential heatmap paths stay bit-for-bit comparable.
+
+    With an :class:`AccuracyPolicy` attached (:meth:`set_policy`), the
+    uniform per-bin-max stopping rule generalizes to the per-bin vector
+    φ_b: bin b's deviation budget is ``τ_b = max(φ_b·|value_b|, ε_abs)``
+    and the driver's stopping quantity (:meth:`query_bound`) becomes the
+    φ-scaled worst budget ratio ``φ · max_b dev_b/τ_b`` — ≤ φ exactly
+    when EVERY occupied bin fits its own budget, and identical to the
+    plain max-relative-bound when the policy is uniform.
     """
 
     def __init__(self, agg: str, nbins: int):
         assert agg in AGGS, agg
         self.agg = agg
         self.nbins = nbins
+        # per-bin constraint allocation (None ⇒ the uniform scalar-φ
+        # stopping rule, bit-for-bit the pre-policy behavior)
+        self._phi_b: Optional[np.ndarray] = None
+        self._eps_abs = 0.0
+        self._phi_ref = 0.0
         # exact parts (single-bin full tiles + processed tiles), per bin
         self.ex_cnt = np.zeros(nbins, np.int64)
         self.ex_sum = np.zeros(nbins, np.float64)
@@ -394,10 +518,93 @@ class GroupedAccumulator:
         return mid, lo, hi, bb, float(bb.max(initial=0.0))
 
     # ---------------------- refinement protocol ----------------------- #
+    def set_policy(self, policy: "AccuracyPolicy", phi: float,
+                   bins: Tuple[int, int]):
+        """Attach a per-bin constraint allocation for this query.
+
+        Resolves the policy against (φ, bins) once; a trivial/uniform
+        policy is dropped so the plain path stays bit-for-bit unchanged
+        (including the tile score order).
+        """
+        if policy is None or policy.is_uniform():
+            return
+        phi_b = policy.phi_b(phi, bins)
+        assert phi_b.shape == (self.nbins,), (phi_b.shape, self.nbins)
+        self._phi_b = phi_b
+        self._eps_abs = float(policy.eps_abs)
+        self._phi_ref = float(phi)
+
+    @property
+    def phi_b(self) -> Optional[np.ndarray]:
+        """The attached per-bin constraint vector (None ⇒ uniform φ)."""
+        return self._phi_b
+
+    @property
+    def eps_abs(self) -> float:
+        return self._eps_abs
+
+    def _budgets(self, denom: np.ndarray) -> np.ndarray:
+        """Per-bin deviation budgets ``τ_b = max(φ_b·denom_b, ε_abs)``
+        (requires an attached policy)."""
+        with np.errstate(invalid="ignore"):  # inf·finite stays inf
+            return np.maximum(self._phi_b * denom, self._eps_abs)
+
     def query_bound(self) -> float:
-        """Stopping quantity for the refinement driver: the query-level
-        bound = max per-bin relative bound over occupied bins."""
-        return self.interval()[4]
+        """Stopping quantity for the refinement driver.
+
+        Uniform policy: the query-level bound = max per-bin relative
+        bound over occupied bins. With a φ_b allocation attached: the
+        φ-scaled worst budget ratio ``φ · max_b dev_b/τ_b`` over
+        occupied bins, so the driver's unchanged ``bound ≤ φ`` test
+        fires exactly when every bin fits its own budget.
+        """
+        if self._phi_b is None:
+            return self.interval()[4]
+        values, lo, hi, _, _ = self.interval()
+        occ = (self.ex_cnt + self._p_cnt) > 0
+        with np.errstate(invalid="ignore"):
+            dev = np.maximum(hi - values, values - lo)
+        tau = self._budgets(np.maximum(np.abs(values), EPS))
+        m = occ & np.isfinite(dev) & (dev > 0)
+        if not m.any():
+            return 0.0
+        with np.errstate(invalid="ignore"):  # dev/inf → 0 on don't-care
+            ratio = np.where(np.isinf(tau[m]), 0.0, dev[m] / tau[m])
+        return float(self._phi_ref * ratio.max(initial=0.0))
+
+    def bin_satisfied(self, phi: float):
+        """Per-bin verdict against each bin's own budget: occupied bin b
+        is satisfied when ``dev_b ≤ max(φ_b·|value_b|, ε_abs)`` (uniform
+        policy ⇒ φ_b = φ, ε_abs = 0). Unoccupied bins are True."""
+        values, lo, hi, _, _ = self.interval()
+        occ = (self.ex_cnt + self._p_cnt) > 0
+        with np.errstate(invalid="ignore"):
+            dev = np.maximum(hi - values, values - lo)
+        phi_b = (np.full(self.nbins, float(phi)) if self._phi_b is None
+                 else self._phi_b)
+        with np.errstate(invalid="ignore"):
+            tau = np.maximum(phi_b * np.maximum(np.abs(values), EPS),
+                             self._eps_abs)
+        ok = ~occ | ~np.isfinite(dev) | (dev <= 0)
+        fin = ~ok
+        ok[fin] = dev[fin] <= tau[fin] * (1 + 1e-12)
+        return ok
+
+    def score_bin_weight(self) -> Optional[np.ndarray]:
+        """Per-bin urgency weights for the grouped tile score, or
+        ``None`` under the uniform policy (preserving the plain score
+        order bit-for-bit). With a φ_b allocation the weight is the
+        inverse deviation budget ``1/τ_b`` evaluated at the current
+        interval — a tile's score becomes its worst *budget-normalized*
+        per-bin CI width, so refinement effort flows to the bins whose
+        constraints are tight (don't-care bins, φ_b = ∞, weigh 0)."""
+        if self._phi_b is None:
+            return None
+        _, lo, hi, _, _ = self.interval()
+        v_max = np.maximum(np.maximum(np.abs(lo), np.abs(hi)), EPS)
+        tau = self._budgets(v_max)
+        with np.errstate(divide="ignore"):
+            return np.where(np.isinf(tau), 0.0, 1.0 / np.maximum(tau, EPS))
 
     def min_folds_needed(self, remaining, phi: float) -> int:
         """Certain lower bound on the folds needed for the per-bin-max
@@ -419,6 +626,13 @@ class GroupedAccumulator:
         One cumsum over the (tiles × bins) pending-width matrix gives all
         suffixes at once; a round sized by the result reads zero
         speculative rows (it replaces the heatmap geometric ramp).
+
+        Under a φ_b allocation the per-bin threshold generalizes to the
+        deviation budget: ``W_jb/2 ≤ max(φ_b·v_max_b, ε_abs)``. The
+        budget actually applied at fold j uses ``|value_jb| ≤ v_max_b``
+        (values stay inside their shrinking intervals), so this
+        threshold still only over-estimates the budget — the bound stays
+        certain and φ_b-sized rounds still read zero speculative rows.
         """
         _, lo, hi, _, _ = self.interval()
         w = np.stack([self.pending[t].cnt_b.astype(np.float64)
@@ -427,8 +641,12 @@ class GroupedAccumulator:
         if self.agg == "mean":
             w = w / np.maximum(self.ex_cnt + self._p_cnt, 1)
         v_max = np.maximum(np.maximum(np.abs(lo), np.abs(hi)), EPS)
+        if self._phi_b is None:
+            thr = 2.0 * phi * v_max
+        else:
+            thr = 2.0 * self._budgets(v_max)
         suffix = w.sum(axis=0) - np.cumsum(w, axis=0)  # widths after j folds
-        ok = (suffix <= 2.0 * phi * v_max).all(axis=1)
+        ok = (suffix <= thr).all(axis=1)
         hit = np.flatnonzero(ok)
         j = int(hit[0]) + 1 if hit.size else len(remaining)
         return max(1, j)

@@ -6,7 +6,8 @@ The *logical* tile grid is replicated; per-tile metadata is the psum of
 per-shard partial aggregates. One φ-constrained window-aggregate query
 — scalar (:func:`make_query_step`) or heatmap
 (:func:`make_heatmap_step`, the per-(tile, bin) generalization that
-merges shard-local grouped state and computes every per-bin bound
+merges shard-local grouped state — psum for sum, pmin/pmax of grouped
+extrema for the min/max aggregates — and computes every per-bin bound
 in-SPMD) — is then a fully-jitted SPMD program:
 
   1. per-device masked binned aggregation over its local objects
@@ -236,7 +237,7 @@ def make_query_step(mesh: Mesh, cfg: DistConfig = DistConfig()):
 
 
 def make_heatmap_step(mesh: Mesh, cfg: DistConfig,
-                      bins: Tuple[int, int]):
+                      bins: Tuple[int, int], agg: str = "sum"):
     """Build the jitted distributed HEATMAP (2-D group-by) query step.
 
     The SPMD unrolling of the unified refinement driver's grouped loop
@@ -245,18 +246,23 @@ def make_heatmap_step(mesh: Mesh, cfg: DistConfig,
 
       1. per-device masked binned scatter over local objects — one
          ``segment_window_bin_agg``-style pass giving every (tile, bin)
-         cell's in-window count and sum, plus per-tile metadata
-         (count/min/max) — then ``psum``/``pmin``/``pmax`` merge the
-         shard-local grouped state (exact parts add; value bounds
+         cell's in-window count and sum (for ``agg="min"``/``"max"``:
+         the per-(tile, bin) in-window EXTREMA — the grouped-extrema
+         state the packed segment kernels' min/max channels compute on
+         a single host), plus per-tile metadata (count/min/max) — then
+         ``psum``/``pmin``/``pmax`` merge the shard-local grouped state
+         (exact parts add, grouped extrema pmin/pmax, value bounds
          min/max) into replicated global state;
       2. the per-bin query CI from metadata: full tiles contribute their
-         (tile, bin) sums exactly; partial (pending) tiles contribute
-         ``cnt_tb · [mn_t, mx_t]`` per bin — exactly the grouped
-         accumulator's pending intervals;
+         (tile, bin) cells exactly; partial (pending) tiles contribute
+         ``cnt_tb · [mn_t, mx_t]`` per bin for sum — or the tile-level
+         value bounds ``[mn_t, mx_t]`` on every bin they touch for
+         min/max — exactly the grouped accumulator's pending intervals;
       3. greedy selection is the driver's grouped scoring vectorized:
-         tiles sorted by worst per-bin CI width, one cumsum over the
-         sorted (tiles × bins) width matrix gives every prefix's
-         residual per-bin width at once (the same suffix algebra as
+         tiles sorted by worst per-bin CI width (value-range width for
+         min/max), one cumsum (running max for min/max) over the sorted
+         (tiles × bins) width matrix gives every prefix's residual
+         per-bin uncertainty at once (the same suffix algebra as
          ``GroupedAccumulator.min_folds_needed``), and the smallest
          prefix whose surrogate per-bin-max bound meets φ is selected;
       4. selected tiles' exact (tile, bin) contributions replace their
@@ -264,9 +270,12 @@ def make_heatmap_step(mesh: Mesh, cfg: DistConfig,
          in-SPMD.
 
     Signature: step(xs, ys, vals, domain, window, phi) → dict of
-    replicated per-bin arrays (values/lo/hi/bin_bound, (bx·by,)) and
-    scalars (bound, n_processed, n_partial, objects_read).
+    replicated per-bin arrays (values/lo/hi/bin_bound/bin_count,
+    (bx·by,)) and scalars (bound, n_processed, n_partial,
+    objects_read). For min/max, empty bins carry the ±``3.4e38``
+    sentinel (the host wrapper maps them to ±inf).
     """
+    assert agg in ("sum", "min", "max"), agg
     gx, gy = cfg.grid
     t = gx * gy
     bx, by = int(bins[0]), int(bins[1])
@@ -290,35 +299,50 @@ def make_heatmap_step(mesh: Mesh, cfg: DistConfig,
         vf = vals.astype(jnp.float32)
         one_q = jnp.where(inq, 1.0, 0.0)
         # per-(tile, bin) in-window scatter + per-tile metadata, merged
-        # across shards (exact parts psum; value bounds pmin/pmax)
+        # across shards (exact parts psum / pmin / pmax; value bounds
+        # pmin/pmax)
         cnt_tb = jnp.zeros((t * nb,), jnp.float32).at[key].add(one_q)
-        s_tb = jnp.zeros((t * nb,), jnp.float32).at[key].add(
-            jnp.where(inq, vf, 0.0))
         cnt = jnp.zeros((t,), jnp.float32).at[cid].add(jnp.ones_like(vf))
         mn = jnp.full((t,), POS, jnp.float32).at[cid].min(vf)
         mx = jnp.full((t,), NEG, jnp.float32).at[cid].max(vf)
         cnt_tb = jax.lax.psum(cnt_tb, axes).reshape(t, nb)
-        s_tb = jax.lax.psum(s_tb, axes).reshape(t, nb)
         cnt = jax.lax.psum(cnt, axes)
         mn = jax.lax.pmin(mn, axes)
         mx = jax.lax.pmax(mx, axes)
+        if agg == "sum":
+            s_tb = jnp.zeros((t * nb,), jnp.float32).at[key].add(
+                jnp.where(inq, vf, 0.0))
+            s_tb = jax.lax.psum(s_tb, axes).reshape(t, nb)
+        else:
+            # grouped extrema: exact per-(tile, bin) in-window min/max —
+            # the distributed analog of the segment_window_bin_agg
+            # kernels' min/max output channels
+            mn_tb = jnp.full((t * nb,), POS, jnp.float32).at[key].min(
+                jnp.where(inq, vf, POS))
+            mx_tb = jnp.full((t * nb,), NEG, jnp.float32).at[key].max(
+                jnp.where(inq, vf, NEG))
+            mn_tb = jax.lax.pmin(mn_tb, axes).reshape(t, nb)
+            mx_tb = jax.lax.pmax(mx_tb, axes).reshape(t, nb)
 
         # --- classification (shared with the scalar step) ---
         disjoint, full = _classify_grid_tiles(domain, window, gx, gy)
         cnt_q = jnp.sum(cnt_tb, axis=1)
         partial = (~disjoint) & (~full) & (cnt_q > 0)
-
-        # --- per-bin CI from metadata (sum aggregate; grouped §3.1) ---
-        exact_b = jnp.sum(jnp.where(full[:, None], s_tb, 0.0), axis=0)
-        lo_tb = jnp.where(partial[:, None], cnt_tb * mn[:, None], 0.0)
-        hi_tb = jnp.where(partial[:, None], cnt_tb * mx[:, None], 0.0)
-        mid_tb = jnp.where(partial[:, None],
-                           cnt_tb * (0.5 * (mn + mx))[:, None], 0.0)
+        touch = cnt_tb > 0
         occ = jnp.sum(cnt_tb, axis=0) > 0
+        n_partial = jnp.sum(partial.astype(jnp.int32))
 
-        # --- grouped score + static-k greedy selection via cumsum ---
-        width_tb = hi_tb - lo_tb
-        w_t = jnp.max(width_tb, axis=1)      # worst per-bin CI width
+        # --- grouped score: worst per-bin CI width / value-range ---
+        if agg == "sum":
+            exact_b = jnp.sum(jnp.where(full[:, None], s_tb, 0.0), axis=0)
+            lo_tb = jnp.where(partial[:, None], cnt_tb * mn[:, None], 0.0)
+            hi_tb = jnp.where(partial[:, None], cnt_tb * mx[:, None], 0.0)
+            mid_tb = jnp.where(partial[:, None],
+                               cnt_tb * (0.5 * (mn + mx))[:, None], 0.0)
+            width_tb = hi_tb - lo_tb
+            w_t = jnp.max(width_tb, axis=1)  # worst per-bin CI width
+        else:
+            w_t = jnp.where(partial, mx - mn, 0.0)  # value-range width
         w_hat = w_t / jnp.maximum(jnp.max(w_t), 1e-9)
         c_hat = cnt_q / jnp.maximum(jnp.max(jnp.where(partial, cnt_q, 0.0)),
                                     1e-9)
@@ -327,31 +351,86 @@ def make_heatmap_step(mesh: Mesh, cfg: DistConfig,
             cfg.alpha * w_hat + (1 - cfg.alpha) / jnp.maximum(c_hat, 1e-9),
             -jnp.inf)
         order = jnp.argsort(-score)
-        width_sorted = width_tb[order]       # (t, nb)
-        # residual per-bin width if tiles [0..j) are processed. Reversed
-        # cumsum, not total−prefix: the f32 subtraction leaves ≈+ε at
-        # j = n_partial and φ=0 would then select nothing.
-        resid = jnp.concatenate(
-            [jnp.cumsum(width_sorted[::-1], axis=0)[::-1],
-             jnp.zeros((1, nb))])            # (t+1, nb)
-        approx0_b = exact_b + jnp.sum(mid_tb, axis=0)
+
+        # --- static-k greedy selection via suffix scans ---
+        if agg == "sum":
+            width_sorted = width_tb[order]   # (t, nb)
+            # residual per-bin width if tiles [0..j) are processed.
+            # Reversed cumsum, not total−prefix: the f32 subtraction
+            # leaves ≈+ε at j = n_partial and φ=0 would then select
+            # nothing.
+            resid = jnp.concatenate(
+                [jnp.cumsum(width_sorted[::-1], axis=0)[::-1],
+                 jnp.zeros((1, nb))])        # (t+1, nb)
+            approx0_b = exact_b + jnp.sum(mid_tb, axis=0)
+        else:
+            # per-bin residual uncertainty after processing top-j tiles:
+            # an unprocessed pending tile leaves at most its value-range
+            # width of deviation on every bin it touches (dev_b ≤ max
+            # width over touching pending tiles — see
+            # GroupedAccumulator.interval's min/max path), so the suffix
+            # RUNNING MAX over the sorted (tiles × bins) touch-width
+            # matrix plays the role the suffix cumsum plays for sum
+            wb_tb = jnp.where(partial[:, None] & touch,
+                              (mx - mn)[:, None], 0.0)
+            resid = jnp.concatenate(
+                [jax.lax.cummax(wb_tb[order], axis=0, reverse=True),
+                 jnp.zeros((1, nb))])        # (t+1, nb)
+            # initial midpoint surrogate denominator: exact part from
+            # full tiles + pending tile-level bounds on touched bins
+            red = jnp.min if agg == "min" else jnp.max
+            sent = POS if agg == "min" else NEG
+            ex0 = red(jnp.where(full[:, None] & touch,
+                                mn_tb if agg == "min" else mx_tb, sent),
+                      axis=0)
+            p_lo0 = red(jnp.where(partial[:, None] & touch, mn[:, None],
+                                  sent), axis=0)
+            p_hi0 = red(jnp.where(partial[:, None] & touch, mx[:, None],
+                                  sent), axis=0)
+            lo0 = red(jnp.stack([ex0, p_lo0]), axis=0)
+            hi0 = red(jnp.stack([ex0, p_hi0]), axis=0)
+            approx0_b = 0.5 * (lo0 + hi0)
         surr = jnp.where(occ[None, :],
                          (0.5 * resid) / jnp.maximum(jnp.abs(approx0_b),
                                                      1e-9)[None, :],
                          0.0)
         surrogate = jnp.max(surr, axis=1)    # per-bin-max bound per prefix
-        n_partial = jnp.sum(partial.astype(jnp.int32))
         jmeet = jnp.argmax(surrogate <= phi)  # smallest prefix meeting φ
         j = jnp.minimum(jnp.minimum(jmeet, n_partial), cfg.max_process)
 
         sel = jnp.zeros((t,), bool).at[order].set(jnp.arange(t) < j)
         sel = sel & partial
-        # processed tiles contribute exact per-bin values; rest midpoints
         sel_c = sel[:, None]
-        values = exact_b + jnp.sum(jnp.where(sel_c, s_tb, mid_tb), axis=0)
-        lo = exact_b + jnp.sum(jnp.where(sel_c, s_tb, lo_tb), axis=0)
-        hi = exact_b + jnp.sum(jnp.where(sel_c, s_tb, hi_tb), axis=0)
-        dev = jnp.maximum(hi - values, values - lo)
+        if agg == "sum":
+            # processed tiles contribute exact per-bin values; the rest
+            # keep midpoints
+            values = exact_b + jnp.sum(jnp.where(sel_c, s_tb, mid_tb),
+                                       axis=0)
+            lo = exact_b + jnp.sum(jnp.where(sel_c, s_tb, lo_tb), axis=0)
+            hi = exact_b + jnp.sum(jnp.where(sel_c, s_tb, hi_tb), axis=0)
+            dev = jnp.maximum(hi - values, values - lo)
+        else:
+            # exact parts: full ∪ selected tiles' grouped extrema;
+            # unprocessed pending tiles keep their tile-level intervals
+            # on every touched bin (the grouped accumulator's min/max
+            # interval algebra, vectorized over (tile, bin))
+            red = jnp.min if agg == "min" else jnp.max
+            sent = POS if agg == "min" else NEG
+            e_tb = mn_tb if agg == "min" else mx_tb
+            ex_b = red(jnp.where((full[:, None] | sel_c) & touch, e_tb,
+                                 sent), axis=0)
+            pend = partial[:, None] & (~sel_c) & touch
+            p_lo = red(jnp.where(pend, mn[:, None], sent), axis=0)
+            p_hi = red(jnp.where(pend, mx[:, None], sent), axis=0)
+            # the grouped accumulator's ordering holds as-is: for min,
+            # lo = min(ex, pending vmins) ≤ hi = min(ex, pending vmaxs);
+            # for max both ends are maxima and p_lo ≤ p_hi keeps lo ≤ hi
+            lo = red(jnp.stack([ex_b, p_lo]), axis=0)
+            hi = red(jnp.stack([ex_b, p_hi]), axis=0)
+            mid = 0.5 * (lo + hi)
+            values = jnp.where(occ, mid, sent)
+            dev = jnp.where(occ, jnp.maximum(hi - values, values - lo),
+                            0.0)
         bin_bound = jnp.where(
             occ & (dev > 0),
             dev / jnp.maximum(jnp.abs(values), 1e-9), 0.0)
@@ -359,6 +438,7 @@ def make_heatmap_step(mesh: Mesh, cfg: DistConfig,
         objects_read = jnp.sum(jnp.where(sel, cnt, 0.0))
         return {"values": values, "lo": lo, "hi": hi,
                 "bin_bound": bin_bound, "bound": bound,
+                "bin_count": jnp.sum(cnt_tb, axis=0),
                 "n_processed": j.astype(jnp.int32),
                 "n_partial": n_partial,
                 "objects_read": objects_read}
@@ -369,7 +449,7 @@ def make_heatmap_step(mesh: Mesh, cfg: DistConfig,
                    in_specs=(obj, obj, obj, rep, rep, rep),
                    out_specs={k: rep for k in
                               ("values", "lo", "hi", "bin_bound", "bound",
-                               "n_processed", "n_partial",
+                               "bin_count", "n_processed", "n_partial",
                                "objects_read")},
                    check_rep=False)
     return jax.jit(fn)
@@ -424,7 +504,7 @@ class DistributedAQPEngine:
         self.domain = jnp.asarray(dataset.domain(), jnp.float32)
         self._step = make_query_step(mesh, cfg)
         self._refine = make_refine_step(mesh, cfg)
-        self._heatmap_steps = {}   # (bx, by) → jitted heatmap step
+        self._heatmap_steps = {}   # (bx, by, agg) → jitted heatmap step
 
     def query(self, window, attr: str, phi: float):
         out = self._step(self.xs, self.ys, self.vals[attr], self.domain,
@@ -445,23 +525,29 @@ class DistributedAQPEngine:
         return out
 
     def heatmap(self, window, attr: str, bins: Tuple[int, int] = (8, 8),
-                phi: float = 0.0):
+                phi: float = 0.0, agg: str = "sum"):
         """One φ-constrained heatmap (2-D group-by) query over the mesh.
 
-        Returns a dict of per-bin numpy arrays (``values``/``lo``/``hi``/
-        ``bin_bound``, flat ``bx·by`` with bin id = by_row·bx + bx_col —
+        ``agg`` selects the per-bin aggregate: ``"sum"`` (per-(tile,bin)
+        psum merge) or ``"min"``/``"max"`` (per-(tile,bin) grouped
+        extrema merged with pmin/pmax — the distributed analog of the
+        packed segment kernels' min/max channels). Returns a dict of
+        per-bin numpy arrays (``values``/``lo``/``hi``/``bin_bound``/
+        ``bin_count``, flat ``bx·by`` with bin id = by_row·bx + bx_col —
         the single-host :class:`~repro.core.bounds.HeatmapResult`
-        layout) plus the query-level ``bound`` (max per-bin bound over
-        occupied bins) and cost scalars. Like :meth:`query`, selection
-        uses the width-based surrogate bound, the reported bound is
-        re-computed post-read, and a second exact-ish round runs on the
-        rare miss.
+        layout; empty min/max bins are ±inf) plus the query-level
+        ``bound`` (max per-bin bound over occupied bins) and cost
+        scalars. Like :meth:`query`, selection uses the width-based
+        surrogate bound, the reported bound is re-computed post-read,
+        and a second exact-ish round runs on the rare miss.
         """
         bins = (int(bins[0]), int(bins[1]))
-        if bins not in self._heatmap_steps:
-            self._heatmap_steps[bins] = make_heatmap_step(self.mesh,
-                                                          self.cfg, bins)
-        step = self._heatmap_steps[bins]
+        key = (bins[0], bins[1], agg)
+        if key not in self._heatmap_steps:
+            self._heatmap_steps[key] = make_heatmap_step(self.mesh,
+                                                         self.cfg, bins,
+                                                         agg)
+        step = self._heatmap_steps[key]
         out = step(self.xs, self.ys, self.vals[attr], self.domain,
                    jnp.asarray(window, jnp.float32),
                    jnp.asarray(phi, jnp.float32))
@@ -473,6 +559,13 @@ class DistributedAQPEngine:
                         jnp.asarray(window, jnp.float32),
                         jnp.asarray(0.0, jnp.float32))
             out = {k: np.asarray(v) for k, v in out2.items()}
+        if agg in ("min", "max"):
+            # empty bins carry the f32 ±3.4e38 scatter sentinel in-SPMD;
+            # map them to the HeatmapResult ±inf convention on host
+            empty = out["bin_count"] == 0
+            fill = np.inf if agg == "min" else -np.inf
+            for k in ("values", "lo", "hi"):
+                out[k] = np.where(empty, fill, out[k].astype(np.float64))
         return out
 
     def refine(self, attr: str):

@@ -26,7 +26,11 @@ True
 
 Each bin carries its own deterministic ``[lo, hi]`` interval and
 relative bound; the query-level ``bound`` is the worst per-bin bound
-over occupied bins.
+over occupied bins. An :class:`~repro.core.bounds.AccuracyPolicy`
+(``policy=`` on :meth:`AQPEngine.heatmap`) allocates the constraint per
+bin — φ_b from user weights × rendered-pixel salience plus an
+absolute-error floor — so refinement effort follows the bins the user
+cares about instead of the worst relative bound.
 
 Both query types refine through ONE engine — the unified
 :class:`~repro.core.refine.RefinementDriver` (classify → score →
@@ -53,7 +57,7 @@ from typing import List, Optional, Tuple, Union
 
 from ..data.rawfile import RawDataset
 from . import query as query_mod
-from .bounds import HeatmapResult, QueryResult
+from .bounds import AccuracyPolicy, HeatmapResult, QueryResult
 from .index import IndexConfig, TileIndex
 
 
@@ -128,6 +132,7 @@ class AQPEngine:
     def heatmap(self, window: Tuple[float, float, float, float], agg: str,
                 attr: str, bins: Tuple[int, int] = (8, 8),
                 phi: float = 0.0, alpha: Optional[float] = None,
+                policy: Optional[AccuracyPolicy] = None,
                 batch_k: Optional[int] = None,
                 sequential: bool = False) -> HeatmapResult:
         """Evaluate one φ-constrained heatmap (group-by) query.
@@ -136,11 +141,17 @@ class AQPEngine:
           bx_col (``HeatmapResult.grid()`` reshapes to (by, bx)).
         phi: per-bin relative accuracy constraint — refinement stops once
           EVERY occupied bin's relative bound is ≤ φ (0 ⇒ exact).
+        policy: optional :class:`~repro.core.bounds.AccuracyPolicy`
+          allocating the constraint per bin — φ_b from user weights ×
+          salience, plus an absolute-error floor ε_abs so near-zero bins
+          can't force exactness. Each bin then stops at its OWN budget
+          ``max(φ_b·|value_b|, ε_abs)`` and the result carries
+          ``phi_b``/``bin_met``.
         batch_k / sequential: as in :meth:`query`.
         """
         r = query_mod.evaluate_heatmap(
             self.index, window, agg, attr, bins=bins, phi=phi,
-            alpha=self.alpha if alpha is None else alpha,
+            alpha=self.alpha if alpha is None else alpha, policy=policy,
             batch_k=batch_k, sequential=sequential)
         self.trace.results.append(r)
         return r

@@ -50,8 +50,9 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from .bounds import (GroupedAccumulator, GroupedPendingTile, HeatmapResult,
-                     PendingTile, QueryAccumulator, QueryResult)
+from .bounds import (AccuracyPolicy, GroupedAccumulator, GroupedPendingTile,
+                     HeatmapResult, PendingTile, QueryAccumulator,
+                     QueryResult)
 from .index import TileIndex
 from .refine import HeatmapQueryAdapter, RefinementDriver, ScalarQueryAdapter
 from ..kernels.ops import window_mask_np
@@ -175,7 +176,9 @@ def _build_grouped_accumulator(index: TileIndex, window, agg: str,
 
 def evaluate_heatmap(index: TileIndex, window, agg: str, attr: str,
                      bins: Tuple[int, int] = (8, 8), phi: float = 0.0,
-                     alpha: float = 1.0, *, batch_k: Optional[int] = None,
+                     alpha: float = 1.0, *,
+                     policy: Optional[AccuracyPolicy] = None,
+                     batch_k: Optional[int] = None,
                      sequential: bool = False) -> HeatmapResult:
     """φ-constrained heatmap (2-D group-by) over the window's bx×by grid.
 
@@ -192,6 +195,15 @@ def evaluate_heatmap(index: TileIndex, window, agg: str, attr: str,
     ``sequential=True`` is the per-tile reference path the batched
     pipeline must match bit-for-bit on counts, to f64 tolerance on sums,
     and exactly on index evolution.
+
+    ``policy`` allocates the constraint per bin
+    (:class:`~repro.core.bounds.AccuracyPolicy`: user weights ×
+    salience → φ_b, plus an absolute-error floor ε_abs): refinement
+    stops once every occupied bin's deviation fits its OWN budget
+    ``max(φ_b·|value_b|, ε_abs)``, tile scoring normalizes CI widths by
+    those budgets, and the result carries ``phi_b``/``bin_met``. A
+    trivial policy (or φ = 0, the exact method) leaves behavior
+    bit-for-bit unchanged.
     """
     t_start = time.perf_counter()
     io_before = index.ds.stats.snapshot()
@@ -206,6 +218,8 @@ def evaluate_heatmap(index: TileIndex, window, agg: str, attr: str,
     # refinement splits every processed tile — see HeatmapQueryAdapter)
     acc, _, n_full, n_partial = _build_grouped_accumulator(
         index, window, agg, attr, (bx, by))
+    if policy is not None and phi > 0.0:
+        acc.set_policy(policy, phi, (bx, by))
 
     driver = RefinementDriver(
         acc, HeatmapQueryAdapter(index, window, attr, (bx, by)), phi, alpha)
@@ -214,6 +228,7 @@ def evaluate_heatmap(index: TileIndex, window, agg: str, attr: str,
     values, lo, hi, bin_bound, bound = acc.interval()
     io_delta = index.ds.stats.delta(io_before)
     adapt_delta = index.adapt_stats.delta(adapt_before)
+    policy_active = acc.phi_b is not None
     return HeatmapResult(
         agg=agg, attr=attr, bins=(bx, by),
         values=np.asarray(values, np.float64),
@@ -224,7 +239,10 @@ def evaluate_heatmap(index: TileIndex, window, agg: str, attr: str,
         read_calls=io_delta.read_calls,
         batch_rounds=adapt_delta.batch_rounds,
         speculative_rows=adapt_delta.speculative_rows,
-        eval_time_s=time.perf_counter() - t_start)
+        eval_time_s=time.perf_counter() - t_start,
+        phi_b=acc.phi_b.copy() if policy_active else None,
+        eps_abs=acc.eps_abs,
+        bin_met=acc.bin_satisfied(phi) if policy_active else None)
 
 
 def evaluate_heatmap_oracle(index: TileIndex, window, agg: str, attr: str,

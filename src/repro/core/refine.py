@@ -13,7 +13,11 @@ into a single :class:`RefinementDriver`, parameterized by
   ``fold_exact(tile_id, *contrib)``, ``query_bound()`` — the scalar
   stopping quantity — and ``min_folds_needed(remaining, phi)`` — a
   *certain* lower bound on the folds still required, used for
-  predictive round sizing;
+  predictive round sizing. The stopping quantity needn't be the plain
+  relative bound: a :class:`~repro.core.bounds.GroupedAccumulator` with
+  an ``AccuracyPolicy`` attached returns the φ-scaled worst per-bin
+  budget ratio, so the driver's unchanged ``bound ≤ φ`` test enforces a
+  per-bin φ_b vector with absolute-error floors;
 - an **index adapter** (:class:`ScalarQueryAdapter` /
   :class:`HeatmapQueryAdapter`) supplying the score order, the
   per-tile reference read (``process_one``), the batched gathered read
@@ -97,7 +101,11 @@ class HeatmapQueryAdapter:
         self.bins = (int(bins[0]), int(bins[1]))
 
     def score_order(self, acc, alpha: float) -> List[int]:
-        return adapt.score_tiles_grouped(acc.pending, acc.agg, alpha)
+        # under an AccuracyPolicy the accumulator supplies per-bin
+        # budget weights (1/τ_b) so the score ranks tiles by their worst
+        # budget-normalized CI width; None ⇒ the uniform-φ order
+        return adapt.score_tiles_grouped(acc.pending, acc.agg, alpha,
+                                         bin_weight=acc.score_bin_weight())
 
     def process_one(self, tile_id: int):
         return self.index.process_heatmap(tile_id, self.window, self.attr,

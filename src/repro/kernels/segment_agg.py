@@ -16,7 +16,12 @@ in a single kernel invocation,
 - per-segment, per-cell aggregates over ONE shared ``bx × by`` grid laid
   over the query window, in-window objects only
   (``segment_window_bin_agg_pallas``) — every tile's exact per-bin heatmap
-  contribution for a refinement round.
+  contribution for a refinement round. All four output channels are
+  consumed: count/sum drive the sum/mean heatmap fold, and the per-cell
+  min/max channels are the *grouped extrema* state behind the min/max
+  heatmap aggregates (single-host fold; ``core.distributed`` mirrors the
+  same state in-SPMD with a per-(tile, bin) scatter merged by
+  pmin/pmax).
 
 Both reuse the ``pack2d`` block layout of :mod:`repro.kernels.window_agg`
 (flat object arrays padded to ``(rows, 128)`` f32 planes + validity plane)

@@ -1,0 +1,295 @@
+"""AccuracyPolicy: per-bin φ_b allocation for heatmap queries.
+
+Covers the three contracts of the φ_b tentpole:
+
+- **Composition** — ``AccuracyPolicy.phi_b`` composes user weights ×
+  absolute-error floors × rendered-pixel salience (center-weighted or
+  caller-supplied mask) into one per-bin constraint vector, with input
+  validation; the trivial policy is a bit-for-bit no-op.
+- **Certainty under non-uniform φ_b** — ``min_folds_needed`` with a
+  policy attached never exceeds the fold count at which the sequential
+  per-bin-budget stopping rule actually fires (claimed folds are
+  necessary), and rounds sized by it read exactly the sequential rows
+  (sufficient in aggregate: ``speculative_rows == 0`` and batched ==
+  sequential I/O) at several φ_b mixes.
+- **Skewed-data acceptance** — on one-hot-bin data a floored/weighted
+  φ_b session reads measurably fewer objects than uniform φ while every
+  bin still satisfies its OWN budget and every per-bin CI contains its
+  oracle value.
+"""
+import numpy as np
+import pytest
+
+from repro.core import AQPEngine, AccuracyPolicy, IndexConfig
+from repro.core.query import _build_grouped_accumulator
+from repro.core import adapt
+from repro.data import make_synthetic_dataset
+from repro.data.rawfile import RawDataset
+from repro.data.synthetic import exploration_path
+
+EPS = 1e-12
+
+
+def small_engine(n=40_000, seed=5, ds=None, **kw):
+    ds = make_synthetic_dataset(n=n, seed=seed) if ds is None else ds
+    cfg = IndexConfig(grid0=(8, 8), min_split_count=64,
+                      init_metadata_attrs=("a0",), **kw)
+    return AQPEngine(ds, cfg)
+
+
+def skewed_dataset(n=120_000, seed=3, noise=0.02):
+    """One hot spatial corner carries big values; everywhere else ~0 —
+    the regime where uniform φ degenerates to exact answering."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 1000, n).astype(np.float32)
+    y = rng.uniform(0, 1000, n).astype(np.float32)
+    hot = (x > 750) & (y > 750)
+    v = np.where(hot, rng.normal(100, 10, n),
+                 rng.normal(0, noise, n)).astype(np.float32)
+    return RawDataset(x, y, {"a0": v})
+
+
+def assert_own_budgets_met(r, truth=None):
+    """Every occupied bin's deviation fits its own budget
+    ``max(φ_b·|value_b|, ε_abs)`` — and the oracle sits in the CI."""
+    assert r.phi_b is not None and r.bin_met is not None
+    occ = np.isfinite(r.values) & (np.isfinite(r.lo) | np.isfinite(r.hi))
+    dev = np.where(occ, np.maximum(r.hi - r.values, r.values - r.lo), 0.0)
+    tau = np.maximum(r.phi_b * np.maximum(np.abs(r.values), EPS), r.eps_abs)
+    assert (dev[occ] <= tau[occ] * (1 + 1e-9) + 1e-9).all()
+    assert r.bin_met.all()
+    if truth is not None:
+        fin = np.isfinite(truth)
+        assert (r.lo[fin] - 1e-3 <= truth[fin]).all()
+        assert (truth[fin] <= r.hi[fin] + 1e-3).all()
+
+
+# --------------------------------------------------------------------- #
+# composition
+# --------------------------------------------------------------------- #
+
+def test_phi_b_composes_weights_floors_salience():
+    bins = (4, 2)
+    phi = 0.05
+    # weights alone: flat, grid, and scalar broadcast all compose onto φ
+    w_flat = np.linspace(0.5, 4.0, 8)
+    np.testing.assert_allclose(
+        AccuracyPolicy(weights=w_flat).phi_b(phi, bins), phi * w_flat)
+    np.testing.assert_allclose(
+        AccuracyPolicy(weights=w_flat.reshape(2, 4)).phi_b(phi, bins),
+        phi * w_flat)
+    np.testing.assert_allclose(
+        AccuracyPolicy(weights=2.0).phi_b(phi, bins), phi * 2.0)
+    # salience divides: tightest (s=1) keeps φ, s=0.5 doubles the budget
+    s = np.full(8, 0.5)
+    s[3] = 1.0
+    got = AccuracyPolicy(salience=s).phi_b(phi, bins)
+    assert got[3] == pytest.approx(phi)
+    np.testing.assert_allclose(np.delete(got, 3), 2 * phi)
+    # all three compose multiplicatively (floor rides separately on the
+    # budget, not on φ_b)
+    p = AccuracyPolicy(weights=w_flat, eps_abs=7.0, salience=s)
+    np.testing.assert_allclose(p.phi_b(phi, bins), phi * w_flat / s)
+    assert p.eps_abs == 7.0
+    # inf weights are legal don't-care bins
+    w_inf = np.ones(8)
+    w_inf[0] = np.inf
+    assert AccuracyPolicy(weights=w_inf).phi_b(phi, bins)[0] == np.inf
+
+
+def test_center_salience_is_tightest_at_viewport_center():
+    bins = (6, 6)
+    p = AccuracyPolicy(salience="center", salience_floor=0.25)
+    s = p.salience_map(bins).reshape(6, 6)
+    assert s.max() <= 1.0 and s.min() >= 0.25
+    # strictly most salient in the middle, least in the corners
+    assert s[2:4, 2:4].min() > s[0, 0]
+    assert s[0, 0] == pytest.approx(s[5, 5])    # symmetric falloff
+    phi_b = p.phi_b(0.05, bins).reshape(6, 6)
+    assert phi_b[2, 2] < phi_b[0, 0]            # center bins tighter
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        AccuracyPolicy(eps_abs=-1.0)
+    with pytest.raises(ValueError):
+        AccuracyPolicy(salience="corner")
+    with pytest.raises(ValueError):
+        AccuracyPolicy(salience_floor=0.0)
+    with pytest.raises(ValueError):
+        AccuracyPolicy(weights=np.zeros(4)).phi_b(0.05, (2, 2))
+    with pytest.raises(ValueError):
+        AccuracyPolicy(salience=np.full(4, 2.0)).phi_b(0.05, (2, 2))
+    with pytest.raises(ValueError):
+        AccuracyPolicy(weights=np.ones(5)).phi_b(0.05, (2, 2))
+
+
+def test_trivial_policy_is_bitwise_noop():
+    """AccuracyPolicy() must not change results, I/O, score order, or
+    index evolution relative to the plain scalar-φ path."""
+    e_plain = small_engine(seed=11)
+    e_pol = small_engine(seed=11)
+    wins = exploration_path(e_plain.dataset, n_queries=3,
+                            target_objects=5000)
+    for w in wins:
+        r1 = e_plain.heatmap(w, "mean", "a0", bins=(4, 4), phi=0.05)
+        r2 = e_pol.heatmap(w, "mean", "a0", bins=(4, 4), phi=0.05,
+                           policy=AccuracyPolicy())
+        assert r2.objects_read == r1.objects_read
+        assert r2.tiles_processed == r1.tiles_processed
+        np.testing.assert_array_equal(r2.values, r1.values)
+        assert r2.phi_b is None and r2.bin_met is None
+    assert np.array_equal(e_pol.index.perm, e_plain.index.perm)
+    assert e_pol.index.n_tiles == e_plain.index.n_tiles
+
+
+# --------------------------------------------------------------------- #
+# min_folds_needed certainty + zero speculative rows under φ_b
+# --------------------------------------------------------------------- #
+
+POLICY_MIXES = [
+    AccuracyPolicy(eps_abs=5.0),
+    AccuracyPolicy(weights=np.exp(np.linspace(-1.0, 1.5, 15))),
+    AccuracyPolicy(salience="center"),
+    AccuracyPolicy(weights=np.exp(np.linspace(1.5, -1.0, 15)),
+                   eps_abs=2.0, salience="center"),
+]
+
+
+@pytest.mark.parametrize("agg", ["sum", "mean"])
+@pytest.mark.parametrize("mix", range(len(POLICY_MIXES)))
+def test_min_folds_needed_certain_under_nonuniform_phi_b(agg, mix):
+    """Necessity: the predictive bound with a φ_b allocation attached
+    never exceeds the fold count the sequential per-bin-budget stopping
+    rule actually needed — the invariant that makes φ_b-sized rounds
+    read zero speculative rows."""
+    policy = POLICY_MIXES[mix]
+    bins = (5, 3)
+    phi = 0.02
+    e_ref = small_engine(seed=7)
+    e_probe = small_engine(seed=7)
+    wins = exploration_path(e_ref.dataset, n_queries=4,
+                            target_objects=6000)
+    checked = 0
+    for w in wins:
+        acc, _, _, _ = _build_grouped_accumulator(
+            e_probe.index, w, agg, "a0", bins)
+        acc.set_policy(policy, phi, bins)
+        bound0 = acc.query_bound()
+        order = adapt.score_tiles_grouped(acc.pending, agg, 1.0,
+                                          bin_weight=acc.score_bin_weight())
+        rs = e_ref.heatmap(w, agg, "a0", bins=bins, phi=phi, policy=policy,
+                           sequential=True)
+        if acc.pending and bound0 > phi:
+            j = acc.min_folds_needed(order, phi)
+            assert j <= max(rs.tiles_processed, 1), (agg, mix, w)
+            checked += 1
+        e_probe.heatmap(w, agg, "a0", bins=bins, phi=phi, policy=policy,
+                        sequential=True)
+    assert checked > 0
+
+
+@pytest.mark.parametrize("agg", ["sum", "mean"])
+@pytest.mark.parametrize("mix", range(len(POLICY_MIXES)))
+def test_zero_speculative_rows_at_phi_b_mixes(agg, mix):
+    """Sufficiency in aggregate: φ_b-sized batched rounds read exactly
+    the rows the sequential reference reads — every sized round is fully
+    folded (``speculative_rows == 0``) — and the two paths stay
+    bit-for-bit comparable, at several weights × floors × salience
+    mixes."""
+    policy = POLICY_MIXES[mix]
+    e_seq = small_engine(seed=13)
+    e_bat = small_engine(seed=13)
+    wins = exploration_path(e_seq.dataset, n_queries=4,
+                            target_objects=6000)
+    refined = 0
+    for w in wins:
+        rs = e_seq.heatmap(w, agg, "a0", bins=(5, 3), phi=0.02,
+                           policy=policy, sequential=True)
+        rb = e_bat.heatmap(w, agg, "a0", bins=(5, 3), phi=0.02,
+                           policy=policy)
+        assert rb.objects_read == rs.objects_read, (agg, mix, w)
+        assert rb.speculative_rows == 0
+        assert rb.tiles_processed == rs.tiles_processed
+        np.testing.assert_allclose(rb.values, rs.values, rtol=1e-12,
+                                   atol=1e-9)
+        if not rb.exact:
+            assert_own_budgets_met(
+                rb, e_bat.heatmap_oracle(w, agg, "a0", bins=(5, 3)))
+        refined += rb.tiles_processed
+    assert refined > 0
+    # identical index evolution under the φ_b score order
+    assert np.array_equal(e_bat.index.perm, e_seq.index.perm)
+    assert e_bat.index.n_tiles == e_seq.index.n_tiles
+
+
+# --------------------------------------------------------------------- #
+# skewed-data acceptance: floored/weighted φ_b beats uniform φ
+# --------------------------------------------------------------------- #
+
+def test_floored_phi_b_reads_fewer_than_uniform_on_skewed_data():
+    """The acceptance regression: on one-hot-bin data, uniform φ is
+    dragged to (near-)exactness by near-zero-valued bins while an
+    ε_abs-floored φ_b session answers from far fewer objects — with
+    every bin still inside its own stated budget and every per-bin CI
+    containing its oracle value."""
+    ds = skewed_dataset()
+    w = (500.0, 500.0, 1000.0, 1000.0)
+    bins = (4, 4)
+    e_uni = small_engine(ds=ds)
+    e_flr = small_engine(ds=ds)
+    r_uni = e_uni.heatmap(w, "sum", "a0", bins=bins, phi=0.05)
+    r_flr = e_flr.heatmap(w, "sum", "a0", bins=bins, phi=0.05,
+                          policy=AccuracyPolicy(eps_abs=500.0))
+    # uniform φ degenerates on the near-zero bins…
+    assert r_uni.exact and r_uni.objects_read > 0
+    # …the floored allocation answers the same viewport much cheaper
+    assert r_flr.objects_read < r_uni.objects_read // 2
+    assert r_flr.speculative_rows == 0
+    truth = e_flr.heatmap_oracle(w, "sum", "a0", bins=bins)
+    assert_own_budgets_met(r_flr, truth)
+    # the hot bin still honors the plain relative constraint
+    hot = int(np.nanargmax(np.abs(truth)))
+    assert r_flr.bin_bound[hot] <= 0.05 + 1e-9
+
+
+def test_dont_care_bins_attract_no_refinement():
+    """np.inf weights mark don't-care bins: a policy caring about one
+    bin only reads no more than uniform φ, and that bin still meets φ."""
+    e_uni = small_engine(seed=17)
+    e_one = small_engine(seed=17)
+    w = exploration_path(e_uni.dataset, n_queries=1,
+                         target_objects=8000)[0]
+    bins = (4, 4)
+    r_uni = e_uni.heatmap(w, "sum", "a0", bins=bins, phi=0.02)
+    weights = np.full(16, np.inf)
+    weights[5] = 1.0
+    r_one = e_one.heatmap(w, "sum", "a0", bins=bins, phi=0.02,
+                          policy=AccuracyPolicy(weights=weights))
+    assert r_one.objects_read <= r_uni.objects_read
+    assert r_one.bin_met.all()
+    if not r_one.exact:
+        dev = max(r_one.hi[5] - r_one.values[5],
+                  r_one.values[5] - r_one.lo[5])
+        assert dev <= 0.02 * max(abs(r_one.values[5]), EPS) * (1 + 1e-9)
+    truth = e_one.heatmap_oracle(w, "sum", "a0", bins=bins)
+    fin = np.isfinite(truth)
+    assert (r_one.lo[fin] - 1e-3 <= truth[fin]).all()
+    assert (truth[fin] <= r_one.hi[fin] + 1e-3).all()
+
+
+def test_phi_b_result_fields_roundtrip():
+    """HeatmapResult carries the resolved allocation (phi_b, eps_abs,
+    bin_met) for policy queries and None for plain ones."""
+    eng = small_engine(seed=19)
+    w = exploration_path(eng.dataset, n_queries=1, target_objects=6000)[0]
+    plain = eng.heatmap(w, "sum", "a0", bins=(3, 3), phi=0.05)
+    assert plain.phi_b is None and plain.bin_met is None
+    pol = AccuracyPolicy(weights=np.full(9, 2.0), eps_abs=3.0)
+    r = eng.heatmap(w, "sum", "a0", bins=(3, 3), phi=0.05, policy=pol)
+    np.testing.assert_allclose(r.phi_b, 0.1)
+    assert r.eps_abs == 3.0
+    assert r.bin_met.shape == (9,) and r.bin_met.dtype == bool
+    # φ=0 stays the exact method: the policy is ignored entirely
+    r0 = eng.heatmap(w, "sum", "a0", bins=(3, 3), phi=0.0, policy=pol)
+    assert r0.exact and r0.phi_b is None

@@ -106,6 +106,80 @@ def test_distributed_heatmap_matches_oracle_and_bounds():
     """))
 
 
+def test_distributed_heatmap_min_max_matches_oracle():
+    """min/max heatmap aggregates over the mesh (grouped extrema merged
+    with pmin/pmax): every occupied bin's CI contains its single-host
+    oracle value, φ=0 equals the truth exactly (extrema don't round),
+    empty bins come back ±inf, and under φ>0 the reported per-bin-max
+    bound meets φ (or everything was processed)."""
+    print(run_sub("""
+        import jax, numpy as np
+        from repro.core.distributed import DistributedAQPEngine, DistConfig
+        from repro.data import make_synthetic_dataset
+        from repro.data.synthetic import exploration_path
+
+        BX, BY = 5, 3
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        ds = make_synthetic_dataset(n=80_000, seed=3)
+        eng = DistributedAQPEngine(ds, mesh, DistConfig(grid=(16, 16)))
+        wins = exploration_path(ds, n_queries=3, target_objects=8000)
+        n = len(eng.xs)
+        xs = np.asarray(ds.x[:n]); ys = np.asarray(ds.y[:n])
+        col = ds.read_all_unaccounted("a0")[:n]
+        nb = BX * BY
+
+        def f32_bin_ids(w):
+            # mirror the SPMD step's f32 mask/binning bit-for-bit so the
+            # phi=0 extrema comparison is exact, not tolerance-based
+            w32 = np.asarray(w, np.float32)
+            m = ((xs >= w32[0]) & (xs <= w32[2])
+                 & (ys >= w32[1]) & (ys <= w32[3]))
+            cw = np.maximum((w32[2] - w32[0]) / np.float32(BX),
+                            np.float32(1e-30))
+            ch = np.maximum((w32[3] - w32[1]) / np.float32(BY),
+                            np.float32(1e-30))
+            cx = np.clip(np.floor((xs - w32[0]) / cw).astype(np.int64),
+                         0, BX - 1)
+            cy = np.clip(np.floor((ys - w32[1]) / ch).astype(np.int64),
+                         0, BY - 1)
+            return m, cy * BX + cx
+
+        for agg in ("min", "max"):
+            fill = np.inf if agg == "min" else -np.inf
+            for phi in (0.0, 0.05):
+                for w in wins:
+                    out = eng.heatmap(w, "a0", bins=(BX, BY), phi=phi,
+                                      agg=agg)
+                    m, cid = f32_bin_ids(w)
+                    occ = np.bincount(cid[m], minlength=nb) > 0
+                    truth = np.full(nb, fill)
+                    for b in np.flatnonzero(occ):
+                        sel = col[m & (cid == b)]
+                        truth[b] = sel.min() if agg == "min" else sel.max()
+                    assert (out["lo"][occ] - 1e-4 <= truth[occ]).all(), \\
+                        (agg, phi, w)
+                    assert (truth[occ] <= out["hi"][occ] + 1e-4).all(), \\
+                        (agg, phi, w)
+                    # empty bins carry the HeatmapResult sentinel
+                    assert (out["values"][~occ] == fill).all()
+                    assert ((out["bin_count"] > 0) == occ).all()
+                    if phi == 0.0:
+                        # extrema don't round: exact equality at phi=0
+                        np.testing.assert_array_equal(
+                            out["values"][occ].astype(np.float32),
+                            truth[occ].astype(np.float32))
+                    else:
+                        assert out["bound"] <= phi + 1e-6 or \\
+                            out["n_processed"] == out["n_partial"]
+                    # per-bin bound covers each bin's observed deviation
+                    err = np.abs(out["values"][occ] - truth[occ])
+                    cap = out["bin_bound"][occ] * np.maximum(
+                        np.abs(out["values"][occ]), 1e-9) + 1e-4
+                    assert (err <= cap).all(), (agg, phi, w)
+        print("DIST-HEATMAP-MINMAX-OK")
+    """))
+
+
 def test_distributed_refine_metadata():
     print(run_sub("""
         import jax, numpy as np

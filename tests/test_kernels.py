@@ -273,6 +273,53 @@ def test_segment_window_bin_agg_backends_agree(lens, grid):
             assert a[s, :, 3].max() == want[3]
 
 
+@pytest.mark.parametrize("lens", [[1, 300], [0, 37, 500, 128, 3],
+                                  [600] * 5])
+@pytest.mark.parametrize("grid", [(2, 2), (5, 3)])
+def test_grouped_extrema_channels_backend_sweep(lens, grid):
+    """The min/max channels of the grouped (per-segment, per-window-bin)
+    kernels — the state the min/max heatmap aggregates and the
+    distributed pmin/pmax merge consume. Adversarial values (all
+    negative, so a zero-initialized reduction would corrupt them),
+    empty bins (±inf), and singleton segments, swept across np/jnp/
+    pallas; extrema don't round, so the backends must agree EXACTLY."""
+    bx, by = grid
+    nb = bx * by
+    xs, ys, vs, bounds = _segments(lens)
+    vs = -np.abs(vs) - 1.0          # strictly negative values
+    win = np.array([15, 25, 80, 75], np.float32)
+    a = np.asarray(ops.segment_window_bin_agg(xs, ys, vs, bounds, win,
+                                              bx=bx, by=by, backend="np"))
+    b = np.asarray(ops.segment_window_bin_agg(xs, ys, vs, bounds, win,
+                                              bx=bx, by=by, backend="jnp"))
+    c = np.asarray(ops.segment_window_bin_agg(xs, ys, vs, bounds, win,
+                                              bx=bx, by=by,
+                                              backend="pallas"))
+    for other in (b, c):
+        np.testing.assert_array_equal(a[:, :, 0], other[:, :, 0])
+        np.testing.assert_array_equal(a[:, :, 2].astype(np.float32),
+                                      other[:, :, 2])   # min channel
+        np.testing.assert_array_equal(a[:, :, 3].astype(np.float32),
+                                      other[:, :, 3])   # max channel
+    # brute-force per-(segment, bin) extrema oracle
+    m = (xs >= win[0]) & (xs <= win[2]) & (ys >= win[1]) & (ys <= win[3])
+    cw = max((win[2] - win[0]) / bx, 1e-30)
+    ch = max((win[3] - win[1]) / by, 1e-30)
+    cx = np.clip(np.floor((xs - win[0]) / cw).astype(np.int64), 0, bx - 1)
+    cy = np.clip(np.floor((ys - win[1]) / ch).astype(np.int64), 0, by - 1)
+    cid = cy * bx + cx
+    for s in range(len(lens)):
+        sl = slice(bounds[s], bounds[s + 1])
+        for cell in range(nb):
+            sel = vs[sl][m[sl] & (cid[sl] == cell)]
+            if sel.size:
+                assert a[s, cell, 2] == sel.min(), (s, cell)
+                assert a[s, cell, 3] == sel.max(), (s, cell)
+            else:                   # empty bins: ±inf sentinels
+                assert np.isinf(a[s, cell, 2]) and a[s, cell, 2] > 0
+                assert np.isinf(a[s, cell, 3]) and a[s, cell, 3] < 0
+
+
 def test_segment_window_bin_agg_batch_composition_invariant():
     """k-segment packed call == concatenation of k single-segment calls
     bit-for-bit (the np mirror's per-cell slice arithmetic is independent

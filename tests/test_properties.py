@@ -2,22 +2,31 @@
 sessions, across storage modes and refinement pipelines.
 
 Each session draws a random sequence of scalar and heatmap queries
-(random windows, aggregates, φ, bin grids, attributes) and runs it twice
-— once through the sequential per-tile reference path, once through the
-batched pipeline — against the same dataset, asserting after every step:
+(random windows, aggregates, φ, bin grids, attributes — and, for
+heatmaps, random per-bin :class:`~repro.core.bounds.AccuracyPolicy`
+allocations: log-uniform φ_b weights, ε_abs floors, salience masks) and
+runs it twice — once through the sequential per-tile reference path,
+once through the batched pipeline — against the same dataset, asserting
+after every step:
 
 - P2/P3: the oracle lies inside every reported CI (scalar and per-bin),
-  and the returned bound honors φ (or the answer is exact);
+  and the returned bound honors φ (or the answer is exact); under a
+  non-uniform φ_b the per-bin form: every occupied bin's deviation fits
+  its OWN budget ``max(φ_b·|value_b|, ε_abs)``;
 - differential: the batched path matches the sequential reference on
   values/lo/hi/bound (f64 identity) and on tile-processing counts;
 - amortization: batched refinement never issues more read calls than it
   processes tiles;
 
 and at session end: identical index evolution (perm, tile table,
-metadata) plus the P5 structural invariants, on both engines.
+metadata) plus the P5 structural invariants, on both engines. A
+degenerate all-zero-but-one-bin dataset exercises the ε_abs floor where
+uniform φ is forced to exactness.
 
 Runs with hypothesis when installed (randomized seeds, widened CI mode);
-degrades to a fixed seeded sweep otherwise.
+degrades to a fixed seeded sweep otherwise. The randomized session tests
+carry the ``slow`` marker — CI runs them in a separate lane with its own
+timeout (tier-1 fast lane: ``-m "not slow"``).
 """
 import numpy as np
 import pytest
@@ -28,8 +37,9 @@ try:  # optional: random seeds + example shrinking when present
 except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 
-from repro.core import AQPEngine, IndexConfig
+from repro.core import AQPEngine, AccuracyPolicy, IndexConfig
 from repro.data import make_synthetic_dataset
+from repro.data.rawfile import RawDataset
 
 AGGS = ["count", "sum", "mean", "min", "max"]
 PHIS = [0.0, 0.02, 0.1]
@@ -81,7 +91,7 @@ def _check_scalar(rs, rb, truth, phi):
                                        atol=1e-3)
 
 
-def _check_heatmap(rs, rb, truth, phi):
+def _check_heatmap(rs, rb, truth, phi, policy=None):
     assert rb.tiles_processed == rs.tiles_processed
     assert rb.exact == rs.exact
     np.testing.assert_allclose(rb.values, rs.values, rtol=1e-12, atol=1e-9)
@@ -91,7 +101,20 @@ def _check_heatmap(rs, rb, truth, phi):
     fin = np.isfinite(truth)
     assert (rb.lo[fin] - 1e-3 <= truth[fin]).all()          # P2 per bin
     assert (truth[fin] <= rb.hi[fin] + 1e-3).all()
-    assert rb.exact or rb.bound <= phi + 1e-9               # P3
+    if rb.phi_b is None:
+        assert rb.exact or rb.bound <= phi + 1e-9           # P3
+    else:
+        # P3 under φ_b: every occupied bin fits its OWN budget (the
+        # query-level relative bound may legitimately exceed φ)
+        assert policy is not None and phi > 0.0
+        np.testing.assert_allclose(rb.phi_b,
+                                   policy.phi_b(phi, rb.bins))
+        assert rb.bin_met is not None and rb.bin_met.all()
+        dev = np.where(fin, np.maximum(rb.hi - rb.values,
+                                       rb.values - rb.lo), 0.0)
+        tau = np.maximum(rb.phi_b * np.maximum(np.abs(rb.values), 1e-12),
+                         rb.eps_abs)
+        assert (dev[fin] <= tau[fin] * (1 + 1e-9) + 1e-9).all()
     err = np.abs(rb.values[fin] - truth[fin])
     cap = rb.bin_bound[fin] * np.maximum(np.abs(rb.values[fin]), 1e-12)
     assert (err <= cap + 1e-3).all()
@@ -99,12 +122,38 @@ def _check_heatmap(rs, rb, truth, phi):
         assert rb.exact                                     # P1 per bin
         np.testing.assert_allclose(rb.values[fin], truth[fin], rtol=1e-5,
                                    atol=1e-3)
+    if rb.phi_b is not None and rb.agg in ("sum", "mean"):
+        # predictive φ_b-budgeted sizing: zero speculative rows
+        assert rb.speculative_rows == 0
+        assert rb.objects_read == rs.objects_read
     # amortization: batched rounds gather reads
     assert rb.read_calls <= rb.tiles_processed
     assert rb.read_calls == rb.batch_rounds
 
 
-def run_session(op_seed: int, storage: str, n_ops: int = 5):
+def random_policy(rng, bins):
+    """Random φ_b strategy: weights × floors × salience, or None (the
+    uniform path must keep being exercised too)."""
+    kind = int(rng.integers(0, 5))
+    if kind == 0:
+        return None
+    weights = eps_abs = salience = None
+    if kind in (1, 4):
+        weights = np.exp(rng.uniform(-1.5, 1.5, bins[0] * bins[1]))
+        if kind == 4 and rng.random() < 0.5:
+            weights[rng.integers(len(weights))] = np.inf  # don't-care bin
+    if kind in (2, 4):
+        eps_abs = float(rng.uniform(0.1, 200.0))
+    if kind == 3 or rng.random() < 0.25:
+        salience = "center" if rng.random() < 0.5 else \
+            rng.uniform(0.2, 1.0, bins[0] * bins[1])
+    return AccuracyPolicy(weights=weights,
+                          eps_abs=0.0 if eps_abs is None else eps_abs,
+                          salience=salience)
+
+
+def run_session(op_seed: int, storage: str, n_ops: int = 5,
+                with_policies: bool = False):
     ds = dataset(storage)
     e_seq, e_bat = fresh_engine(ds), fresh_engine(ds)
     rng = np.random.default_rng(op_seed)
@@ -121,12 +170,14 @@ def run_session(op_seed: int, storage: str, n_ops: int = 5):
             _check_scalar(rs, rb, e_bat.oracle(w, agg, attr), phi)
         else:
             bins = (int(rng.integers(2, 5)), int(rng.integers(2, 5)))
+            policy = random_policy(rng, bins) if with_policies else None
             rs = e_seq.heatmap(w, agg, attr, bins=bins, phi=phi,
-                               sequential=True)
-            rb = e_bat.heatmap(w, agg, attr, bins=bins, phi=phi)
+                               policy=policy, sequential=True)
+            rb = e_bat.heatmap(w, agg, attr, bins=bins, phi=phi,
+                               policy=policy)
             _check_heatmap(rs, rb,
                            e_bat.heatmap_oracle(w, agg, attr, bins=bins),
-                           phi)
+                           phi, policy=policy)
     # identical index evolution (the differential core of the harness)
     i_seq, i_bat = e_seq.index, e_bat.index
     assert i_bat.n_tiles == i_seq.n_tiles
@@ -146,17 +197,73 @@ def run_session(op_seed: int, storage: str, n_ops: int = 5):
 
 
 if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
     @settings(max_examples=5, deadline=None,
               suppress_health_check=[HealthCheck.too_slow])
     @given(op_seed=st.integers(0, 2**20),
            storage=st.sampled_from(["array", "csv"]))
     def test_random_sessions(op_seed, storage):
         run_session(op_seed, storage)
+
+    @pytest.mark.slow
+    @settings(max_examples=5, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(op_seed=st.integers(0, 2**20),
+           storage=st.sampled_from(["array", "csv"]))
+    def test_random_sessions_with_phi_b_policies(op_seed, storage):
+        run_session(op_seed, storage, with_policies=True)
 else:
+    @pytest.mark.slow
     @pytest.mark.parametrize("storage", ["array", "csv"])
     @pytest.mark.parametrize("op_seed", [0, 1, 2])
     def test_random_sessions(op_seed, storage):
         run_session(op_seed, storage)
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("storage", ["array", "csv"])
+    @pytest.mark.parametrize("op_seed", [0, 1, 2])
+    def test_random_sessions_with_phi_b_policies(op_seed, storage):
+        run_session(op_seed, storage, with_policies=True)
+
+
+@pytest.mark.slow
+def test_degenerate_one_hot_bin_data_with_random_phi_b():
+    """Degenerate all-zero-but-one-bin data: every attribute value is 0
+    except inside one spatial corner. Tiles straddling the corner inflict
+    wide intervals on zero-valued bins, so uniform φ is forced to
+    exactness — random ε_abs-floored φ_b sessions must (a) stay
+    batched == sequential bit-for-bit incl. index evolution, (b) keep
+    every bin's interval within its own budget against the oracle, and
+    (c) never read more than the uniform-φ session."""
+    rng0 = np.random.default_rng(0)
+    n = 30_000
+    x = rng0.uniform(0, 1000, n).astype(np.float32)
+    y = rng0.uniform(0, 1000, n).astype(np.float32)
+    hot = (x > 700) & (y > 700)
+    v = np.where(hot, rng0.normal(80, 5, n), 0.0).astype(np.float32)
+    ds = RawDataset(x, y, {"a0": v})
+    w = (400.0, 400.0, 1000.0, 1000.0)
+    for op_seed in (0, 1, 2):
+        rng = np.random.default_rng(op_seed)
+        bins = (int(rng.integers(2, 5)), int(rng.integers(2, 5)))
+        policy = AccuracyPolicy(
+            weights=np.exp(rng.uniform(-0.5, 0.5, bins[0] * bins[1])),
+            eps_abs=float(rng.uniform(100.0, 2000.0)))
+        e_uni, e_seq, e_bat = (
+            AQPEngine(ds, IndexConfig(grid0=(6, 6), min_split_count=64,
+                                      init_metadata_attrs=("a0",)))
+            for _ in range(3))
+        r_uni = e_uni.heatmap(w, "sum", "a0", bins=bins, phi=0.05)
+        rs = e_seq.heatmap(w, "sum", "a0", bins=bins, phi=0.05,
+                           policy=policy, sequential=True)
+        rb = e_bat.heatmap(w, "sum", "a0", bins=bins, phi=0.05,
+                           policy=policy)
+        _check_heatmap(rs, rb,
+                       e_bat.heatmap_oracle(w, "sum", "a0", bins=bins),
+                       0.05, policy=policy)
+        assert rb.objects_read <= r_uni.objects_read
+        assert np.array_equal(e_bat.index.perm, e_seq.index.perm)
+        e_bat.index.check_invariants("a0")
 
 
 def test_p6_heatmap_approx_reads_no_more_than_exact():
