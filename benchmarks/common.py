@@ -71,7 +71,14 @@ def run_sequence(phi, agg="mean", attr="a0", n_queries=None):
             "bounds": np.array(bounds), "engine": eng}
 
 
+# every emit() is also recorded here so the runner can persist the whole
+# sweep as a BENCH_*.json workflow artifact (see benchmarks/run.py)
+EMITTED = []
+
+
 def emit(name: str, us_per_call: float, derived: str):
+    EMITTED.append({"name": name, "us_per_call": round(us_per_call, 1),
+                    "derived": derived})
     print(f"{name},{us_per_call:.1f},{derived}")
 
 

@@ -18,11 +18,15 @@ and reports objects read plus the per-bin ACHIEVED error
 exactness by the near-zero bins, the floored allocation is not.
 
     python -m benchmarks.heatmap_exploration --phi-floor 0.02 \
-        --salience center
+        --salience center --distributed
 
 ``--phi-floor`` is RELATIVE to the hottest bin's |oracle| (a scale-free
 spec for the absolute ε_abs floor); ``--salience none`` drops the
-salience session.
+salience session; ``--distributed`` (auto-on under ``--smoke``) runs
+the repeated-window SHARDED-SESSION comparison — persistent
+`ShardedTileState` + per-(tile, bin) exact registry vs the stateless
+one-shot step — reporting query-1 vs query-2+ reads and the in-SPMD
+per-bin φ_b budget verdict.
 """
 from __future__ import annotations
 
@@ -131,7 +135,63 @@ def phi_b_comparison(floor_frac=FLOOR_FRAC, salience=SALIENCE):
     return out
 
 
-def main(floor_frac=FLOOR_FRAC, salience=SALIENCE):
+def distributed_session(bins=BINS, phi=0.05, repeats=4,
+                        floor_frac=FLOOR_FRAC, salience=SALIENCE):
+    """Repeated-window DISTRIBUTED heatmap session over the sharded
+    session state (PR 5 acceptance): query 1 pays the surrogate price,
+    query 2+ answer previously-read tiles from the per-(tile, bin)
+    exact registry and the cracked grid — versus the stateless one-shot
+    step, which pays the full price on every repeat. Also runs one φ_b
+    (floored) query and reports the per-bin budget verdict."""
+    import jax
+
+    from repro.core.distributed import (DistConfig, DistributedAQPEngine,
+                                        make_heatmap_step)
+    import jax.numpy as jnp
+
+    ds = skewed_dataset()
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    cfg = DistConfig(grid=(16, 16), capacity=2048,
+                     min_split_count=512)
+    eng = DistributedAQPEngine(ds, mesh, cfg)
+    # deliberately NOT grid-aligned: the boundary tiles are partial, so
+    # query 1 has real reads for the session memory to amortize
+    w = (433.0, 417.0, 981.0, 993.0)
+    reads = []
+    for _ in range(repeats):
+        r = eng.heatmap(w, "a0", bins=bins, phi=phi)
+        reads.append(r.objects_read)
+    # stateless baseline: the pre-session surrogate, rebuilt per call
+    step = make_heatmap_step(mesh, cfg, bins)
+    args = (eng.xs, eng.ys, eng.vals["a0"], eng.domain,
+            jnp.asarray(w, jnp.float32), jnp.asarray(phi, jnp.float32))
+    sl = [float(np.asarray(step(*args)["objects_read"]))
+          for _ in range(2)]
+    # φ_b budgets in-SPMD: floor calibrated off the hottest bin seen,
+    # under the SAME CLI spec as the host φ_b sessions
+    hot = float(np.abs(r.values[np.isfinite(r.values)]).max())
+    pol = AccuracyPolicy(eps_abs=max(1.0, floor_frac * hot),
+                         salience=None if salience == "none"
+                         else salience)
+    rp = eng.heatmap(w, "a0", bins=bins, phi=phi, policy=pol)
+    tot = eng.trace.totals()
+    emit("heatmap_distributed_session",
+         tot["total_time_s"] * 1e6 / max(tot["queries"], 1),
+         mixed_io_summary(tot, extra=[
+             f"devices={n_dev}",
+             f"reads_q1={reads[0]:.0f}",
+             f"reads_q2={reads[1]:.0f}",
+             f"reads_last={reads[-1]:.0f}",
+             f"reads_stateless_repeat={sl[1]:.0f}",
+             f"session_repeat_frac="
+             f"{reads[1] / max(reads[0], 1):.3f}",
+             f"phi_b_bins_met={bool(rp.bin_met.all())}",
+             f"active_tiles={list(eng.n_active.values())[0]}"]))
+    return {"reads": reads, "stateless": sl}
+
+
+def main(floor_frac=FLOOR_FRAC, salience=SALIENCE, distributed=False):
     out = {}
     for name, phi in (("exact", 0.0), ("phi1", 0.01), ("phi5", 0.05)):
         eng, tot = run_session(phi)
@@ -156,6 +216,11 @@ def main(floor_frac=FLOOR_FRAC, salience=SALIENCE):
          f"reads_phi5={out['phi5']['total_objects_read']};"
          f"speculative_phi5={out['phi5']['total_speculative_rows']}")
     out["phi_b"] = phi_b_comparison(floor_frac, salience)
+    if distributed or common.SMOKE:
+        # the sharded-session acceptance numbers ride the smoke lane so
+        # CI sees session-memory regressions; full-size via --distributed
+        out["distributed"] = distributed_session(floor_frac=floor_frac,
+                                                 salience=salience)
     return out
 
 
@@ -166,10 +231,14 @@ if __name__ == "__main__":
                          "bin's |oracle| (default 0.02)")
     ap.add_argument("--salience", choices=["center", "none"],
                     default=SALIENCE)
+    ap.add_argument("--distributed", action="store_true",
+                    help="run the repeated-window sharded-session "
+                         "comparison (persistent state vs stateless)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-n smoke sizing (same code paths)")
     a = ap.parse_args()
     if a.smoke:
         common.configure_smoke()
     print("name,us_per_call,derived")
-    main(floor_frac=a.phi_floor, salience=a.salience)
+    main(floor_frac=a.phi_floor, salience=a.salience,
+         distributed=a.distributed)

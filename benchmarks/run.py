@@ -12,8 +12,11 @@ meaningless, the code paths are not.
 """
 from __future__ import annotations
 
+import json
 import os
+import platform
 import sys
+import time
 
 
 def main(smoke: bool = False) -> None:
@@ -32,6 +35,21 @@ def main(smoke: bool = False) -> None:
     accuracy_sweep.main()
     adaptation_cost.main()
     heatmap_exploration.main()
+
+    # persist the full sweep: CI uploads experiments/BENCH_*.json as a
+    # workflow artifact so regressions are diffable across pushes
+    out = {
+        "smoke": smoke,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "rows": common.EMITTED,
+    }
+    path = os.path.join(
+        "experiments", f"BENCH_{'smoke' if smoke else 'full'}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# wrote {path} ({len(common.EMITTED)} rows)")
 
     dd = "experiments/dryrun"
     if os.path.isdir(dd) and any(f.endswith(".json")

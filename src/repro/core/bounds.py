@@ -40,6 +40,11 @@ a **per-bin vector φ_b** (user weights × rendered-pixel salience) plus an
 half-width fits its own budget ``max(φ_b·|value_b|, ε_abs)`` — so a
 near-zero-valued bin can no longer drag refinement to exactness, and
 refinement effort flows to the bins the user actually cares about.
+
+The budget algebra itself (τ_b, worst-ratio, per-bin verdicts) lives in
+the pure-array helpers :func:`phi_budgets` / :func:`budget_ratios` /
+:func:`bin_budgets_met` so the SPMD steps (``core.distributed``) apply
+the IDENTICAL formulas inside traced code (``xp=jnp``).
 """
 from __future__ import annotations
 
@@ -50,6 +55,50 @@ import numpy as np
 
 AGGS = ("sum", "mean", "min", "max", "count")
 EPS = 1e-12
+
+
+# --------------------------------------------------------------------- #
+# Budget algebra — pure-array helpers shared by the host accumulators
+# and the SPMD steps (``core.distributed`` calls them with ``xp=jnp``
+# inside traced code; the host path uses the numpy default). Keeping the
+# τ_b / ratio / verdict formulas in ONE place is what lets the
+# distributed φ_b path claim the same stopping semantics as
+# :meth:`GroupedAccumulator.query_bound` without duplicating the math.
+# --------------------------------------------------------------------- #
+
+def phi_budgets(phi_b, denom, eps_abs, xp=np):
+    """Per-bin deviation budgets ``τ_b = max(φ_b·denom_b, ε_abs)``.
+
+    ``φ_b = ∞`` (don't-care bins) stays ∞ against any positive denom —
+    the numpy path silences the spurious invalid-op warning that inf ×
+    finite raises under errstate-strict test configs.
+    """
+    if xp is np:
+        with np.errstate(invalid="ignore"):
+            return np.maximum(np.asarray(phi_b) * denom, eps_abs)
+    return xp.maximum(phi_b * denom, eps_abs)
+
+
+def budget_ratios(dev, tau, xp=np):
+    """Per-bin budget ratios ``dev_b/τ_b`` with ``τ_b = ∞`` → 0 (a
+    don't-care bin never contributes to the worst ratio). ``τ_b`` is
+    positive by construction (φ_b > 0 validated, denom ≥ EPS), so the
+    division is taken raw — no clamp that would soften a tight budget."""
+    if xp is np:
+        with np.errstate(invalid="ignore", divide="ignore"):
+            return np.where(np.isinf(tau), 0.0, dev / tau)
+    return xp.where(xp.isinf(tau), 0.0, dev / tau)
+
+
+def bin_budgets_met(dev, values, phi_b, eps_abs, occ, xp=np,
+                    rtol=1e-12):
+    """Per-bin verdict: occupied bin b is satisfied when its deviation
+    fits its own budget ``dev_b ≤ max(φ_b·|value_b|, ε_abs)``.
+    Unoccupied / infinite-deviation / zero-deviation bins are True."""
+    tau = phi_budgets(phi_b, xp.maximum(xp.abs(values), EPS), eps_abs,
+                      xp=xp)
+    fin = occ & xp.isfinite(dev) & (dev > 0)
+    return ~fin | (dev <= tau * (1 + rtol))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -545,9 +594,9 @@ class GroupedAccumulator:
 
     def _budgets(self, denom: np.ndarray) -> np.ndarray:
         """Per-bin deviation budgets ``τ_b = max(φ_b·denom_b, ε_abs)``
-        (requires an attached policy)."""
-        with np.errstate(invalid="ignore"):  # inf·finite stays inf
-            return np.maximum(self._phi_b * denom, self._eps_abs)
+        (requires an attached policy; delegates to the shared pure-array
+        helper :func:`phi_budgets`)."""
+        return phi_budgets(self._phi_b, denom, self._eps_abs)
 
     def query_bound(self) -> float:
         """Stopping quantity for the refinement driver.
@@ -568,8 +617,7 @@ class GroupedAccumulator:
         m = occ & np.isfinite(dev) & (dev > 0)
         if not m.any():
             return 0.0
-        with np.errstate(invalid="ignore"):  # dev/inf → 0 on don't-care
-            ratio = np.where(np.isinf(tau[m]), 0.0, dev[m] / tau[m])
+        ratio = budget_ratios(dev[m], tau[m])
         return float(self._phi_ref * ratio.max(initial=0.0))
 
     def bin_satisfied(self, phi: float):
@@ -582,13 +630,7 @@ class GroupedAccumulator:
             dev = np.maximum(hi - values, values - lo)
         phi_b = (np.full(self.nbins, float(phi)) if self._phi_b is None
                  else self._phi_b)
-        with np.errstate(invalid="ignore"):
-            tau = np.maximum(phi_b * np.maximum(np.abs(values), EPS),
-                             self._eps_abs)
-        ok = ~occ | ~np.isfinite(dev) | (dev <= 0)
-        fin = ~ok
-        ok[fin] = dev[fin] <= tau[fin] * (1 + 1e-12)
-        return ok
+        return bin_budgets_met(dev, values, phi_b, self._eps_abs, occ)
 
     def score_bin_weight(self) -> Optional[np.ndarray]:
         """Per-bin urgency weights for the grouped tile score, or

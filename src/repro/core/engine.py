@@ -43,12 +43,18 @@ policy). Under φ>0 the driver sizes sum/mean rounds by the
 accumulator's *certain* ``min_folds_needed`` bound — zero speculative
 rows for both query types, reported per query as
 ``speculative_rows``. Heatmap refinement splits tiles along lines
-snapped to the query's bin grid (``IndexConfig.bin_aligned_splits``),
-so children nest inside single bins after one split and repeat
-viewports answer from metadata with zero file I/O. The same loop runs
-distributed: ``repro.core.distributed.DistributedAQPEngine`` executes
-the scalar and heatmap steps as fully-jitted SPMD programs over a
-sharded object store.
+snapped — and bin-count-MATCHED, so one split resolves tiles spanning
+several bins — to the query's bin grid
+(``IndexConfig.bin_aligned_splits`` / ``max_split_span``), so children
+nest inside single bins after one split and repeat viewports answer
+from metadata with zero file I/O. The same skeleton runs distributed:
+``repro.core.distributed.DistributedAQPEngine`` executes selection as
+fully-jitted SPMD programs over a persistent sharded session state,
+folds score-ordered prefixes per pass
+(:class:`~repro.core.refine.EpochDriver`), and records every query
+into the same :class:`EngineTrace` record types, so ``totals()`` (and
+the benchmarks' ``mixed_io_summary``) cover host and SPMD sessions
+alike.
 """
 from __future__ import annotations
 

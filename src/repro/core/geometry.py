@@ -89,24 +89,49 @@ def _snap_axis_edges(e0: float, e1: float, g: int, q0: float, q1: float,
     return snapped
 
 
-def snapped_split_edges(bbox, gx: int, gy: int, window, bx: int, by: int):
-    """Bin-aligned split lines: the tile's gx×gy split edges snapped to
-    the heatmap grid laid over ``window`` (``bx × by`` bins).
+def _bin_matched_axis_edges(e0: float, e1: float, g0: int, cap: int,
+                            q0: float, q1: float, b: int) -> np.ndarray:
+    """Bin-count-MATCHED split edges of one axis: cover EVERY bin-grid
+    line of ([q0, q1], b) strictly inside (e0, e1) when their count fits
+    ``cap`` children, so a tile spanning s ≤ cap bins nests all its
+    children in single bins after ONE split (the snapped-g0 policy only
+    places g0−1 cuts and needs several splits for s ≥ 3). Fewer inside
+    lines than g0−1 cuts ⇒ extra cuts bisect the largest children (still
+    nested); more than cap−1 ⇒ best-effort fallback to cap children with
+    each cut snapped to its nearest line. Returns increasing edges of
+    variable length (≥ g0+1, ≤ cap+1)."""
+    if b <= 1 or not (q1 > q0):
+        return np.linspace(e0, e1, g0 + 1)
+    lines = q0 + (q1 - q0) / b * np.arange(1, b)
+    inside = lines[(lines > e0) & (lines < e1)]
+    m = int(inside.size)
+    if m == 0:
+        return np.linspace(e0, e1, g0 + 1)
+    if m + 1 > cap:
+        return _snap_axis_edges(e0, e1, max(g0, cap), q0, q1, b)
+    edges = np.concatenate([[e0], inside, [e1]])
+    while len(edges) - 1 < g0:
+        # pad to the base child count by bisecting the widest child —
+        # a cut interior to a bin keeps every child nested
+        gaps = np.diff(edges)
+        i = int(np.argmax(gaps))
+        edges = np.insert(edges, i + 1, 0.5 * (edges[i] + edges[i + 1]))
+    return edges
 
-    Children of a snapped split nest inside single bins of that grid
-    after ONE split (for tiles spanning ≤ gx bins per axis), so repeat
-    heatmaps over the same grid answer them from metadata with zero file
-    I/O — instead of re-reading until several midpoint splits happen to
-    land inside bin boundaries. Degenerates to the uniform split when
-    the tile lies inside one bin. Returns ``(x_edges, y_edges)`` float64
-    arrays of lengths gx+1 / gy+1.
-    """
+
+def bin_matched_split_edges(bbox, window, bx: int, by: int,
+                            base=(2, 2), cap: int = 4):
+    """Per-axis bin-count-matched split lines for one tile (see
+    :func:`_bin_matched_axis_edges`); the host heatmap refinement's
+    split-grid sizing when ``IndexConfig.bin_aligned_splits`` is on.
+    Returns ``(x_edges, y_edges)`` float64 arrays whose lengths vary per
+    tile with the bin span (capped at ``cap+1``)."""
     x0, y0, x1, y1 = (float(bbox[0]), float(bbox[1]), float(bbox[2]),
                       float(bbox[3]))
     qx0, qy0, qx1, qy1 = (float(window[0]), float(window[1]),
                           float(window[2]), float(window[3]))
-    return (_snap_axis_edges(x0, x1, gx, qx0, qx1, bx),
-            _snap_axis_edges(y0, y1, gy, qy0, qy1, by))
+    return (_bin_matched_axis_edges(x0, x1, base[0], cap, qx0, qx1, bx),
+            _bin_matched_axis_edges(y0, y1, base[1], cap, qy0, qy1, by))
 
 
 def edge_cell_ids_segmented(xs: np.ndarray, ys: np.ndarray,

@@ -57,8 +57,45 @@ class IndexConfig:
     # children nest inside single bins after ONE split (False ⇒ the even
     # 2×2-style subdivision everywhere — the pre-bin-aligned policy)
     bin_aligned_splits: bool = True
+    # bin-count-MATCHED split grids: a tile spanning s bins per axis gets
+    # an s-child split (every inside bin line becomes a cut) up to this
+    # per-axis cap, so one split nests children in single bins even for
+    # s ≥ 3 — past the cap the split falls back to cap snapped cuts
+    max_split_span: int = 4
     init_metadata_attrs: Sequence[str] = ()   # metadata computed at init pass
     backend: Optional[str] = None             # kernels backend override
+
+    def max_split_cells(self) -> int:
+        """Upper bound on children per split — sizes the packed split
+        kernels' static unroll budget (``MAX_UNROLL``) in the driver."""
+        gx, gy = self.split_grid
+        if self.bin_aligned_splits:
+            gx = max(gx, self.max_split_span)
+            gy = max(gy, self.max_split_span)
+        return gx * gy
+
+    def __post_init__(self):
+        from ..kernels.segment_agg import MAX_UNROLL
+        gx, gy = self.split_grid
+        if gx < 2 or gy < 2:
+            raise ValueError(f"split_grid must be >= 2 per axis, got "
+                             f"{self.split_grid}")
+        if self.max_split_span < max(2, gx, gy):
+            # the per-axis child cap must cover the base grid, or the
+            # bin-matched edge builder could not honor its "<= cap+1
+            # edges" contract (its fallbacks place g0 children)
+            raise ValueError(
+                f"max_split_span={self.max_split_span} must be >= "
+                f"max(split_grid)={max(gx, gy)} (and >= 2)")
+        if self.max_split_cells() > MAX_UNROLL:
+            # fail at construction, not as an AssertionError deep in a
+            # packed split kernel mid-query (the batched driver's round
+            # cap would also floor to 0 first)
+            raise ValueError(
+                f"max split grid {self.max_split_cells()} cells "
+                f"(split_grid={self.split_grid}, max_split_span="
+                f"{self.max_split_span}) exceeds the packed split "
+                f"kernels' static unroll limit MAX_UNROLL={MAX_UNROLL}")
 
 
 @dataclasses.dataclass
@@ -318,33 +355,36 @@ class TileIndex:
         edges = self._heatmap_split_edges(
             np.array([tile_id], np.int64), window, bins)
         self._enrich_and_split(tile_id, vals, attr, split,
-                               edges=None if edges is None else
-                               (edges[0][0], edges[1][0]))
+                               edges=None if edges is None else edges[0])
         return (agg[:, 0].astype(np.int64), agg[:, 1].copy(),
                 agg[:, 2].copy(), agg[:, 3].copy())
 
     def _heatmap_split_edges(self, tile_ids: np.ndarray, window, bins):
         """Per-tile bin-aligned split edges for heatmap refinement, or
-        ``None`` under the uniform-split policy. Returns
-        ``(x_edges (T, gx+1), y_edges (T, gy+1))`` float64 arrays — the
-        ONE place both the sequential and batched paths derive their
-        split lines from, so the index evolution stays identical."""
+        ``None`` under the uniform-split policy. Returns a list of
+        ``(x_edges, y_edges)`` float64 pairs aligned with ``tile_ids`` —
+        edge lengths VARY per tile (bin-count-matched grids size each
+        tile's split to its bin span, capped by
+        ``IndexConfig.max_split_span``). This is the ONE place both the
+        sequential and batched paths derive their split lines from, so
+        the per-tile grids are batch-composition invariant and the index
+        evolution stays identical."""
         if not self.cfg.bin_aligned_splits:
             return None
-        gx, gy = self.cfg.split_grid
         bx, by = bins
-        xe = np.empty((len(tile_ids), gx + 1), np.float64)
-        ye = np.empty((len(tile_ids), gy + 1), np.float64)
-        for i, t in enumerate(tile_ids):
-            xe[i], ye[i] = geometry.snapped_split_edges(
-                self.bbox[t], gx, gy, window, bx, by)
-        return xe, ye
+        return [geometry.bin_matched_split_edges(
+                    self.bbox[t], window, bx, by,
+                    base=self.cfg.split_grid, cap=self.cfg.max_split_span)
+                for t in tile_ids]
 
-    def can_split(self, tile_id: int) -> bool:
+    def can_split(self, tile_id: int, k: Optional[int] = None) -> bool:
+        """``k`` — children the intended split appends (defaults to the
+        even ``split_grid``; bin-count-matched splits pass their own)."""
         gx, gy = self.cfg.split_grid
+        k = gx * gy if k is None else int(k)
         return (self.count[tile_id] >= self.cfg.min_split_count
                 and self.level[tile_id] < self.cfg.max_level
-                and self.n_tiles + gx * gy <= self.cfg.capacity)
+                and self.n_tiles + k <= self.cfg.capacity)
 
     def _split(self, tile_id: int, vals: np.ndarray, attr: str,
                edges=None):
@@ -352,13 +392,17 @@ class TileIndex:
 
         ``edges=(x_edges, y_edges)`` cuts along explicit (bin-aligned)
         split lines instead of the even gx×gy subdivision; ownership is
-        then ``geometry.edge_cell_ids``'s rule and child metadata comes
-        from the edges variant of the packed split kernel.
+        then ``geometry.edge_cell_ids``'s rule, child metadata comes
+        from the edges variant of the packed split kernel, and the split
+        GRID is the edges' own (bin-count-matched grids vary per tile).
         """
-        if not self.can_split(tile_id):
+        if edges is None:
+            gx, gy = self.cfg.split_grid
+        else:
+            gx, gy = len(edges[0]) - 1, len(edges[1]) - 1
+        if not self.can_split(tile_id, gx * gy):
             self.adapt_stats.tiles_enriched += 1
             return
-        gx, gy = self.cfg.split_grid
         o, c = int(self.offset[tile_id]), int(self.count[tile_id])
         # NOTE: copies, not views — the segment reorganization below
         # writes into self.x_s/y_s in place and bin_agg must see the
@@ -558,9 +602,14 @@ class TileIndex:
         self.meta_max[attr][tile_ids[nz]] = full[nz, 3]
         self.meta_valid[attr][tile_ids[nz]] = True
 
-        # split decisions in order, accounting in-round capacity growth
+        # split decisions in order, accounting in-round capacity growth;
+        # per-tile child counts vary under bin-count-matched split grids
+        # (the edges carry each tile's own grid)
         gx, gy = self.cfg.split_grid
-        k = gx * gy
+        edges_l = payload.get("split_edges")
+        ks = [gx * gy if edges_l is None else
+              (len(edges_l[i][0]) - 1) * (len(edges_l[i][1]) - 1)
+              for i in range(len(tile_ids))]
         nt = self.n_tiles
         will_split = np.zeros(len(tile_ids), bool)
         for i, t in enumerate(tile_ids):
@@ -568,22 +617,41 @@ class TileIndex:
                 continue
             if (self.count[t] >= self.cfg.min_split_count
                     and self.level[t] < self.cfg.max_level
-                    and nt + k <= self.cfg.capacity):
+                    and nt + ks[i] <= self.cfg.capacity):
                 will_split[i] = True
-                nt += k
+                nt += ks[i]
         self.adapt_stats.tiles_enriched += int(nz.sum() - will_split.sum())
 
-        if will_split.any():
-            edges = payload.get("split_edges")
-            if edges is not None:
-                edges = (edges[0][:n_used][will_split],
-                         edges[1][:n_used][will_split])
+        # pack maximal CONSECUTIVE runs of same-grid tiles into one
+        # _split_batch call each: per-tile grids stay batch-composition
+        # invariant AND children get the same ids as under sequential
+        # processing (run grouping preserves the fold order), while
+        # homogeneous rounds — the common case — still split in one
+        # packed kernel pass
+        pos = np.flatnonzero(will_split)
+        r = 0
+        while r < len(pos):
+            shape = (ks[pos[r]] if edges_l is None else
+                     (len(edges_l[pos[r]][0]), len(edges_l[pos[r]][1])))
+            s = r + 1
+            while s < len(pos) and (
+                    ks[pos[s]] if edges_l is None else
+                    (len(edges_l[pos[s]][0]),
+                     len(edges_l[pos[s]][1]))) == shape:
+                s += 1
+            run = pos[r:s]
+            mask = np.zeros(len(tile_ids), bool)
+            mask[run] = True
+            e = None if edges_l is None else (
+                np.stack([edges_l[i][0] for i in run]),
+                np.stack([edges_l[i][1] for i in run]))
             # boolean indexing copies, and xs/ys are gathered copies to
             # begin with — _split_batch may reorganize x_s/y_s in place
             # without corrupting them
-            keep = np.repeat(will_split, counts)
-            self._split_batch(tile_ids[will_split], idx[keep], xs[keep],
-                              ys[keep], vals[keep], attr, edges=edges)
+            keep = np.repeat(mask, counts)
+            self._split_batch(tile_ids[run], idx[keep], xs[keep],
+                              ys[keep], vals[keep], attr, edges=e)
+            r = s
 
     def process_batch(self, tile_ids, window, attr: str, split_flags):
         """Read + fully apply one batch (convenience one-shot wrapper)."""
@@ -598,9 +666,14 @@ class TileIndex:
         ``edges=(x_edges (S, gx+1), y_edges (S, gy+1))`` is given —
         reorganized in place, and ALL children are appended in one SoA
         update. ``idx/xs/ys/vals`` cover the parents' concatenated
-        segments (pristine copies, concat order).
+        segments (pristine copies, concat order). The split grid is the
+        edges' own when given (one shared (gx, gy) per call — the caller
+        groups same-grid runs), else the even ``split_grid``.
         """
-        gx, gy = self.cfg.split_grid
+        if edges is None:
+            gx, gy = self.cfg.split_grid
+        else:
+            gx, gy = edges[0].shape[1] - 1, edges[1].shape[1] - 1
         k = gx * gy
         s_n = len(parents)
         off = self.offset[parents]

@@ -37,18 +37,34 @@ Refinement side effects apply to exactly the folded prefix of each round
 (``TileIndex.apply_batch``), so the stopping rule, decision sequence,
 f64 arithmetic, AND the index evolution are identical to the sequential
 per-tile reference path (``sequential=True``) — batching changes the
-cost model, not the semantics. ``core.distributed`` reuses the same
-shape in SPMD form: the scoring + prefix-sum selection of its jitted
-query/heatmap steps is this loop with the fold unrolled into one
-vectorized prefix selection.
+cost model, not the semantics.
+
+``core.distributed`` is the OTHER backend of the same skeleton: its
+jitted session steps run this loop with the fold unrolled into one
+vectorized prefix selection per pass, and :class:`EpochDriver` (below)
+drives those passes — step → crack-what-you-read refine epoch →
+re-step on a budget miss — with the shared stopping predicate
+:func:`met` and :class:`EpochStats` accounting feeding the same
+``EngineTrace`` record types as the host driver.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from . import adapt
 from ..kernels.segment_agg import MAX_SEGMENTS, MAX_UNROLL
 from .index import TileIndex
+
+
+def met(phi: float, bound: float) -> bool:
+    """THE stopping predicate of every refinement backend: an
+    approximate query (φ > 0) stops once its stopping quantity — the
+    relative bound, or the φ-scaled worst budget ratio under a φ_b
+    policy — fits the constraint. φ = 0 is the exact method and never
+    stops early. Shared by the host :class:`RefinementDriver` (per-tile
+    folds) and the SPMD :class:`EpochDriver` (per-epoch folds)."""
+    return phi > 0.0 and bound <= phi
 
 
 class ScalarQueryAdapter:
@@ -78,6 +94,12 @@ class ScalarQueryAdapter:
 
     def split_flags(self, tile_ids) -> List[bool]:
         return [t not in self.full_set for t in tile_ids]
+
+    def max_split_cells(self) -> int:
+        # scalar refinement always splits on the even grid — bin-count-
+        # matched grids are a heatmap-only policy
+        gx, gy = self.index.cfg.split_grid
+        return gx * gy
 
 
 class HeatmapQueryAdapter:
@@ -118,6 +140,9 @@ class HeatmapQueryAdapter:
     def split_flags(self, tile_ids) -> List[bool]:
         return [True] * len(tile_ids)
 
+    def max_split_cells(self) -> int:
+        return self.index.cfg.max_split_cells()
+
 
 class RefinementDriver:
     """One score → round-size → read → fold → apply loop for every query
@@ -133,7 +158,7 @@ class RefinementDriver:
         self.alpha = float(alpha)
 
     def _met(self, bound: float) -> bool:
-        return self.phi > 0.0 and bound <= self.phi
+        return met(self.phi, bound)
 
     def run(self, *, batch_k: Optional[int] = None,
             sequential: bool = False) -> int:
@@ -168,11 +193,14 @@ class RefinementDriver:
 
     def _run_batched(self, order, bound, batch_k: Optional[int]) -> int:
         acc, phi, index = self.acc, self.phi, self.index
-        gx, gy = index.cfg.split_grid
         k = index.cfg.batch_k if batch_k is None else int(batch_k)
         # packed kernels unroll statically over segments (and cells in
-        # the split kernel) — cap the round size at their limits
-        k = max(1, min(k, MAX_SEGMENTS, MAX_UNROLL // (gx * gy)))
+        # the split kernel) — cap the round size at their limits, sized
+        # by the LARGEST split grid this adapter's rounds may carry
+        # (heatmap: bin-count-matched grids up to max_split_span per
+        # axis; scalar: the even split_grid)
+        k = max(1, min(k, MAX_SEGMENTS,
+                       MAX_UNROLL // self.adapter.max_split_cells()))
         # Round sizing under φ>0: the stopping rule can fire mid-round
         # and rows read past it are speculative. For sum/mean the needed
         # fold count has a certain lower bound (min_folds_needed) —
@@ -211,3 +239,103 @@ class RefinementDriver:
             index.apply_batch(payload, n_used,
                               self.adapter.split_flags(batch[:n_used]))
         return processed
+
+
+@dataclasses.dataclass
+class EpochStats:
+    """Per-query accounting of an :class:`EpochDriver` run — the fields
+    the distributed engine folds into its ``QueryResult``/
+    ``HeatmapResult`` records so ``EngineTrace.totals()`` covers SPMD
+    sessions exactly like host ones."""
+    objects_read: int = 0
+    tiles_processed: int = 0
+    rounds: int = 0        # selection passes (one gathered read each)
+    epochs: int = 0        # refine epochs actually applied
+
+
+class EpochDriver:
+    """The SPMD backend of the classify→score→fold skeleton.
+
+    The host :class:`RefinementDriver` folds tile-by-tile because host
+    reads are incremental; a fully-jitted SPMD step instead folds a
+    whole score-ordered PREFIX per pass (classification, scoring, and
+    prefix selection all happen in-program). This driver runs the same
+    outer loop at that granularity:
+
+      1. run the jitted selection step (classify → score → fold the
+         selected prefix, returning the post-read stopping quantity);
+      2. while the (budget) bound misses φ and unprocessed pending
+         tiles remain, re-run the step (bounded by ``max_epochs``
+         re-selection passes — each pass's reads land in the step's
+         exact registry, so the next pass answers them free and
+         extends the selection deeper), then finish with one exact-ish
+         φ = 0 pass;
+      3. CRACK-WHAT-YOU-READ, once, after the final pass: one sharded
+         refine epoch over the tiles that pass processed — their
+         segments are already in HBM, so splitting is free I/O-wise,
+         exactly like host ``process(t)``'s split side effect. This is
+         what makes the session state converge across queries.
+         Cracking MID-query would deactivate just-read parents, orphan
+         their registry rows, and re-charge their boundary children on
+         the very next pass — so the epoch runs strictly after the
+         last selection.
+
+    ``run_step(phi) → out`` must return a dict with the stopping
+    quantity under ``"budget_bound"`` (the φ-scaled worst budget ratio —
+    equal to the plain relative bound under a uniform policy) plus
+    ``n_processed``/``n_partial``/``objects_read``; ``run_epoch(out) →
+    n_split`` applies the refinement side effects (persisting any state
+    in its closure) and reports how many tiles actually split. Both the
+    stopping predicate (:func:`met`) and the accounting
+    (:class:`EpochStats`) are shared with the host driver's consumers.
+
+    ``stateful_steps`` declares whether the step carries per-pass
+    memory (the heatmap step's per-(tile, bin) exact registry). The
+    cache-less scalar step sets it False: with the state untouched
+    until the final crack, a same-φ re-selection would be
+    byte-identical (and multiply-count its reads), so the loop goes
+    straight to the φ = 0 fallback on a miss.
+    """
+
+    def __init__(self, run_step: Callable, run_epoch: Optional[Callable],
+                 phi: float, *, max_epochs: int = 2,
+                 max_process: int = 1 << 62, stateful_steps: bool = True):
+        self.run_step = run_step
+        self.run_epoch = run_epoch
+        self.phi = float(phi)
+        self.max_epochs = int(max_epochs)
+        self.max_process = int(max_process)
+        self.stateful_steps = bool(stateful_steps)
+
+    def _fold(self, out, stats: EpochStats):
+        stats.objects_read += int(out["objects_read"])
+        stats.tiles_processed += int(out["n_processed"])
+        stats.rounds += 1
+        return out
+
+    def _refinable(self, out) -> bool:
+        # once every pending tile is processed (or the static cap is
+        # hit), another pass at the same φ answers identically
+        return int(out["n_processed"]) < min(int(out["n_partial"]),
+                                             self.max_process)
+
+    def run(self):
+        stats = EpochStats()
+        out = self._fold(self.run_step(self.phi), stats)
+        while (self.phi > 0.0
+                and not met(self.phi, float(out["budget_bound"]))
+                and self._refinable(out)
+                and self.stateful_steps
+                and stats.rounds <= self.max_epochs):
+            # the surrogate prefix bound can miss because exact values
+            # move the denominators post-read; re-select with the prior
+            # passes' reads answering from the registry
+            out = self._fold(self.run_step(self.phi), stats)
+        if (self.phi > 0.0
+                and not met(self.phi, float(out["budget_bound"]))
+                and self._refinable(out)):
+            out = self._fold(self.run_step(0.0), stats)
+        # crack-what-you-read, strictly after the last selection pass
+        if self.run_epoch is not None and int(out["n_processed"]) > 0:
+            stats.epochs += int(int(self.run_epoch(out)) > 0)
+        return out, stats

@@ -2,9 +2,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Dry-run of the PAPER'S technique on the production mesh: the
-distributed AQP query step (φ-constrained window aggregation with
-partial processing) lowered + compiled for 256 and 512 chips, objects
-sharded over every device.
+distributed AQP SESSION programs — the scalar selection step over the
+persistent :class:`ShardedTileState` and the bin-aligned sharded refine
+epoch — lowered + compiled for 256 and 512 chips, objects sharded over
+every device.
 
     PYTHONPATH=src python -m repro.launch.dryrun_aqp
 """
@@ -14,8 +15,9 @@ import time          # noqa: E402
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core.distributed import DistConfig, make_query_step, \
-    make_refine_step                                     # noqa: E402
+from repro.core.distributed import (DistConfig, ShardedTileState,
+                                    make_refine_epoch,
+                                    make_session_query_step)  # noqa: E402
 from repro.launch.hlo_analysis import analyze_hlo        # noqa: E402
 from repro.launch.mesh import make_production_mesh       # noqa: E402
 
@@ -25,18 +27,27 @@ def run(multi_pod: bool, n_per_dev: int = 1_000_000,
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = len(mesh.devices.flat)
     n = n_per_dev * n_dev
-    cfg = DistConfig(grid=(64, 64))
-    step = make_query_step(mesh, cfg)
-    refine = make_refine_step(mesh, cfg)
+    cap = 8192
+    cfg = DistConfig(grid=(64, 64), capacity=cap)
+    step = make_session_query_step(mesh, cfg)
+    epoch = make_refine_epoch(mesh, cfg, bins=(8, 8))
 
     obj = jax.ShapeDtypeStruct((n,), jnp.float32)
     rep4 = jax.ShapeDtypeStruct((4,), jnp.float32)
     phi = jax.ShapeDtypeStruct((), jnp.float32)
+    f32v = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)  # noqa: E731
+    state = ShardedTileState(
+        cell=jax.ShapeDtypeStruct((n,), jnp.int32), bbox=f32v(cap, 4),
+        active=jax.ShapeDtypeStruct((cap,), jnp.bool_),
+        level=jax.ShapeDtypeStruct((cap,), jnp.int32),
+        count=f32v(cap), vmin=f32v(cap), vmax=f32v(cap),
+        n_tiles=jax.ShapeDtypeStruct((), jnp.int32))
+    sel = jax.ShapeDtypeStruct((cap,), jnp.bool_)
 
     recs = {}
     for name, fn, args in (
-            ("aqp_query", step, (obj, obj, obj, rep4, rep4, phi)),
-            ("aqp_refine", refine, (obj, obj, obj, rep4))):
+            ("aqp_query", step, (state, obj, obj, obj, rep4, phi)),
+            ("aqp_refine", epoch, (state, obj, obj, obj, rep4, sel))):
         t0 = time.time()
         with mesh:
             lowered = fn.lower(*args)

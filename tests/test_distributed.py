@@ -24,6 +24,9 @@ def run_sub(body: str, timeout=420) -> str:
 
 
 def test_distributed_query_matches_oracle_and_bound():
+    """The SESSION scalar path: the state cracks across the query path
+    (refine epochs rewrite the sharded cell ids in place), and every
+    answer still contains its oracle with the bound met."""
     print(run_sub("""
         import jax, numpy as np
         import jax.numpy as jnp
@@ -34,34 +37,40 @@ def test_distributed_query_matches_oracle_and_bound():
 
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         ds = make_synthetic_dataset(n=80_000, seed=3)
-        eng = DistributedAQPEngine(ds, mesh, DistConfig(grid=(16, 16)))
+        eng = DistributedAQPEngine(ds, mesh, DistConfig(
+            grid=(16, 16), capacity=1024, min_split_count=128))
         wins = exploration_path(ds, n_queries=6, target_objects=8000)
         n = len(eng.xs)
         for phi in (0.0, 0.05):
             for w in wins:
-                out = eng.query(w, "a0", phi)
+                r = eng.query(w, "a0", phi)
                 m = window_mask_np(np.asarray(ds.x[:n]),
                                    np.asarray(ds.y[:n]), w)
                 vals = ds.read_all_unaccounted("a0")[:n][m]
                 truth = vals.sum(dtype=np.float64)
                 eps = 1e-5 * abs(truth) + 1e-2  # f32 partial-sum slack
-                assert out["lo"] - eps <= truth <= out["hi"] + eps, \\
-                    (phi, w, out, truth)
+                assert r.lo - eps <= truth <= r.hi + eps, \\
+                    (phi, w, r, truth)
                 if phi == 0.0:
-                    np.testing.assert_allclose(out["value"], truth,
+                    np.testing.assert_allclose(r.value, truth,
                                                rtol=1e-3, atol=1.0)
                 else:
-                    assert out["bound"] <= phi + 1e-6 or \\
-                        out["n_processed"] == out["n_partial"]
+                    assert r.bound <= phi + 1e-6 or r.exact
+        # the engine records every query into the trace (totals() covers
+        # distributed sessions like host ones)
+        tot = eng.trace.totals()
+        assert tot["queries"] == 12 and tot["scalar_queries"] == 12
+        assert tot["total_objects_read"] == sum(
+            r.objects_read for r in eng.trace.results)
+        assert list(eng.n_active.values())[0] > 16 * 16  # it cracked
         print("DIST-AQP-OK")
     """))
 
 
 def test_distributed_heatmap_matches_oracle_and_bounds():
-    """Per-bin values + bounds from the SPMD heatmap step match the
-    single-host oracle: every occupied bin's CI contains its ground
-    truth, φ=0 equals the truth to f32 tolerance, and under φ>0 the
-    reported per-bin-max bound meets φ (or everything was processed)."""
+    """The SESSION heatmap path: per-bin values + bounds stay oracle-
+    correct while the sharded state cracks and the per-(tile, bin)
+    exact registry fills across the exploration path."""
     print(run_sub("""
         import jax, numpy as np
         import jax.numpy as jnp
@@ -73,36 +82,179 @@ def test_distributed_heatmap_matches_oracle_and_bounds():
         BX, BY = 6, 4
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         ds = make_synthetic_dataset(n=80_000, seed=3)
-        eng = DistributedAQPEngine(ds, mesh, DistConfig(grid=(16, 16)))
+        eng = DistributedAQPEngine(ds, mesh, DistConfig(
+            grid=(16, 16), capacity=1024, min_split_count=128))
         wins = exploration_path(ds, n_queries=4, target_objects=8000)
         n = len(eng.xs)
         xs = np.asarray(ds.x[:n]); ys = np.asarray(ds.y[:n])
         col = ds.read_all_unaccounted("a0")[:n]
         for phi in (0.0, 0.05):
             for w in wins:
-                out = eng.heatmap(w, "a0", bins=(BX, BY), phi=phi)
+                r = eng.heatmap(w, "a0", bins=(BX, BY), phi=phi)
                 m, cid = window_bin_ids_np(xs, ys, w, BX, BY)
                 truth = np.bincount(cid[m], weights=col[m].astype(
                     np.float64), minlength=BX * BY)
                 occ = np.bincount(cid[m], minlength=BX * BY) > 0
                 eps = 1e-4 * np.abs(truth) + 0.5   # f32 partial-sum slack
-                assert (out["lo"][occ] - eps[occ] <= truth[occ]).all(), \\
+                assert (r.lo[occ] - eps[occ] <= truth[occ]).all(), \\
                     (phi, w)
-                assert (truth[occ] <= out["hi"][occ] + eps[occ]).all(), \\
+                assert (truth[occ] <= r.hi[occ] + eps[occ]).all(), \\
                     (phi, w)
                 if phi == 0.0:
-                    np.testing.assert_allclose(out["values"][occ],
+                    np.testing.assert_allclose(r.values[occ],
                                                truth[occ], rtol=1e-3,
                                                atol=1.0)
                 else:
-                    assert out["bound"] <= phi + 1e-6 or \\
-                        out["n_processed"] == out["n_partial"]
+                    assert r.bound <= phi + 1e-6 or r.exact
                 # per-bin bound covers each bin's observed deviation
-                err = np.abs(out["values"][occ] - truth[occ])
-                cap = out["bin_bound"][occ] * np.maximum(
-                    np.abs(out["values"][occ]), 1e-9) + eps[occ]
+                err = np.abs(r.values[occ] - truth[occ])
+                cap = r.bin_bound[occ] * np.maximum(
+                    np.abs(r.values[occ]), 1e-9) + eps[occ]
                 assert (err <= cap).all(), (phi, w)
+        tot = eng.trace.totals()
+        assert tot["heatmap_queries"] == 8
         print("DIST-HEATMAP-OK")
+    """))
+
+
+def test_distributed_session_reads_fewer_on_repeat():
+    """The acceptance property of the sharded session state: a REPEATED
+    window reads strictly fewer objects on query 2+ than on query 1 —
+    previously-read tiles answer from the per-(tile, bin) exact
+    registry and refine epochs shrink the pending boundary — while the
+    stateless one-shot step pays the full price every time."""
+    print(run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.core.distributed import (DistributedAQPEngine,
+                                            DistConfig, make_heatmap_step)
+        from repro.data import make_synthetic_dataset
+        from repro.data.synthetic import exploration_path
+
+        mesh = jax.make_mesh((8,), ("data",))
+        ds = make_synthetic_dataset(n=80_000, seed=5)
+        cfg = DistConfig(grid=(16, 16), capacity=2048,
+                         min_split_count=128)
+        eng = DistributedAQPEngine(ds, mesh, cfg)
+        w = exploration_path(ds, n_queries=1, target_objects=12_000)[0]
+        r1 = eng.heatmap(w, "a0", bins=(6, 6), phi=0.02)
+        r2 = eng.heatmap(w, "a0", bins=(6, 6), phi=0.02)
+        r3 = eng.heatmap(w, "a0", bins=(6, 6), phi=0.02)
+        assert r1.objects_read > 0
+        assert r2.objects_read < r1.objects_read, (r1.objects_read,
+                                                   r2.objects_read)
+        assert r3.objects_read <= r2.objects_read
+        # the stateless wrapper rebuilds the surrogate per call: the
+        # repeat costs exactly what the first call cost
+        step = make_heatmap_step(mesh, cfg, (6, 6))
+        args = (eng.xs, eng.ys, eng.vals["a0"], eng.domain,
+                jnp.asarray(w, jnp.float32), jnp.float32(0.02))
+        s1 = float(step(*args)["objects_read"])
+        s2 = float(step(*args)["objects_read"])
+        assert s1 == s2 and s1 > 0
+        assert r2.objects_read < s2, (r2.objects_read, s2)
+        # the scalar session amortizes too (no registry, cracking only)
+        q1 = eng.query(w, "a0", 0.02)
+        q2 = eng.query(w, "a0", 0.02)
+        assert q2.objects_read <= q1.objects_read
+        print("DIST-SESSION-OK")
+    """))
+
+
+def test_distributed_uniform_policy_parity_and_phi_b_vs_host():
+    """φ_b in-SPMD: (a) the UNIFORM policy routes to — and equals
+    bit-for-bit — the scalar-φ build (the host ``set_policy`` drop
+    rule), and the stateless wrapper equals a fresh session's first
+    pass bit-for-bit (the pre-refactor step contract); (b) floored /
+    salience φ_b allocations meet every per-bin budget against the
+    ground truth, on the device mesh AND on the host engine the same
+    policy semantics came from."""
+    print(run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.core import AQPEngine, IndexConfig
+        from repro.core.bounds import AccuracyPolicy, phi_budgets
+        from repro.core.distributed import (
+            DistributedAQPEngine, DistConfig, make_heatmap_step,
+            make_init_state, make_session_heatmap_step, _empty_cache)
+        from repro.data import make_synthetic_dataset
+        from repro.data.rawfile import RawDataset
+        from repro.data.synthetic import exploration_path
+        from repro.kernels.ref import window_bin_ids_np
+
+        BX, BY = 6, 4
+        NB = BX * BY
+        mesh = jax.make_mesh((8,), ("data",))
+        ds = make_synthetic_dataset(n=64_000, seed=7)
+        cfg = DistConfig(grid=(16, 16), capacity=1024,
+                         min_split_count=128)
+        w = exploration_path(ds, n_queries=1, target_objects=10_000)[0]
+        win = jnp.asarray(w, jnp.float32)
+
+        # (a) uniform-policy routing parity: bit-for-bit the plain path
+        e1 = DistributedAQPEngine(ds, mesh, cfg)
+        e2 = DistributedAQPEngine(ds, mesh, cfg)
+        r1 = e1.heatmap(w, "a0", bins=(BX, BY), phi=0.05, policy=None)
+        r2 = e2.heatmap(w, "a0", bins=(BX, BY), phi=0.05,
+                        policy=AccuracyPolicy())
+        for f in ("values", "lo", "hi", "bin_bound"):
+            np.testing.assert_array_equal(getattr(r1, f), getattr(r2, f))
+        assert (r1.objects_read, r1.tiles_processed) == \\
+            (r2.objects_read, r2.tiles_processed)
+
+        # stateless wrapper ≡ fresh-session single pass, bit-for-bit
+        init = make_init_state(mesh, cfg)
+        sess = make_session_heatmap_step(mesh, cfg, (BX, BY), "sum",
+                                         with_policy=False)
+        st = init(e1.xs, e1.ys, e1.vals["a0"], e1.domain)
+        out_s, _ = sess(st, _empty_cache(cfg.capacity, NB), e1.xs,
+                        e1.ys, e1.vals["a0"], win, jnp.float32(0.05),
+                        jnp.zeros((NB,), jnp.float32), jnp.float32(0.0))
+        out_w = make_heatmap_step(mesh, cfg, (BX, BY))(
+            e1.xs, e1.ys, e1.vals["a0"], e1.domain, win,
+            jnp.float32(0.05))
+        for f in ("values", "lo", "hi", "bin_bound", "objects_read",
+                  "n_processed"):
+            np.testing.assert_array_equal(np.asarray(out_s[f]),
+                                          np.asarray(out_w[f]))
+
+        # (b) non-uniform φ_b allocations meet per-bin budgets vs truth,
+        # SPMD and host alike, on skewed data (one hot corner)
+        rng = np.random.default_rng(11)
+        n = 64_000
+        x = rng.uniform(0, 1000, n).astype(np.float32)
+        y = rng.uniform(0, 1000, n).astype(np.float32)
+        hot = (x > 750) & (y > 750)
+        v = np.where(hot, rng.normal(100, 10, n),
+                     rng.normal(0, 0.02, n)).astype(np.float32)
+        sk = RawDataset(x, y, {"a0": v})
+        wsk = (500.0, 500.0, 1000.0, 1000.0)
+        m, cid = window_bin_ids_np(x, y, wsk, BX, BY)
+        truth = np.bincount(cid[m], weights=v[m].astype(np.float64),
+                            minlength=NB)
+        occ = np.bincount(cid[m], minlength=NB) > 0
+        PHI = 0.05
+        eps_abs = 0.02 * float(np.abs(truth).max())
+        deng = DistributedAQPEngine(sk, mesh, cfg)
+        heng = AQPEngine(sk, IndexConfig(grid0=(8, 8),
+                                         min_split_count=256,
+                                         init_metadata_attrs=("a0",)))
+        for pol in (AccuracyPolicy(eps_abs=eps_abs),
+                    AccuracyPolicy(eps_abs=eps_abs, salience="center")):
+            phi_b = pol.phi_b(PHI, (BX, BY))
+            tau = phi_budgets(phi_b, np.maximum(np.abs(truth), 1e-9),
+                              pol.eps_abs)
+            slack = 1e-3 * np.abs(truth) + 0.5   # f32 partial sums
+            rd = deng.heatmap(wsk, "a0", bins=(BX, BY), phi=PHI,
+                              policy=pol)
+            assert rd.bin_met is not None and rd.bin_met.all(), pol
+            err_d = np.abs(rd.values[occ] - truth[occ])
+            assert (err_d <= tau[occ] + slack[occ]).all(), pol
+            rh = heng.heatmap(wsk, "sum", "a0", bins=(BX, BY), phi=PHI,
+                              policy=pol)
+            err_h = np.abs(rh.values[occ] - truth[occ])
+            assert (err_h <= tau[occ] + slack[occ]).all(), pol
+        print("DIST-PHI-B-OK")
     """))
 
 
@@ -121,7 +273,8 @@ def test_distributed_heatmap_min_max_matches_oracle():
         BX, BY = 5, 3
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         ds = make_synthetic_dataset(n=80_000, seed=3)
-        eng = DistributedAQPEngine(ds, mesh, DistConfig(grid=(16, 16)))
+        eng = DistributedAQPEngine(ds, mesh, DistConfig(
+            grid=(16, 16), capacity=1024, min_split_count=128))
         wins = exploration_path(ds, n_queries=3, target_objects=8000)
         n = len(eng.xs)
         xs = np.asarray(ds.x[:n]); ys = np.asarray(ds.y[:n])
@@ -148,55 +301,121 @@ def test_distributed_heatmap_min_max_matches_oracle():
             fill = np.inf if agg == "min" else -np.inf
             for phi in (0.0, 0.05):
                 for w in wins:
-                    out = eng.heatmap(w, "a0", bins=(BX, BY), phi=phi,
-                                      agg=agg)
+                    r = eng.heatmap(w, "a0", bins=(BX, BY), phi=phi,
+                                    agg=agg)
                     m, cid = f32_bin_ids(w)
                     occ = np.bincount(cid[m], minlength=nb) > 0
                     truth = np.full(nb, fill)
                     for b in np.flatnonzero(occ):
                         sel = col[m & (cid == b)]
                         truth[b] = sel.min() if agg == "min" else sel.max()
-                    assert (out["lo"][occ] - 1e-4 <= truth[occ]).all(), \\
+                    assert (r.lo[occ] - 1e-4 <= truth[occ]).all(), \\
                         (agg, phi, w)
-                    assert (truth[occ] <= out["hi"][occ] + 1e-4).all(), \\
+                    assert (truth[occ] <= r.hi[occ] + 1e-4).all(), \\
                         (agg, phi, w)
                     # empty bins carry the HeatmapResult sentinel
-                    assert (out["values"][~occ] == fill).all()
-                    assert ((out["bin_count"] > 0) == occ).all()
+                    assert (r.values[~occ] == fill).all()
                     if phi == 0.0:
                         # extrema don't round: exact equality at phi=0
                         np.testing.assert_array_equal(
-                            out["values"][occ].astype(np.float32),
+                            r.values[occ].astype(np.float32),
                             truth[occ].astype(np.float32))
                     else:
-                        assert out["bound"] <= phi + 1e-6 or \\
-                            out["n_processed"] == out["n_partial"]
+                        assert r.bound <= phi + 1e-6 or r.exact
                     # per-bin bound covers each bin's observed deviation
-                    err = np.abs(out["values"][occ] - truth[occ])
-                    cap = out["bin_bound"][occ] * np.maximum(
-                        np.abs(out["values"][occ]), 1e-9) + 1e-4
+                    err = np.abs(r.values[occ] - truth[occ])
+                    cap = r.bin_bound[occ] * np.maximum(
+                        np.abs(r.values[occ]), 1e-9) + 1e-4
                     assert (err <= cap).all(), (agg, phi, w)
         print("DIST-HEATMAP-MINMAX-OK")
     """))
 
 
-def test_distributed_refine_metadata():
+def test_distributed_refine_epoch_invariants():
+    """Sharded refine epoch: splits rewrite the sharded cell ids and
+    append psum-merged child metadata that stays SOUND — object
+    conservation, counts matching a host recount of the cell plane,
+    child extents nested in (bin-aligned snaps of) the parent, and
+    value bounds containing every owned object's value."""
     print(run_sub("""
         import jax, numpy as np
+        import jax.numpy as jnp
         from repro.core.distributed import DistributedAQPEngine, DistConfig
         from repro.data import make_synthetic_dataset
 
         mesh = jax.make_mesh((8,), ("data",))
         ds = make_synthetic_dataset(n=40_000, seed=4)
-        eng = DistributedAQPEngine(ds, mesh, DistConfig(grid=(8, 8)))
-        meta = eng.refine("a1")
+        eng = DistributedAQPEngine(ds, mesh, DistConfig(
+            grid=(8, 8), capacity=512, min_split_count=64, epoch_k=8))
         n = len(eng.xs)
         col = ds.read_all_unaccounted("a1")[:n]
-        assert float(np.asarray(meta["count"]).sum()) == n
-        np.testing.assert_allclose(float(np.asarray(meta["sum"]).sum()),
-                                   col.sum(dtype=np.float64), rtol=1e-3)
-        assert float(np.asarray(meta["min"]).min()) == col.min()
-        assert float(np.asarray(meta["max"]).max()) == col.max()
+        BX, BY = 6, 6
+        d = np.asarray(eng.domain)
+        w = (d[0], d[1], d[2], d[3])
+        info = eng.refine("a1", window=w, bins=(BX, BY))
+        assert info["n_split"] == 8, info
+        info2 = eng.refine("a1", window=w, bins=(BX, BY))
+        st = eng._states["a1"]
+        active = np.asarray(st.active)
+        count = np.asarray(st.count)
+        cell = np.asarray(st.cell)
+        bbox = np.asarray(st.bbox)
+        vmin = np.asarray(st.vmin); vmax = np.asarray(st.vmax)
+        nt = int(np.asarray(st.n_tiles))
+        assert nt == 8 * 8 + (info["n_split"] + info2["n_split"]) * 4
+        # object conservation + count/cell-plane agreement
+        assert count[active].sum() == n
+        recount = np.bincount(cell, minlength=len(count))
+        np.testing.assert_array_equal(recount[active],
+                                      count[active].astype(np.int64))
+        assert (recount[~active] == 0).all()
+        # soundness: every owned object's value inside the tile bounds,
+        # coordinates inside the tile extent (f32 binning tolerance)
+        for t in np.flatnonzero(active)[:64]:
+            own = cell == t
+            if not own.any():
+                continue
+            assert col[own].min() >= vmin[t] - 1e-4
+            assert col[own].max() <= vmax[t] + 1e-4
+            xs = np.asarray(eng.xs)[own]; ys = np.asarray(eng.ys)[own]
+            tol = 1e-3
+            assert (xs >= bbox[t, 0] - tol).all() and \\
+                (xs <= bbox[t, 2] + tol).all()
+            assert (ys >= bbox[t, 1] - tol).all() and \\
+                (ys <= bbox[t, 3] + tol).all()
+        # bin-aligned snapping: children come in groups of 4 per split
+        # parent (rows appended k at a time); the group's interior split
+        # edge must sit ON the bin line crossing the parent when one
+        # does, and on the even midpoint otherwise (_snapped_edges'
+        # fallback rule)
+        # (tolerance-based: XLA may compile the step's /b as a
+        # reciprocal multiply, so its f32 line values can sit an ulp
+        # away from any host mirror — 1e-3 absorbs that while still
+        # failing hard if snapping degrades to even splits)
+        w32 = np.asarray(w, np.float32)
+        xlines = (w32[0] + (w32[2] - w32[0]) / np.float32(BX)
+                  * np.arange(1, BX, dtype=np.float32))
+        n_children = nt - 8 * 8
+        assert n_children > 0 and n_children % 4 == 0
+        checked = 0
+        for g in range(n_children // 4):
+            rows = 8 * 8 + 4 * g + np.arange(4)
+            px0 = bbox[rows, 0].min(); px1 = bbox[rows, 2].max()
+            cut = bbox[rows[0], 2]          # child 0's right edge
+            near_line = np.abs(xlines - cut).min() <= 1e-3
+            inside = xlines[(xlines > px0 + 1e-3)
+                            & (xlines < px1 - 1e-3)]
+            if inside.size:
+                # a line clearly crosses the parent: the cut MUST have
+                # snapped onto a bin line, not the even midpoint
+                assert near_line, (g, cut, inside)
+                checked += 1
+            else:
+                # no clearly-interior line: even midpoint, or a snap to
+                # a line hugging the extent boundary (f32 ulp cases)
+                assert near_line or \\
+                    abs(cut - 0.5 * (px0 + px1)) <= 1e-3, (g, cut)
+        assert checked > 0   # at least one parent actually snapped
         print("DIST-REFINE-OK")
     """))
 

@@ -153,6 +153,55 @@ def test_bin_aligned_split_beats_even_split_on_repeat_heatmap():
     assert reads[True][1] < reads[True][0]
 
 
+def test_bin_matched_split_resolves_wide_tiles_in_one_split():
+    """Bin-count-MATCHED split grids: a tile spanning s ≥ 3 bins per
+    axis (up to ``IndexConfig.max_split_span``) nests EVERY child in a
+    single bin after ONE split — the 2×2-cut policy needed several —
+    so the repeat heatmap answers entirely from metadata (zero reads)."""
+    from repro.core import AQPEngine, IndexConfig
+    from repro.data import make_synthetic_dataset
+
+    ds = make_synthetic_dataset(n=30_000, seed=9)
+    eng = AQPEngine(ds, IndexConfig(grid0=(1, 1), min_split_count=64,
+                                    init_metadata_attrs=("a0",)))
+    d = ds.domain()
+    w = (d[0], d[1], d[2], d[3])          # the root spans all 4x4 bins
+    bins = (4, 4)
+    r1 = eng.heatmap(w, "sum", "a0", bins=bins, phi=0.0)
+    idx = eng.index
+    # one split, bin-count-matched: 4x4 children, all nested
+    lvl1 = [t for t in range(idx.n_tiles) if idx.parent[t] == 0]
+    assert len(lvl1) == 16
+    xl = np.linspace(w[0], w[2], 5)[1:-1]
+    yl = np.linspace(w[1], w[3], 5)[1:-1]
+    for t in lvl1:
+        x0, y0, x1, y1 = idx.bbox[t]
+        assert not ((xl > x0 + 1e-9) & (xl < x1 - 1e-9)).any(), t
+        assert not ((yl > y0 + 1e-9) & (yl < y1 - 1e-9)).any(), t
+    r2 = eng.heatmap(w, "sum", "a0", bins=bins, phi=0.0)
+    assert r1.objects_read == ds.n and r2.objects_read == 0
+    eng.index.check_invariants("a0")
+    # batched ≡ sequential under per-tile (variable) split grids
+    e_seq = AQPEngine(make_synthetic_dataset(n=30_000, seed=9),
+                      IndexConfig(grid0=(4, 4), min_split_count=64,
+                                  init_metadata_attrs=("a0",)))
+    e_bat = AQPEngine(make_synthetic_dataset(n=30_000, seed=9),
+                      IndexConfig(grid0=(4, 4), min_split_count=64,
+                                  init_metadata_attrs=("a0",)))
+    for wq in exploration_path(e_seq.dataset, n_queries=3,
+                               target_objects=8000):
+        rs = e_seq.heatmap(wq, "sum", "a0", bins=(5, 5), phi=0.0,
+                           sequential=True)
+        rb = e_bat.heatmap(wq, "sum", "a0", bins=(5, 5), phi=0.0)
+        assert rb.objects_read == rs.objects_read
+        assert e_seq.index.n_tiles == e_bat.index.n_tiles
+        np.testing.assert_array_equal(
+            e_seq.index.bbox[:e_seq.index.n_tiles],
+            e_bat.index.bbox[:e_bat.index.n_tiles])
+        np.testing.assert_allclose(rb.values, rs.values, rtol=1e-9)
+    print("BIN-MATCHED-OK")
+
+
 def test_bin_aligned_children_nest_in_single_bins():
     """A split tile's children lie inside single bins of the query grid
     wherever at most one bin line per axis crossed the parent — the one
