@@ -27,7 +27,8 @@ def main(smoke: bool = False) -> None:
         common.configure_smoke()
     print("name,us_per_call,derived")
     from . import (accuracy_sweep, adaptation_cost, fig2_exploration,
-                   heatmap_exploration, kernels_bench, objects_read)
+                   heatmap_exploration, kernels_bench, objects_read,
+                   streaming_exploration)
     os.makedirs("experiments", exist_ok=True)
     fig2_exploration.main(save_csv="experiments/fig2.csv")
     objects_read.main()
@@ -35,6 +36,7 @@ def main(smoke: bool = False) -> None:
     accuracy_sweep.main()
     adaptation_cost.main()
     heatmap_exploration.main()
+    streaming_exploration.main()
 
     # persist the full sweep: CI uploads experiments/BENCH_*.json as a
     # workflow artifact so regressions are diffable across pushes

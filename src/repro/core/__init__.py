@@ -4,14 +4,15 @@ from .bounds import (AccuracyPolicy, GroupedAccumulator, GroupedPendingTile,
                      HeatmapResult, PendingTile, QueryAccumulator,
                      QueryResult)
 from .engine import AQPEngine, EngineTrace
-from .index import AdaptStats, IndexConfig, TileIndex
+from .index import AdaptStats, ChunkIndexSet, IndexConfig, TileIndex
 from .query import (evaluate, evaluate_heatmap, evaluate_heatmap_oracle,
                     evaluate_oracle)
 from .refine import (HeatmapQueryAdapter, RefinementDriver,
                      ScalarQueryAdapter)
 
 __all__ = [
-    "AQPEngine", "EngineTrace", "TileIndex", "IndexConfig", "AdaptStats",
+    "AQPEngine", "EngineTrace", "TileIndex", "ChunkIndexSet",
+    "IndexConfig", "AdaptStats",
     "AccuracyPolicy",
     "QueryResult", "QueryAccumulator", "PendingTile",
     "HeatmapResult", "GroupedAccumulator", "GroupedPendingTile",

@@ -231,6 +231,7 @@ class QueryResult:
     read_calls: int = 0        # raw-file read invocations (gathered = 1/round)
     batch_rounds: int = 0      # batched refinement rounds (0 ⇒ sequential)
     speculative_rows: int = 0  # rows read past the stopping point
+    pruned_chunks: int = 0     # chunks skipped on their bbox (chunked ds)
     eval_time_s: float = 0.0
 
 
@@ -414,6 +415,7 @@ class HeatmapResult:
     read_calls: int = 0        # raw-file read invocations (gathered = 1/round)
     batch_rounds: int = 0      # batched refinement rounds (0 ⇒ sequential)
     speculative_rows: int = 0  # rows read past the stopping point
+    pruned_chunks: int = 0     # chunks skipped on their bbox (chunked ds)
     eval_time_s: float = 0.0
     # per-bin allocation (AccuracyPolicy queries; None ⇒ uniform φ).
     # NOTE: under a non-trivial policy the query-level ``bound`` (max
@@ -483,6 +485,19 @@ class GroupedAccumulator:
         if cnt > 0:
             self.ex_min[b] = min(self.ex_min[b], vmin)
             self.ex_max[b] = max(self.ex_max[b], vmax)
+
+    def fold_full_vec(self, cnt_b, sum_b, min_b, max_b):
+        """Exact per-bin contribution of a whole tile across MANY bins —
+        the session bin-grid memory's fold (a registry hit replays the
+        tile's processed contribution with zero file I/O)."""
+        cnt_b = np.asarray(cnt_b, np.int64)
+        self.ex_cnt += cnt_b
+        self.ex_sum += np.asarray(sum_b, np.float64)
+        nz = cnt_b > 0
+        self.ex_min[nz] = np.minimum(self.ex_min[nz], np.asarray(
+            min_b, np.float64)[nz])
+        self.ex_max[nz] = np.maximum(self.ex_max[nz], np.asarray(
+            max_b, np.float64)[nz])
 
     def add_pending(self, p: GroupedPendingTile):
         if p.cnt_b.sum() <= 0:

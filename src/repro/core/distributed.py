@@ -822,7 +822,15 @@ class DistributedAQPEngine:
     :class:`~repro.core.bounds.QueryResult` /
     :class:`~repro.core.bounds.HeatmapResult` to :attr:`trace`, so
     ``EngineTrace.totals()`` (and the benchmarks' ``mixed_io_summary``)
-    cover distributed sessions exactly like host ones."""
+    cover distributed sessions exactly like host ones.
+
+    ``dataset`` may be a :class:`~repro.data.rawfile.RawDataset` or a
+    :class:`~repro.data.chunked.ChunkedDataset` — the constructor
+    materializes the data onto the mesh ONCE, so a chunked dataset is
+    device-resident as a snapshot of its live chunks at construction
+    time: later ``ingest``/``retire`` calls do not reshard (rebuild the
+    engine, or use the host ``AQPEngine`` whose chunk forest tracks the
+    lifecycle natively)."""
 
     def __init__(self, dataset, mesh: Mesh,
                  cfg: DistConfig = DistConfig()):

@@ -61,10 +61,11 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional, Tuple, Union
 
+from ..data.chunked import ChunkedDataset
 from ..data.rawfile import RawDataset
 from . import query as query_mod
 from .bounds import AccuracyPolicy, HeatmapResult, QueryResult
-from .index import IndexConfig, TileIndex
+from .index import ChunkIndexSet, IndexConfig, TileIndex
 
 
 @dataclasses.dataclass
@@ -88,6 +89,8 @@ class EngineTrace:
                                       for r in self.results),
             "total_speculative_rows": sum(r.speculative_rows
                                           for r in self.results),
+            "total_pruned_chunks": sum(r.pruned_chunks
+                                       for r in self.results),
         }
         for kind, rs in (
                 ("scalar", [r for r in self.results
@@ -104,14 +107,22 @@ class EngineTrace:
 
 
 class AQPEngine:
-    def __init__(self, dataset: RawDataset,
+    def __init__(self, dataset: Union[RawDataset, ChunkedDataset],
                  config: Optional[IndexConfig] = None,
                  alpha: float = 1.0):
         # config=None → fresh IndexConfig per engine (a dataclass default
         # instance would be shared — and mutated — across engines)
         self.dataset = dataset
-        self.index = TileIndex(dataset,
-                               IndexConfig() if config is None else config)
+        config = IndexConfig() if config is None else config
+        if isinstance(dataset, ChunkedDataset):
+            # chunk-local forest: per-chunk TileIndexes are built lazily
+            # on the first overlapping query (see ChunkIndexSet), so
+            # engine construction touches no data at all — query()
+            # / heatmap() signatures and results are unchanged, and the
+            # single-chunk case reproduces the legacy engine bit-for-bit
+            self.index = ChunkIndexSet(dataset, config)
+        else:
+            self.index = TileIndex(dataset, config)
         self.alpha = alpha
         self.trace = EngineTrace()
 

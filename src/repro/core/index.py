@@ -64,6 +64,13 @@ class IndexConfig:
     max_split_span: int = 4
     init_metadata_attrs: Sequence[str] = ()   # metadata computed at init pass
     backend: Optional[str] = None             # kernels backend override
+    # host port of the SPMD session's GroupedCache (distributed.py): an
+    # exact per-(tile, bin) registry keyed on (window, bins, attr). A
+    # repeated heatmap folds previously-read tiles from the registry
+    # with zero raw-file I/O; a viewport change invalidates it
+    # wholesale, a split invalidates the parent's entry by deactivating
+    # the tile. Never changes answers — only cost.
+    session_bin_memory: bool = True
 
     def max_split_cells(self) -> int:
         """Upper bound on children per split — sizes the packed split
@@ -154,6 +161,11 @@ class TileIndex:
         self.meta_valid: Dict[str, np.ndarray] = {}
         self.global_minmax: Dict[str, Tuple[float, float]] = {}
 
+        # session bin-grid memory (see IndexConfig.session_bin_memory):
+        # single-key registry {tile_id: (cnt_b, sum_b, min_b, max_b)}
+        self._hm_key = None
+        self._hm_reg: Dict[int, tuple] = {}
+
         # --- initialization pass (the "crude" index) ---
         gx, gy = config.grid0
         domain = dataset.domain()
@@ -213,6 +225,21 @@ class TileIndex:
             self.meta_min[attr][t] = float(seg.min())
             self.meta_max[attr][t] = float(seg.max())
             self.meta_valid[attr][t] = True
+
+    # ------------------------------------------------------------------ #
+    # part iteration / global-id resolution (chunked-forest seam)
+    # ------------------------------------------------------------------ #
+    def parts(self, window):
+        """Yield ``(gid_base, TileIndex)`` per live part overlapping the
+        window. A single TileIndex is its own (only) part with base 0 —
+        a ``ChunkIndexSet`` yields one entry per non-pruned chunk. The
+        query layer builds accumulators over parts, keying pending tiles
+        by ``gid = base + local_tile_id``."""
+        yield 0, self
+
+    def resolve(self, gid: int):
+        """Map a global tile id to ``(TileIndex, local_tile_id)``."""
+        return self, int(gid)
 
     # ------------------------------------------------------------------ #
     # query-side geometry + axis-only counting (no file access)
@@ -326,6 +353,29 @@ class TileIndex:
         else:
             self.adapt_stats.tiles_enriched += 1
 
+    def heatmap_cache(self, window, bins, attr: str):
+        """The session bin-grid registry for ``(window, bins, attr)``,
+        or ``None`` when disabled. Keyed on the exact viewport: any key
+        change drops the registry wholesale (the SPMD GroupedCache
+        rule). Entries map an ACTIVE tile id to its exact per-bin
+        in-window contribution ``(cnt_b, sum_b, min_b, max_b)``; a split
+        tile's entry goes stale harmlessly — deactivated tiles are never
+        classification candidates again."""
+        if not self.cfg.session_bin_memory:
+            return None
+        key = (tuple(float(v) for v in window), tuple(bins), attr)
+        if key != self._hm_key:
+            self._hm_key = key
+            self._hm_reg = {}
+        return self._hm_reg
+
+    def _hm_record(self, cache, tile_id: int, contrib) -> None:
+        """Register a processed tile's per-bin contribution — only while
+        it stayed active (enriched, not split); children of a split are
+        fresh tiles with no entry."""
+        if cache is not None and self.active[tile_id]:
+            cache[int(tile_id)] = contrib
+
     def process_heatmap(self, tile_id: int, window, attr: str, bins, *,
                         split: bool = True):
         """Sequential heatmap reference: one raw-file read + the tile's
@@ -356,8 +406,11 @@ class TileIndex:
             np.array([tile_id], np.int64), window, bins)
         self._enrich_and_split(tile_id, vals, attr, split,
                                edges=None if edges is None else edges[0])
-        return (agg[:, 0].astype(np.int64), agg[:, 1].copy(),
-                agg[:, 2].copy(), agg[:, 3].copy())
+        contrib = (agg[:, 0].astype(np.int64), agg[:, 1].copy(),
+                   agg[:, 2].copy(), agg[:, 3].copy())
+        self._hm_record(self.heatmap_cache(window, bins, attr),
+                        tile_id, contrib)
+        return contrib
 
     def _heatmap_split_edges(self, tile_ids: np.ndarray, window, bins):
         """Per-tile bin-aligned split edges for heatmap refinement, or
@@ -568,6 +621,11 @@ class TileIndex:
             (agg[s, :, 0].astype(np.int64), agg[s, :, 1].copy(),
              agg[s, :, 2].copy(), agg[s, :, 3].copy())
             for s in range(len(tile_ids))]
+        # session bin-grid memory: apply_batch registers the FOLDED
+        # prefix (speculatively-read tiles stay unregistered, exactly as
+        # under sequential processing)
+        payload["hm_cache"] = self.heatmap_cache(window, bins, attr)
+        payload["hm_contribs"] = contribs
         return contribs, payload
 
     def apply_batch(self, payload, n_used: int, split_flags):
@@ -652,6 +710,14 @@ class TileIndex:
             self._split_batch(tile_ids[run], idx[keep], xs[keep],
                               ys[keep], vals[keep], attr, edges=e)
             r = s
+
+        # heatmap rounds: register the folded, still-active tiles in the
+        # session bin-grid memory (mirrors process_heatmap)
+        cache = payload.get("hm_cache")
+        if cache is not None:
+            contribs = payload["hm_contribs"]
+            for i, t in enumerate(tile_ids):
+                self._hm_record(cache, t, contribs[i])
 
     def process_batch(self, tile_ids, window, attr: str, split_flags):
         """Read + fully apply one batch (convenience one-shot wrapper)."""
@@ -808,3 +874,167 @@ class TileIndex:
     @property
     def n_active(self) -> int:
         return int(self.active[:self.n_tiles].sum())
+
+
+def _chunk_overlaps(bbox, window) -> bool:
+    """Closed-interval bbox/window overlap — the same edge semantics as
+    :func:`geometry.classify_tiles` (a shared edge is NOT disjoint)."""
+    x0, y0, x1, y1 = bbox
+    qx0, qy0, qx1, qy1 = window
+    return not (x1 < qx0 or x0 > qx1 or y1 < qy0 or y0 > qy1)
+
+
+class ChunkIndexSet:
+    """A chunk-local tile forest over a :class:`ChunkedDataset`.
+
+    Each live chunk gets its own :class:`TileIndex`, materialized
+    LAZILY on the first query whose window overlaps the chunk's axis
+    bounding box (per-partition lazy index creation): until then the
+    chunk costs zero I/O — not even the axis initialization pass. A
+    chunk whose bbox is disjoint from the window is pruned wholesale
+    (``IOStats.pruned_calls``), again with zero read calls. Retiring a
+    chunk drops its forest.
+
+    Global tile ids are ``gid = chunk_id * capacity + local_tile_id``
+    (capacity bounds per-chunk tile count, and chunk ids are never
+    reused, so gids are unique for the session). Chunk 0's gids equal
+    its local ids — the single-chunk degenerate case therefore scores,
+    folds, and refines bit-for-bit like a plain ``TileIndex``.
+
+    The forest presents the same driver surface as ``TileIndex``
+    (``cfg``, ``adapt_stats``, ``ensure_attr``, ``resolve``,
+    ``read_batch``/``read_batch_heatmap``/``apply_batch``): a batched
+    round's tile ids are grouped into consecutive same-chunk runs, one
+    gathered read per run, and refolded under the driver's global
+    prefix rule — the RefinementDriver itself is chunk-agnostic.
+    """
+
+    def __init__(self, dataset, config: Optional[IndexConfig] = None):
+        config = IndexConfig() if config is None else config
+        self.ds = dataset
+        self.cfg = config
+        self.adapt_stats = AdaptStats()
+        self._stride = config.capacity
+        self._indexes: Dict[int, TileIndex] = {}
+
+    # -- forest lifecycle --------------------------------------------
+
+    def index_for(self, chunk) -> TileIndex:
+        """The chunk's TileIndex, built on first touch (accounted as
+        the chunk's own init pass + init-metadata reads)."""
+        ti = self._indexes.get(chunk.chunk_id)
+        if ti is None:
+            ti = TileIndex(chunk.data, self.cfg)
+            # one shared adaptation ledger across the forest
+            ti.adapt_stats = self.adapt_stats
+            self._indexes[chunk.chunk_id] = ti
+        return ti
+
+    def built_ids(self) -> Tuple[int, ...]:
+        """Chunk ids whose index has been materialized (tests/B8)."""
+        return tuple(self._indexes.keys())
+
+    def prepare(self, window, attr: str) -> None:
+        """Pre-query housekeeping: drop forests of retired chunks and
+        lazily build indexes for live chunks overlapping the window.
+        The engine calls this BEFORE its per-query I/O snapshot, so
+        build cost (init pass + init-metadata reads) is accounted on
+        the dataset exactly like legacy index construction — at index
+        build time, not inside a query's delta."""
+        live = set(self.ds.live_ids)
+        for cid in list(self._indexes):
+            if cid not in live:
+                del self._indexes[cid]
+        for chunk in self.ds.chunks():
+            if _chunk_overlaps(chunk.bbox, window):
+                self.index_for(chunk).ensure_attr(attr)
+
+    # -- driver / query surface --------------------------------------
+
+    def parts(self, window):
+        """Yield ``(gid_base, TileIndex)`` per live, non-pruned chunk in
+        ingest order; pruned chunks are accounted (``pruned_calls``)
+        and cost nothing else."""
+        for chunk in self.ds.chunks():
+            if _chunk_overlaps(chunk.bbox, window):
+                yield chunk.chunk_id * self._stride, self.index_for(chunk)
+            else:
+                chunk.stats.pruned_calls += 1
+
+    def resolve(self, gid: int):
+        """Map a global tile id to ``(TileIndex, local_tile_id)``."""
+        cid, local = divmod(int(gid), self._stride)
+        return self._indexes[cid], local
+
+    def ensure_attr(self, attr: str) -> None:
+        for ti in self._indexes.values():
+            ti.ensure_attr(attr)
+
+    def _chunk_runs(self, tile_ids: np.ndarray):
+        """Split a round's gid list into maximal consecutive same-chunk
+        runs (preserving the driver's score order)."""
+        if len(tile_ids) == 0:
+            return []
+        cids = tile_ids // self._stride
+        cut = np.flatnonzero(cids[1:] != cids[:-1]) + 1
+        starts = np.concatenate([[0], cut, [len(tile_ids)]])
+        return [(int(starts[i]), int(starts[i + 1]))
+                for i in range(len(starts) - 1)]
+
+    def _read_batch_runs(self, tile_ids, window, attr: str, bins=None):
+        """One gathered read per same-chunk run; composite payload with
+        GLOBAL segment bounds for the driver's speculative accounting.
+        A driver round is ONE round however many chunks it straddles —
+        each per-chunk read bumps the shared ``batch_rounds``, so the
+        overcount is corrected here. ``read_calls`` keeps counting per
+        actual gathered read."""
+        tile_ids = np.asarray(tile_ids, np.int64)
+        runs = []
+        contribs = []
+        g_bounds = [np.zeros(1, np.int64)]
+        base = 0
+        for s, e in self._chunk_runs(tile_ids):
+            ti, _ = self.resolve(tile_ids[s])
+            local = tile_ids[s:e] % self._stride
+            if bins is None:
+                c, p = ti.read_batch(local, window, attr)
+            else:
+                c, p = ti.read_batch_heatmap(local, window, attr, bins)
+            contribs.extend(c)
+            runs.append((ti, p, s, e))
+            g_bounds.append(base + p["bounds"][1:])
+            base += int(p["bounds"][-1])
+        self.adapt_stats.batch_rounds -= len(runs) - 1
+        payload = {"tile_ids": tile_ids,
+                   "bounds": np.concatenate(g_bounds),
+                   "runs": runs, "attr": attr}
+        return contribs, payload
+
+    def read_batch(self, tile_ids, window, attr: str):
+        return self._read_batch_runs(tile_ids, window, attr)
+
+    def read_batch_heatmap(self, tile_ids, window, attr: str, bins):
+        return self._read_batch_runs(tile_ids, window, attr, bins)
+
+    def apply_batch(self, payload, n_used: int, split_flags) -> None:
+        """Route the driver's global folded prefix to each run's own
+        ``TileIndex.apply_batch``: a run entirely past the fold point
+        gets ``n_used=0`` (its speculative reads leave the chunk's index
+        untouched, as under a single TileIndex)."""
+        for ti, p, s, e in payload["runs"]:
+            used = min(max(n_used - s, 0), e - s)
+            ti.apply_batch(p, used, list(split_flags[s:s + used]))
+
+    # -- invariants / aggregates -------------------------------------
+
+    def check_invariants(self, attr: Optional[str] = None) -> None:
+        for ti in self._indexes.values():
+            ti.check_invariants(attr)
+
+    @property
+    def n_tiles(self) -> int:
+        return sum(ti.n_tiles for ti in self._indexes.values())
+
+    @property
+    def n_active(self) -> int:
+        return sum(ti.n_active for ti in self._indexes.values())

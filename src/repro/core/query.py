@@ -53,62 +53,82 @@ import numpy as np
 from .bounds import (AccuracyPolicy, GroupedAccumulator, GroupedPendingTile,
                      HeatmapResult, PendingTile, QueryAccumulator,
                      QueryResult)
-from .index import TileIndex
 from .refine import HeatmapQueryAdapter, RefinementDriver, ScalarQueryAdapter
 from ..kernels.ops import window_mask_np
 from ..kernels.ref import window_bin_ids_np
 
 
-def _build_accumulator(index: TileIndex, window, agg: str, attr: str):
-    """Steps 1–3: classification + pending-set construction (no file I/O)."""
-    full_ids, partial_ids = index.classify(window)
+def _build_accumulator(index, window, agg: str, attr: str):
+    """Steps 1–3: classification + pending-set construction (no file I/O).
+
+    ``index`` is a ``TileIndex`` or a ``ChunkIndexSet``: the builder
+    iterates ``index.parts(window)`` — one ``(gid_base, TileIndex)``
+    per live, non-pruned part — and keys pending tiles by global id
+    ``gid = base + local_tile_id``. A plain ``TileIndex`` is its own
+    single part with base 0, so the legacy path is the one-part
+    degenerate case of this loop, bit for bit. Chunks pruned on their
+    axis bounding box never appear as parts (zero I/O, accounted in
+    ``IOStats.pruned_calls``); chunks not yet indexed are materialized
+    by ``prepare`` before the per-query snapshot.
+    """
     acc = QueryAccumulator(agg)
+    full_set = set()
+    n_full = n_partial = 0
+    for base, ti in index.parts(window):
+        ti.ensure_attr(attr)
+        full_ids, partial_ids = ti.classify(window)
+        for t in full_ids:
+            c = int(ti.count[t])
+            if c == 0:
+                continue
+            n_full += 1
+            gid = base + int(t)
+            full_set.add(gid)
+            if ti.meta_valid[attr][t]:
+                acc.fold_full(c, ti.meta_sum[attr][t],
+                              ti.meta_min[attr][t], ti.meta_max[attr][t])
+            else:
+                # enrichment pending: bounded by sound (inherited) min/max
+                acc.add_pending(PendingTile(
+                    tile_id=gid, cnt_q=c,
+                    vmin=float(ti.meta_min[attr][t]),
+                    vmax=float(ti.meta_max[attr][t]), cost=c))
 
-    n_full = 0
-    for t in full_ids:
-        c = int(index.count[t])
-        if c == 0:
-            continue
-        n_full += 1
-        if index.meta_valid[attr][t]:
-            acc.fold_full(c, index.meta_sum[attr][t],
-                          index.meta_min[attr][t], index.meta_max[attr][t])
-        else:
-            # enrichment pending: bounded by sound (inherited) min/max
+        # one vectorized axis-index pass per part for count(t∩Q)
+        cnt_qs = ti.count_in_window_batch(partial_ids, window)
+        for t, cnt_q in zip(partial_ids, cnt_qs):
+            if cnt_q == 0:
+                continue
+            n_partial += 1
             acc.add_pending(PendingTile(
-                tile_id=int(t), cnt_q=c,
-                vmin=float(index.meta_min[attr][t]),
-                vmax=float(index.meta_max[attr][t]), cost=c))
-
-    # one vectorized axis-index pass for every partial tile's count(t∩Q)
-    cnt_qs = index.count_in_window_batch(partial_ids, window)
-    n_partial = 0
-    for t, cnt_q in zip(partial_ids, cnt_qs):
-        if cnt_q == 0:
-            continue
-        n_partial += 1
-        acc.add_pending(PendingTile(
-            tile_id=int(t), cnt_q=int(cnt_q),
-            vmin=float(index.meta_min[attr][t]),
-            vmax=float(index.meta_max[attr][t]),
-            cost=int(index.count[t])))
-    return acc, full_ids, n_full, n_partial
+                tile_id=base + int(t), cnt_q=int(cnt_q),
+                vmin=float(ti.meta_min[attr][t]),
+                vmax=float(ti.meta_max[attr][t]),
+                cost=int(ti.count[t])))
+    return acc, full_set, n_full, n_partial
 
 
-def evaluate(index: TileIndex, window, agg: str, attr: str,
+def evaluate(index, window, agg: str, attr: str,
              phi: float = 0.0, alpha: float = 1.0, *,
              batch_k: Optional[int] = None,
              sequential: bool = False) -> QueryResult:
+    # chunked forests materialize overlapped chunks' indexes BEFORE the
+    # per-query snapshot: lazy build cost is index-construction I/O
+    # (init_rows + init-metadata reads on the chunk's own stats), same
+    # accounting moment as legacy engine construction
+    prepare = getattr(index, "prepare", None)
+    if prepare is not None:
+        prepare(window, attr)
     t_start = time.perf_counter()
     io_before = index.ds.stats.snapshot()
     adapt_before = index.adapt_stats.snapshot()
     index.ensure_attr(attr)
 
-    acc, full_ids, n_full, n_partial = _build_accumulator(
+    acc, full_set, n_full, n_partial = _build_accumulator(
         index, window, agg, attr)
 
     driver = RefinementDriver(
-        acc, ScalarQueryAdapter(index, window, attr, full_ids), phi, alpha)
+        acc, ScalarQueryAdapter(index, window, attr, full_set), phi, alpha)
     processed = driver.run(batch_k=batch_k, sequential=sequential)
 
     value, lo, hi, bound = acc.interval()
@@ -122,59 +142,76 @@ def evaluate(index: TileIndex, window, agg: str, attr: str,
         read_calls=io_delta.read_calls,
         batch_rounds=adapt_delta.batch_rounds,
         speculative_rows=adapt_delta.speculative_rows,
+        pruned_chunks=io_delta.pruned_calls,
         eval_time_s=time.perf_counter() - t_start)
 
 
-def _build_grouped_accumulator(index: TileIndex, window, agg: str,
+def _build_grouped_accumulator(index, window, agg: str,
                                attr: str, bins):
     """Heatmap steps 1–3: classification + per-bin pending construction.
 
-    ONE gathered axis pass gives every non-disjoint tile's per-bin
-    in-window counts (no file I/O). A fully-contained tile whose valid
-    metadata covers exactly the objects of one bin (all its in-window
-    count concentrated there) folds exactly into that bin; every other
-    overlapping tile becomes pending with per-bin interval
-    ``cnt_b · [vmin, vmax]``.
+    ONE gathered axis pass per part gives every non-disjoint tile's
+    per-bin in-window counts (no file I/O). A fully-contained tile whose
+    valid metadata covers exactly the objects of one bin (all its
+    in-window count concentrated there) folds exactly into that bin; a
+    tile registered in the part's session bin-grid memory (the host
+    port of the SPMD GroupedCache — same window/bins/attr, processed by
+    an earlier query, never split since) folds its exact per-bin
+    contribution with zero file I/O; every other overlapping tile
+    becomes pending with per-bin interval ``cnt_b · [vmin, vmax]``.
+    Iterates ``index.parts(window)`` like :func:`_build_accumulator` —
+    pending tiles are keyed by global id.
     """
     bx, by = bins
-    full_ids, partial_ids = index.classify(window)
-    full_set = set(int(i) for i in full_ids)
     acc = GroupedAccumulator(agg, bx * by)
-
-    cand = np.concatenate([full_ids, partial_ids]).astype(np.int64)
-    cnt_bs = index.bin_counts_in_window_batch(cand, window, bins)
     n_full = n_partial = 0
-    for row, t in enumerate(cand):
-        c_b = cnt_bs[row]
-        tot = int(c_b.sum())
-        if tot == 0:
-            continue
-        t = int(t)
-        is_full = t in full_set
-        if is_full:
-            n_full += 1
-        else:
-            n_partial += 1
-        nz = np.flatnonzero(c_b)
-        # metadata-exact path: full tile, valid sum, every owned object
-        # selected AND landing in the same bin — the tile's (count, sum,
-        # min, max) are that bin's exact contribution, zero file I/O
-        if (is_full and index.meta_valid[attr][t] and len(nz) == 1
-                and tot == int(index.count[t])):
-            b = int(nz[0])
-            acc.fold_full_bin(b, tot, index.meta_sum[attr][t],
-                              index.meta_min[attr][t],
-                              index.meta_max[attr][t])
-        else:
-            acc.add_pending(GroupedPendingTile(
-                tile_id=t, cnt_b=c_b.copy(),
-                vmin=float(index.meta_min[attr][t]),
-                vmax=float(index.meta_max[attr][t]),
-                cost=int(index.count[t])))
-    return acc, full_set, n_full, n_partial
+    for base, ti in index.parts(window):
+        ti.ensure_attr(attr)
+        full_ids, partial_ids = ti.classify(window)
+        full_set = set(int(i) for i in full_ids)
+        cand = np.concatenate([full_ids, partial_ids]).astype(np.int64)
+        cnt_bs = ti.bin_counts_in_window_batch(cand, window, bins)
+        cache = ti.heatmap_cache(window, bins, attr)
+        for row, t in enumerate(cand):
+            c_b = cnt_bs[row]
+            tot = int(c_b.sum())
+            if tot == 0:
+                continue
+            t = int(t)
+            is_full = t in full_set
+            if is_full:
+                n_full += 1
+            else:
+                n_partial += 1
+            if cache is not None and t in cache:
+                # session bin-grid memory hit: the tile's exact per-bin
+                # in-window contribution, zero file I/O
+                rec = cache[t]
+                assert np.array_equal(rec[0], c_b), \
+                    "stale bin-grid registry entry"
+                acc.fold_full_vec(*rec)
+                continue
+            nz = np.flatnonzero(c_b)
+            # metadata-exact path: full tile, valid sum, every owned
+            # object selected AND landing in the same bin — the tile's
+            # (count, sum, min, max) are that bin's exact contribution,
+            # zero file I/O
+            if (is_full and ti.meta_valid[attr][t] and len(nz) == 1
+                    and tot == int(ti.count[t])):
+                b = int(nz[0])
+                acc.fold_full_bin(b, tot, ti.meta_sum[attr][t],
+                                  ti.meta_min[attr][t],
+                                  ti.meta_max[attr][t])
+            else:
+                acc.add_pending(GroupedPendingTile(
+                    tile_id=base + t, cnt_b=c_b.copy(),
+                    vmin=float(ti.meta_min[attr][t]),
+                    vmax=float(ti.meta_max[attr][t]),
+                    cost=int(ti.count[t])))
+    return acc, n_full, n_partial
 
 
-def evaluate_heatmap(index: TileIndex, window, agg: str, attr: str,
+def evaluate_heatmap(index, window, agg: str, attr: str,
                      bins: Tuple[int, int] = (8, 8), phi: float = 0.0,
                      alpha: float = 1.0, *,
                      policy: Optional[AccuracyPolicy] = None,
@@ -205,6 +242,9 @@ def evaluate_heatmap(index: TileIndex, window, agg: str, attr: str,
     trivial policy (or φ = 0, the exact method) leaves behavior
     bit-for-bit unchanged.
     """
+    prepare = getattr(index, "prepare", None)
+    if prepare is not None:
+        prepare(window, attr)
     t_start = time.perf_counter()
     io_before = index.ds.stats.snapshot()
     adapt_before = index.adapt_stats.snapshot()
@@ -214,9 +254,9 @@ def evaluate_heatmap(index: TileIndex, window, agg: str, attr: str,
         "heatmap windows must be finite rectangles"
     index.ensure_attr(attr)
 
-    # (the grouped builder's full-tile set is not needed here: heatmap
-    # refinement splits every processed tile — see HeatmapQueryAdapter)
-    acc, _, n_full, n_partial = _build_grouped_accumulator(
+    # (no full-tile set here: heatmap refinement splits every processed
+    # tile — see HeatmapQueryAdapter)
+    acc, n_full, n_partial = _build_grouped_accumulator(
         index, window, agg, attr, (bx, by))
     if policy is not None and phi > 0.0:
         acc.set_policy(policy, phi, (bx, by))
@@ -239,13 +279,14 @@ def evaluate_heatmap(index: TileIndex, window, agg: str, attr: str,
         read_calls=io_delta.read_calls,
         batch_rounds=adapt_delta.batch_rounds,
         speculative_rows=adapt_delta.speculative_rows,
+        pruned_chunks=io_delta.pruned_calls,
         eval_time_s=time.perf_counter() - t_start,
         phi_b=acc.phi_b.copy() if policy_active else None,
         eps_abs=acc.eps_abs,
         bin_met=acc.bin_satisfied(phi) if policy_active else None)
 
 
-def evaluate_heatmap_oracle(index: TileIndex, window, agg: str, attr: str,
+def evaluate_heatmap_oracle(index, window, agg: str, attr: str,
                             bins: Tuple[int, int]) -> np.ndarray:
     """Per-bin ground truth straight off the raw arrays (tests only).
 
@@ -275,7 +316,7 @@ def evaluate_heatmap_oracle(index: TileIndex, window, agg: str, attr: str,
     return out
 
 
-def evaluate_oracle(index: TileIndex, window, agg: str,
+def evaluate_oracle(index, window, agg: str,
                     attr: str) -> float:
     """Ground truth straight off the raw arrays (unaccounted; tests only)."""
     ds = index.ds

@@ -54,7 +54,6 @@ from typing import Callable, List, Optional, Sequence, Tuple
 
 from . import adapt
 from ..kernels.segment_agg import MAX_SEGMENTS, MAX_UNROLL
-from .index import TileIndex
 
 
 def met(phi: float, bound: float) -> bool:
@@ -75,7 +74,7 @@ class ScalarQueryAdapter:
     them brings no future pruning benefit.
     """
 
-    def __init__(self, index: TileIndex, window, attr: str,
+    def __init__(self, index, window, attr: str,
                  full_ids: Sequence[int]):
         self.index = index
         self.window = window
@@ -86,8 +85,11 @@ class ScalarQueryAdapter:
         return adapt.score_tiles(acc.pending, acc.agg, alpha)
 
     def process_one(self, tile_id: int):
-        return self.index.process(tile_id, self.window, self.attr,
-                                  split=tile_id not in self.full_set)
+        # tile ids are GLOBAL: a chunked forest routes them to the
+        # owning chunk's TileIndex (a plain TileIndex resolves to itself)
+        ti, t = self.index.resolve(tile_id)
+        return ti.process(t, self.window, self.attr,
+                          split=tile_id not in self.full_set)
 
     def read_batch(self, tile_ids):
         return self.index.read_batch(tile_ids, self.window, self.attr)
@@ -115,7 +117,7 @@ class HeatmapQueryAdapter:
     ``read_batch_heatmap``).
     """
 
-    def __init__(self, index: TileIndex, window, attr: str,
+    def __init__(self, index, window, attr: str,
                  bins: Tuple[int, int]):
         self.index = index
         self.window = window
@@ -130,8 +132,9 @@ class HeatmapQueryAdapter:
                                          bin_weight=acc.score_bin_weight())
 
     def process_one(self, tile_id: int):
-        return self.index.process_heatmap(tile_id, self.window, self.attr,
-                                          self.bins, split=True)
+        ti, t = self.index.resolve(tile_id)
+        return ti.process_heatmap(t, self.window, self.attr,
+                                  self.bins, split=True)
 
     def read_batch(self, tile_ids):
         return self.index.read_batch_heatmap(tile_ids, self.window,
@@ -150,8 +153,12 @@ class RefinementDriver:
 
     def __init__(self, acc, adapter, phi: float, alpha: float = 1.0):
         # the index is the adapter's: reads, splits, and accounting must
-        # hit the same object, so the driver never takes a separate one
-        self.index: TileIndex = adapter.index
+        # hit the same object, so the driver never takes a separate one.
+        # It may be a TileIndex or a ChunkIndexSet — both present cfg,
+        # adapt_stats, read/apply_batch; the driver is chunk-agnostic
+        # (a chunked round's gathered read fans out to one read per
+        # same-chunk run under the hood, still ONE driver round).
+        self.index = adapter.index
         self.acc = acc
         self.adapter = adapter
         self.phi = float(phi)

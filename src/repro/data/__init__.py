@@ -1,4 +1,6 @@
 from .rawfile import RawDataset, IOStats
-from .synthetic import make_synthetic_dataset
+from .chunked import Chunk, ChunkedDataset
+from .synthetic import make_synthetic_dataset, make_streaming_chunks
 
-__all__ = ["RawDataset", "IOStats", "make_synthetic_dataset"]
+__all__ = ["RawDataset", "IOStats", "Chunk", "ChunkedDataset",
+           "make_synthetic_dataset", "make_streaming_chunks"]

@@ -1,0 +1,192 @@
+"""Range-partitioned, streaming raw data: an ordered set of chunks.
+
+The paper targets minimizing data-to-analysis time on very large files;
+a single static :class:`~repro.data.rawfile.RawDataset` forces the axis
+initialization pass to touch every row up front and keeps the whole file
+resident. `ChunkedDataset` breaks the file into ordered chunks — each an
+independent `RawDataset` in array/csv/mmap mode with its own
+:class:`~repro.data.rawfile.IOStats` — so that:
+
+- the index layer (`ChunkIndexSet`) can build a chunk-local tile forest
+  lazily, on the first query whose window overlaps the chunk's axis
+  bounding box (per-partition lazy index creation, after "Towards
+  Zero-Overhead Adaptive Indexing in Hadoop");
+- chunks whose bounding box is disjoint from the query window are pruned
+  with ZERO read calls (accounted in ``IOStats.pruned_calls``);
+- ``ingest`` appends new data mid-session and ``retire`` drops the
+  oldest chunks for rolling retention, bounding memory by the working
+  set (per-chunk mmap) instead of file size.
+
+Chunk ids are assigned monotonically and never reused, so a retired
+chunk's id stays dead — the index layer uses ``chunk_id`` as the high
+bits of its global tile ids.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .rawfile import IOStats, RawDataset
+
+
+@dataclasses.dataclass
+class Chunk:
+    """One live partition: an independent RawDataset + its axis bbox."""
+    chunk_id: int
+    data: RawDataset
+    bbox: Tuple[float, float, float, float]  # (x0, y0, x1, y1)
+
+    @property
+    def n(self) -> int:
+        return self.data.n
+
+    @property
+    def stats(self) -> IOStats:
+        return self.data.stats
+
+
+class ChunkedDataset:
+    """An append-only ordered sequence of chunks with rolling retention.
+
+    Presents the same read surface as ``RawDataset`` (``n``, ``x``,
+    ``y``, ``attributes``, ``domain()``, ``read_all_unaccounted``,
+    ``stats``) aggregated over the *live* chunks, so oracle code and the
+    distributed engine (which materializes the dataset once at
+    construction) work unchanged. Accounted reads never go through the
+    aggregate surface — the index layer reads each chunk's own
+    ``RawDataset`` directly.
+    """
+
+    def __init__(self, storage: str = "array",
+                 mmap_dir: Optional[str] = None):
+        if storage not in ("array", "csv", "mmap"):
+            raise ValueError(f"unknown storage mode {storage!r}")
+        if storage == "mmap" and mmap_dir is None:
+            raise ValueError("storage='mmap' requires mmap_dir")
+        self.storage = storage
+        self._mmap_dir = mmap_dir
+        self._chunks: Dict[int, Chunk] = {}   # live, insertion-ordered
+        self._next_id = 0
+        # retired chunks' final counters, so aggregate stats (and any
+        # outstanding snapshot/delta pairs) stay monotone across retire
+        self._retired_stats = IOStats()
+
+    # -- lifecycle ---------------------------------------------------
+
+    def ingest(self, x: np.ndarray, y: np.ndarray,
+               columns: Dict[str, np.ndarray],
+               *, storage: Optional[str] = None) -> int:
+        """Append a new chunk; returns its chunk id."""
+        if len(x) == 0:
+            raise ValueError("cannot ingest an empty chunk")
+        storage = self.storage if storage is None else storage
+        mmap_dir = None
+        if storage == "mmap":
+            import os
+            mmap_dir = os.path.join(self._mmap_dir,
+                                    f"chunk_{self._next_id:05d}")
+        ds = RawDataset(x, y, columns, mmap_dir=mmap_dir, storage=storage)
+        return self.ingest_dataset(ds)
+
+    def ingest_dataset(self, ds: RawDataset) -> int:
+        """Append a pre-built RawDataset as a chunk; returns its id."""
+        if ds.n == 0:
+            raise ValueError("cannot ingest an empty chunk")
+        cid = self._next_id
+        self._next_id += 1
+        self._chunks[cid] = Chunk(cid, ds, ds.domain())
+        return cid
+
+    def retire(self, chunk_id: int) -> None:
+        """Drop a chunk (rolling retention). Its final I/O counters are
+        folded into the aggregate so deltas never go negative; any
+        later read of the chunk raises."""
+        chunk = self._chunks.pop(chunk_id)   # KeyError if not live
+        self._retired_stats = self._retired_stats.merge(chunk.stats)
+        chunk.data.close()
+
+    # -- live-chunk access -------------------------------------------
+
+    def chunks(self) -> List[Chunk]:
+        """Live chunks in ingest order."""
+        return list(self._chunks.values())
+
+    def chunk(self, chunk_id: int) -> Chunk:
+        return self._chunks[chunk_id]
+
+    def is_live(self, chunk_id: int) -> bool:
+        return chunk_id in self._chunks
+
+    @property
+    def live_ids(self) -> Sequence[int]:
+        return tuple(self._chunks.keys())
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self._chunks)
+
+    # -- RawDataset-compatible aggregate surface ---------------------
+
+    @property
+    def n(self) -> int:
+        return sum(c.n for c in self._chunks.values())
+
+    @property
+    def x(self) -> np.ndarray:
+        return self._concat_axis("x")
+
+    @property
+    def y(self) -> np.ndarray:
+        return self._concat_axis("y")
+
+    def _concat_axis(self, name: str) -> np.ndarray:
+        parts = [getattr(c.data, name) for c in self._chunks.values()]
+        if not parts:
+            return np.empty(0, np.float32)
+        return np.concatenate(parts)
+
+    @property
+    def attributes(self) -> Sequence[str]:
+        for c in self._chunks.values():
+            return c.data.attributes
+        return ()
+
+    def domain(self):
+        """(x0, y0, x1, y1) over the live chunks' bounding boxes."""
+        boxes = [c.bbox for c in self._chunks.values()]
+        if not boxes:
+            return (0.0, 0.0, 0.0, 0.0)
+        return (min(b[0] for b in boxes), min(b[1] for b in boxes),
+                max(b[2] for b in boxes), max(b[3] for b in boxes))
+
+    def read_all_unaccounted(self, attr: str) -> np.ndarray:
+        """Oracle access over live chunks — ground truth only."""
+        parts = [c.data.read_all_unaccounted(attr)
+                 for c in self._chunks.values()]
+        if not parts:
+            return np.empty(0, np.float32)
+        return np.concatenate(parts)
+
+    @property
+    def stats(self) -> IOStats:
+        """Aggregate I/O counters: live chunks + retired history.
+
+        Returns a fresh value each access; use ``.snapshot()`` /
+        ``.delta()`` on it exactly as with ``RawDataset.stats``.
+        """
+        out = self._retired_stats
+        for c in self._chunks.values():
+            out = out.merge(c.stats)
+        return out
+
+    # -- convenience -------------------------------------------------
+
+    @classmethod
+    def from_dataset(cls, ds: RawDataset) -> "ChunkedDataset":
+        """Wrap an existing RawDataset as a single-chunk dataset (the
+        degenerate case: reproduces the legacy engine bit-for-bit)."""
+        out = cls(storage=ds.storage if ds.storage != "mmap" else "array")
+        out.ingest_dataset(ds)
+        return out

@@ -36,17 +36,26 @@ class IOStats:
     bytes_read: int = 0
     read_calls: int = 0
     init_rows: int = 0
+    # chunk skipped wholesale on its axis bounding-box test (chunked
+    # storage): the query touched ZERO of the chunk's rows — the pruning
+    # win the streaming benchmark (B8) reports
+    pruned_calls: int = 0
 
     def snapshot(self) -> "IOStats":
         return dataclasses.replace(self)
 
     def delta(self, before: "IOStats") -> "IOStats":
-        return IOStats(
-            rows_read=self.rows_read - before.rows_read,
-            bytes_read=self.bytes_read - before.bytes_read,
-            read_calls=self.read_calls - before.read_calls,
-            init_rows=self.init_rows - before.init_rows,
-        )
+        # field-complete by construction: a counter added to the
+        # dataclass can't silently drift out of snapshot/delta
+        return IOStats(**{
+            f.name: getattr(self, f.name) - getattr(before, f.name)
+            for f in dataclasses.fields(self)})
+
+    def merge(self, other: "IOStats") -> "IOStats":
+        """Field-wise sum (chunked datasets aggregate per-chunk stats)."""
+        return IOStats(**{
+            f.name: getattr(self, f.name) + getattr(other, f.name)
+            for f in dataclasses.fields(self)})
 
 
 class RawDataset:
@@ -68,7 +77,15 @@ class RawDataset:
         assert all(len(v) == self.n for v in columns.values())
         self.x = np.asarray(x, np.float32)
         self.y = np.asarray(y, np.float32)
+        # axis bbox computed once — domain() sits on the per-query
+        # classify path and chunk pruning calls it per chunk
+        if self.n:
+            self._domain = (float(self.x.min()), float(self.y.min()),
+                            float(self.x.max()), float(self.y.max()))
+        else:
+            self._domain = (0.0, 0.0, 0.0, 0.0)
         self.stats = IOStats()
+        self._closed = False
         self._mmap_dir = mmap_dir
         self.storage = "mmap" if mmap_dir is not None else storage
         self._cols = {}
@@ -99,11 +116,22 @@ class RawDataset:
 
     def domain(self):
         """(x0, y0, x1, y1) bounding box of the axis attributes."""
-        return (float(self.x.min()), float(self.y.min()),
-                float(self.x.max()), float(self.y.max()))
+        return self._domain
+
+    def close(self) -> None:
+        """Release column storage (chunk retirement). Accounted reads
+        after close raise — a retired chunk must never be read."""
+        self._closed = True
+        self._cols = {}
+        self._text = {}
+        if self.storage == "mmap" and self._mmap_dir is not None:
+            import shutil
+            shutil.rmtree(self._mmap_dir, ignore_errors=True)
 
     def account_init_pass(self):
         """The index-initialization scan over the file (axis attrs)."""
+        if self._closed:
+            raise RuntimeError("init pass on a retired chunk")
         self.stats.init_rows += self.n
 
     def read_values(self, attr: str, rows: np.ndarray) -> np.ndarray:
@@ -112,6 +140,8 @@ class RawDataset:
         In ``csv`` mode this PARSES the rows' text records (the real
         in-situ cost); in array/mmap modes it's a gather.
         """
+        if self._closed:
+            raise RuntimeError("read_values on a retired chunk")
         self.stats.rows_read += int(len(rows))
         self.stats.read_calls += 1
         if self.storage == "csv":

@@ -172,7 +172,7 @@ def test_min_folds_needed_certain_under_nonuniform_phi_b(agg, mix):
                             target_objects=6000)
     checked = 0
     for w in wins:
-        acc, _, _, _ = _build_grouped_accumulator(
+        acc, _, _ = _build_grouped_accumulator(
             e_probe.index, w, agg, "a0", bins)
         acc.set_policy(policy, phi, bins)
         bound0 = acc.query_bound()

@@ -1,0 +1,301 @@
+"""Chunked storage layer: pruning, lazy per-chunk index build, chunk
+lifecycle (ingest/retire), per-chunk mmap, and the single-chunk ≡ legacy
+degenerate equivalence the refactor promises.
+
+The load-bearing guarantees:
+
+- a chunk whose axis bounding box is disjoint from the query window is
+  pruned with ZERO read calls (not even its index is built) —
+  ``IOStats.pruned_calls`` / ``QueryResult.pruned_chunks`` account it;
+- a chunk's TileIndex is materialized lazily on the FIRST query that
+  overlaps its bbox, and its init-pass I/O lands on that chunk's own
+  stats at build time (outside any per-query delta), exactly like legacy
+  engine-construction accounting;
+- a single-chunk ``ChunkedDataset`` reproduces the legacy engine's
+  reads, answers, and index evolution bit-for-bit;
+- retired chunks are never read again (reads raise), and aggregate
+  I/O counters stay monotone across retirement.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import AQPEngine, IndexConfig
+from repro.data import ChunkedDataset, make_synthetic_dataset
+from repro.data.rawfile import IOStats
+from repro.data.synthetic import exploration_path, make_streaming_chunks
+
+# slab width is domain/n_chunks = 250 for the default 4-chunk fixtures
+DOMAIN = 1000.0
+
+
+def streaming_dataset(n_chunks=4, rows=12_000, storage="array", seed=3,
+                      ingest=None, mmap_dir=None):
+    chunks = make_streaming_chunks(n_chunks=n_chunks, rows_per_chunk=rows,
+                                   n_columns=3, domain=DOMAIN, seed=seed)
+    cds = ChunkedDataset(storage=storage, mmap_dir=mmap_dir)
+    for x, y, cols in chunks[:ingest]:
+        cds.ingest(x, y, cols)
+    return cds, chunks
+
+
+def cfg(**kw):
+    kw.setdefault("grid0", (6, 6))
+    kw.setdefault("min_split_count", 64)
+    kw.setdefault("init_metadata_attrs", ("a0",))
+    return IndexConfig(**kw)
+
+
+# --------------------------------------------------------------------- #
+# pruning + lazy build
+# --------------------------------------------------------------------- #
+def test_pruned_chunks_cost_zero_io():
+    cds, _ = streaming_dataset(ingest=3)
+    eng = AQPEngine(cds, cfg())
+    # window strictly inside chunk 0's x-slab [0, 250)
+    w = (20.0, 100.0, 230.0, 700.0)
+    r = eng.query(w, "mean", "a0", phi=0.0)
+    truth = eng.oracle(w, "mean", "a0")
+    np.testing.assert_allclose(r.value, truth, rtol=1e-5, atol=1e-3)
+    assert r.pruned_chunks == 2
+    # pruned chunks: no index, no init pass, no reads — only the prune
+    assert eng.index.built_ids() == (0,)
+    for cid in (1, 2):
+        s = cds.chunk(cid).stats
+        assert s.rows_read == 0 and s.read_calls == 0 and s.init_rows == 0
+        assert s.pruned_calls == 1
+    # the touched chunk paid its init pass exactly once
+    assert cds.chunk(0).stats.init_rows == cds.chunk(0).n
+
+
+def test_lazy_build_on_first_overlap_only():
+    cds, _ = streaming_dataset(ingest=3)
+    eng = AQPEngine(cds, cfg())
+    assert eng.index.built_ids() == ()          # construction touches nothing
+    assert cds.stats.init_rows == 0
+    eng.query((20.0, 0.0, 230.0, DOMAIN), "sum", "a0", phi=0.05)
+    assert eng.index.built_ids() == (0,)
+    # a window straddling chunks 1+2 builds exactly those, keeps chunk 0
+    eng.query((300.0, 0.0, 700.0, DOMAIN), "sum", "a0", phi=0.05)
+    assert set(eng.index.built_ids()) == {0, 1, 2}
+    for c in cds.chunks():
+        assert c.stats.init_rows == c.n
+
+
+def test_heatmap_over_chunks_matches_oracle():
+    cds, _ = streaming_dataset(ingest=4)
+    eng = AQPEngine(cds, cfg())
+    w = (100.0, 50.0, 900.0, 950.0)   # straddles all four chunks
+    r = eng.heatmap(w, "sum", "a0", bins=(4, 4), phi=0.0)
+    truth = eng.heatmap_oracle(w, "sum", "a0", bins=(4, 4))
+    assert r.exact
+    fin = np.isfinite(truth)
+    np.testing.assert_allclose(r.values[fin], truth[fin], rtol=1e-5,
+                               atol=1e-3)
+    # approximate repeat benefits from the per-chunk refinement + the
+    # session bin-grid memory
+    r2 = eng.heatmap(w, "sum", "a0", bins=(4, 4), phi=0.0)
+    assert r2.objects_read < r.objects_read
+    eng.index.check_invariants("a0")
+
+
+# --------------------------------------------------------------------- #
+# single-chunk degenerate ≡ legacy, bit for bit
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("storage", ["array", "csv"])
+def test_single_chunk_reproduces_legacy_engine_bit_for_bit(storage):
+    ds_l = make_synthetic_dataset(n=40_000, seed=5, storage=storage)
+    ds_c = make_synthetic_dataset(n=40_000, seed=5, storage=storage)
+    legacy = AQPEngine(ds_l, cfg(grid0=(8, 8)))
+    chunked = AQPEngine(ChunkedDataset.from_dataset(ds_c), cfg(grid0=(8, 8)))
+    wins = exploration_path(ds_l, n_queries=4, target_objects=6000)
+    s_fields = ["value", "lo", "hi", "bound", "exact", "tiles_full",
+                "tiles_partial", "tiles_processed", "objects_read",
+                "read_calls", "batch_rounds", "speculative_rows",
+                "pruned_chunks"]
+    for w in wins:
+        for agg, phi in (("mean", 0.05), ("sum", 0.0), ("min", 0.1),
+                         ("count", 0.0)):
+            a = legacy.query(w, agg, "a0", phi=phi)
+            b = chunked.query(w, agg, "a0", phi=phi)
+            for f in s_fields:
+                assert getattr(a, f) == getattr(b, f), (agg, f)
+        ha = legacy.heatmap(w, "mean", "a0", bins=(3, 3), phi=0.05)
+        hb = chunked.heatmap(w, "mean", "a0", bins=(3, 3), phi=0.05)
+        assert np.array_equal(ha.values, hb.values)
+        assert np.array_equal(ha.lo, hb.lo)
+        assert np.array_equal(ha.hi, hb.hi)
+        for f in ("bound", "exact", "objects_read", "read_calls",
+                  "batch_rounds", "speculative_rows"):
+            assert getattr(ha, f) == getattr(hb, f), f
+    # identical index evolution: the chunk's TileIndex IS the legacy one
+    ti_l, ti_c = legacy.index, chunked.index._indexes[0]
+    n = ti_l.n_tiles
+    assert ti_c.n_tiles == n
+    assert np.array_equal(ti_l.perm, ti_c.perm)
+    assert np.array_equal(ti_l.offset[:n], ti_c.offset[:n])
+    assert np.array_equal(ti_l.count[:n], ti_c.count[:n])
+    assert np.array_equal(ti_l.active[:n], ti_c.active[:n])
+    assert np.array_equal(ti_l.meta_sum["a0"][:n], ti_c.meta_sum["a0"][:n])
+    # identical dataset-level I/O accounting, field for field
+    for f in dataclasses.fields(IOStats):
+        assert getattr(ds_l.stats, f.name) == getattr(ds_c.stats, f.name)
+
+
+def test_chunked_batched_matches_sequential():
+    """The chunk-run batching (one gathered read per same-chunk run,
+    global prefix folding) must not change semantics: sequential vs
+    batched chunked engines agree on answers and index evolution."""
+    cds_s, _ = streaming_dataset(ingest=4, seed=11)
+    cds_b, _ = streaming_dataset(ingest=4, seed=11)
+    e_seq = AQPEngine(cds_s, cfg())
+    e_bat = AQPEngine(cds_b, cfg())
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        x0 = rng.uniform(0, 700.0)
+        w = (x0, 100.0, x0 + rng.uniform(100.0, 300.0), 900.0)
+        agg = ["sum", "mean", "min", "max"][rng.integers(4)]
+        phi = [0.0, 0.05][rng.integers(2)]
+        rs = e_seq.query(w, agg, "a0", phi=phi, sequential=True)
+        rb = e_bat.query(w, agg, "a0", phi=phi)
+        assert rb.tiles_processed == rs.tiles_processed
+        assert rb.value == pytest.approx(rs.value, rel=1e-12, abs=1e-9)
+        assert rb.lo == pytest.approx(rs.lo, rel=1e-12, abs=1e-9)
+        assert rb.hi == pytest.approx(rs.hi, rel=1e-12, abs=1e-9)
+        assert rb.bound == pytest.approx(rs.bound, rel=1e-12, abs=1e-12)
+    assert e_seq.index.built_ids() == e_bat.index.built_ids()
+    for cid in e_seq.index.built_ids():
+        ts, tb = e_seq.index._indexes[cid], e_bat.index._indexes[cid]
+        n = ts.n_tiles
+        assert tb.n_tiles == n
+        assert np.array_equal(ts.perm, tb.perm)
+        assert np.array_equal(ts.count[:n], tb.count[:n])
+        assert np.array_equal(ts.active[:n], tb.active[:n])
+    e_seq.index.check_invariants("a0")
+    e_bat.index.check_invariants("a0")
+
+
+# --------------------------------------------------------------------- #
+# lifecycle: ingest / retire
+# --------------------------------------------------------------------- #
+def test_ingest_mid_session_extends_answers():
+    cds, chunks = streaming_dataset(ingest=2)
+    eng = AQPEngine(cds, cfg())
+    w = (100.0, 0.0, 700.0, DOMAIN)
+    r1 = eng.query(w, "count", "a0")
+    cds.ingest(*chunks[2])          # slab [500, 750) overlaps w
+    r2 = eng.query(w, "count", "a0")
+    assert r2.value > r1.value
+    truth = eng.oracle(w, "count", "a0")
+    assert r2.value == truth
+    # the new chunk was built lazily by the second query
+    assert set(eng.index.built_ids()) == {0, 1, 2}
+
+
+def test_retire_drops_chunk_and_never_reads_it_again():
+    cds, _ = streaming_dataset(ingest=3)
+    eng = AQPEngine(cds, cfg())
+    w = (100.0, 0.0, 700.0, DOMAIN)
+    eng.query(w, "sum", "a0", phi=0.05)
+    before = cds.stats.snapshot()
+    retired = cds.chunk(0)
+    cds.retire(0)
+    assert cds.live_ids == (1, 2)
+    # aggregate counters stay monotone across retirement (delta >= 0)
+    delta = cds.stats.delta(before)
+    for f in dataclasses.fields(IOStats):
+        assert getattr(delta, f.name) == 0
+    # a retired chunk can never be read again
+    with pytest.raises(RuntimeError):
+        retired.data.read_values("a0", np.array([0]))
+    # queries proceed over the survivors; the dead forest is dropped
+    r = eng.query(w, "sum", "a0", phi=0.0)
+    truth = eng.oracle(w, "sum", "a0")
+    np.testing.assert_allclose(r.value, truth, rtol=1e-5, atol=1e-2)
+    assert set(eng.index.built_ids()) <= {1, 2}
+    # retiring a dead chunk is an error
+    with pytest.raises(KeyError):
+        cds.retire(0)
+
+
+def test_mmap_chunk_lifecycle(tmp_path):
+    """Per-chunk mmap: each chunk's columns live in their own directory;
+    retirement deletes them — working set, not file size, bounds both
+    memory and disk."""
+    mdir = str(tmp_path / "chunks")
+    cds, chunks = streaming_dataset(ingest=2, rows=6_000, storage="mmap",
+                                    mmap_dir=mdir)
+    eng = AQPEngine(cds, cfg())
+    w = (20.0, 0.0, 480.0, DOMAIN)
+    r = eng.query(w, "mean", "a0", phi=0.0)
+    truth = eng.oracle(w, "mean", "a0")
+    np.testing.assert_allclose(r.value, truth, rtol=1e-5, atol=1e-3)
+    d0 = tmp_path / "chunks" / "chunk_00000"
+    assert d0.is_dir()
+    cds.ingest(*chunks[2])
+    cds.retire(0)
+    assert not d0.exists()          # storage reclaimed with the chunk
+    r2 = eng.query((300.0, 0.0, 700.0, DOMAIN), "mean", "a0", phi=0.05)
+    t2 = eng.oracle((300.0, 0.0, 700.0, DOMAIN), "mean", "a0")
+    assert r2.lo - 1e-3 <= t2 <= r2.hi + 1e-3
+
+
+# --------------------------------------------------------------------- #
+# IOStats satellite: field-complete snapshot/delta + pruned_calls
+# --------------------------------------------------------------------- #
+def test_iostats_delta_is_field_complete():
+    s = IOStats(rows_read=10, bytes_read=40, read_calls=2, init_rows=5,
+                pruned_calls=1)
+    before = s.snapshot()
+    for f in dataclasses.fields(IOStats):
+        setattr(s, f.name, getattr(s, f.name) + 7)
+    d = s.delta(before)
+    for f in dataclasses.fields(IOStats):
+        assert getattr(d, f.name) == 7, f.name
+    m = s.merge(before)
+    for f in dataclasses.fields(IOStats):
+        assert getattr(m, f.name) == (getattr(s, f.name)
+                                      + getattr(before, f.name)), f.name
+
+
+def test_rawdataset_domain_cached_at_construction():
+    ds = make_synthetic_dataset(n=2_000, seed=1)
+    d1 = ds.domain()
+    assert d1 == (float(ds.x.min()), float(ds.y.min()),
+                  float(ds.x.max()), float(ds.y.max()))
+    assert ds.domain() is d1        # same tuple object: no rescan
+
+
+# --------------------------------------------------------------------- #
+# satellite: host session bin-grid memory (SPMD GroupedCache port)
+# --------------------------------------------------------------------- #
+def test_session_bin_memory_answers_repeat_heatmap_without_io():
+    """With splitting exhausted (min_split_count above every tile),
+    processed tiles land in the bin-grid registry: the repeat heatmap
+    answers entirely from it — zero raw-file reads."""
+    def engine(**kw):
+        ds = make_synthetic_dataset(n=10_000, seed=9)
+        return AQPEngine(ds, cfg(min_split_count=100_000, **kw))
+
+    w = (200.0, 200.0, 700.0, 700.0)
+    eng = engine()
+    first = eng.heatmap(w, "mean", "a0", bins=(4, 4), phi=0.0)
+    second = eng.heatmap(w, "mean", "a0", bins=(4, 4), phi=0.0)
+    assert first.objects_read > 0
+    assert second.objects_read == 0 and second.read_calls == 0
+    np.testing.assert_allclose(second.values, first.values, rtol=1e-12)
+    np.testing.assert_allclose(second.lo, first.lo, rtol=1e-12)
+
+    # a viewport change invalidates the registry wholesale
+    w2 = (210.0, 200.0, 710.0, 700.0)
+    moved = eng.heatmap(w2, "mean", "a0", bins=(4, 4), phi=0.0)
+    assert moved.objects_read > 0
+
+    # feature-gated: without the registry the repeat pays I/O again
+    eng_off = engine(session_bin_memory=False)
+    eng_off.heatmap(w, "mean", "a0", bins=(4, 4), phi=0.0)
+    repeat_off = eng_off.heatmap(w, "mean", "a0", bins=(4, 4), phi=0.0)
+    assert repeat_off.objects_read > 0
+    np.testing.assert_allclose(repeat_off.values, second.values,
+                               rtol=1e-12)

@@ -38,8 +38,9 @@ except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 
 from repro.core import AQPEngine, AccuracyPolicy, IndexConfig
-from repro.data import make_synthetic_dataset
+from repro.data import ChunkedDataset, make_synthetic_dataset
 from repro.data.rawfile import RawDataset
+from repro.data.synthetic import make_streaming_chunks
 
 AGGS = ["count", "sum", "mean", "min", "max"]
 PHIS = [0.0, 0.02, 0.1]
@@ -264,6 +265,105 @@ def test_degenerate_one_hot_bin_data_with_random_phi_b():
         assert rb.objects_read <= r_uni.objects_read
         assert np.array_equal(e_bat.index.perm, e_seq.index.perm)
         e_bat.index.check_invariants("a0")
+
+
+def run_chunked_session(op_seed: int, n_ops: int = 8):
+    """Chunk-lifecycle differential session: random ingest/retire ops
+    interleaved with scalar and heatmap queries, mirrored across a
+    sequential-path and a batched-path engine (each on its own —
+    identical — ChunkedDataset, since retirement closes chunk storage).
+
+    Checks after every query: bound containment vs the LIVE oracle, φ
+    honored, batched ≡ sequential on answers, identical chunk pruning;
+    across every lifecycle op: aggregate I/O counters stay monotone and
+    retired chunks are never read again. Session end: identical
+    per-chunk index evolution + structural invariants on both forests.
+    """
+    src = make_streaming_chunks(n_chunks=5, rows_per_chunk=6_000,
+                                n_columns=3, domain=1000.0, seed=101)
+    cds_s, cds_b = ChunkedDataset(), ChunkedDataset()
+    for cds in (cds_s, cds_b):
+        for x, y, cols in src[:2]:
+            cds.ingest(x, y, cols)
+    next_chunk = 2
+    e_seq, e_bat = fresh_engine(cds_s), fresh_engine(cds_b)
+    rng = np.random.default_rng(op_seed)
+    retired_snaps = []          # (Chunk, final stats) — must never grow
+    last_rows = 0
+    for _ in range(n_ops):
+        roll = rng.random()
+        if roll < 0.2 and next_chunk < len(src):
+            for cds in (cds_s, cds_b):
+                cds.ingest(*src[next_chunk])
+            next_chunk += 1
+            continue
+        if roll < 0.35 and cds_s.n_chunks > 2:
+            victim = cds_s.live_ids[int(rng.integers(cds_s.n_chunks))]
+            retired_snaps.append((cds_s.chunk(victim),
+                                  cds_s.chunk(victim).stats.snapshot()))
+            for cds in (cds_s, cds_b):
+                cds.retire(victim)
+            continue
+        w = random_window(rng, cds_s)
+        agg = AGGS[rng.integers(len(AGGS))]
+        phi = PHIS[rng.integers(len(PHIS))]
+        if rng.random() < 0.6:
+            rs = e_seq.query(w, agg, "a0", phi=phi, sequential=True)
+            rb = e_bat.query(w, agg, "a0", phi=phi)
+            _check_scalar(rs, rb, e_bat.oracle(w, agg, "a0"), phi)
+            assert rb.pruned_chunks == rs.pruned_chunks
+        else:
+            bins = (int(rng.integers(2, 4)), int(rng.integers(2, 4)))
+            rs = e_seq.heatmap(w, agg, "a0", bins=bins, phi=phi,
+                               sequential=True)
+            rb = e_bat.heatmap(w, agg, "a0", bins=bins, phi=phi)
+            # the heatmap checks minus read_calls == batch_rounds: one
+            # batched round legitimately issues one read per chunk run
+            truth = e_bat.heatmap_oracle(w, agg, "a0", bins=bins)
+            assert rb.tiles_processed == rs.tiles_processed
+            np.testing.assert_allclose(rb.values, rs.values, rtol=1e-12,
+                                       atol=1e-9)
+            np.testing.assert_allclose(rb.lo, rs.lo, rtol=1e-12, atol=1e-9)
+            np.testing.assert_allclose(rb.hi, rs.hi, rtol=1e-12, atol=1e-9)
+            fin = np.isfinite(truth)
+            assert (rb.lo[fin] - 1e-3 <= truth[fin]).all()      # P2
+            assert (truth[fin] <= rb.hi[fin] + 1e-3).all()
+            assert rb.exact or rb.bound <= phi + 1e-9           # P3
+            assert rb.read_calls <= rb.tiles_processed + rb.pruned_chunks
+        # aggregate counters monotone through queries AND lifecycle ops
+        assert cds_b.stats.rows_read >= last_rows
+        last_rows = cds_b.stats.rows_read
+        # retired chunks stay frozen: no post-retirement reads, ever
+        for chunk, snap in retired_snaps:
+            assert chunk.stats == snap
+    # identical per-chunk index evolution across the two pipelines
+    assert e_seq.index.built_ids() == e_bat.index.built_ids()
+    for cid in e_seq.index.built_ids():
+        ts, tb = e_seq.index._indexes[cid], e_bat.index._indexes[cid]
+        n = ts.n_tiles
+        assert tb.n_tiles == n
+        assert np.array_equal(tb.perm, ts.perm)
+        assert np.array_equal(tb.offset[:n], ts.offset[:n])
+        assert np.array_equal(tb.count[:n], ts.count[:n])
+        assert np.array_equal(tb.active[:n], ts.active[:n])
+        np.testing.assert_allclose(tb.meta_sum["a0"][:n],
+                                   ts.meta_sum["a0"][:n], rtol=1e-12)
+    e_seq.index.check_invariants("a0")
+    e_bat.index.check_invariants("a0")
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=5, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(op_seed=st.integers(0, 2**20))
+    def test_random_chunk_lifecycle_sessions(op_seed):
+        run_chunked_session(op_seed)
+else:
+    @pytest.mark.slow
+    @pytest.mark.parametrize("op_seed", [0, 1, 2, 3])
+    def test_random_chunk_lifecycle_sessions(op_seed):
+        run_chunked_session(op_seed)
 
 
 def test_p6_heatmap_approx_reads_no_more_than_exact():

@@ -71,7 +71,7 @@ def test_grouped_min_folds_needed_never_exceeds_sequential_stop(agg, phi):
     bins = (5, 3)
     checked = 0
     for w in wins:
-        acc, _, _, _ = _build_grouped_accumulator(
+        acc, _, _ = _build_grouped_accumulator(
             e_probe.index, w, agg, "a0", bins)
         bound0 = acc.query_bound()
         order = adapt.score_tiles_grouped(acc.pending, agg, 1.0)
