@@ -1,0 +1,203 @@
+"""B7 — concurrent multi-session serving: latency and throughput vs
+session count over ONE shared adaptive index.
+
+N sessions (N ∈ {1, 4, 16}) each orbit a zipf-hot viewport: viewport
+centres are drawn zipf-weighted from a small pool of hot spots (a few
+regions absorb most of the traffic — the workload concurrent
+exploration frontends actually see). Every tick, each live session
+submits one φ-constrained mean query (every 4th submission a 4×4
+heatmap); the :class:`~repro.core.serving.ServingEngine` micro-batches
+the tick into fused gathered reads + packed multi-window kernel passes
+and publishes staged cracking atomically at tick end.
+
+Reported per N: p50/p99 per-query latency (``eval_time_s``), aggregate
+served rows/s, queries/s, reads and publish/mask counters.
+
+Hard acceptance gates (assert, not just report):
+- every answer is φ-contained: ``exact or bound ≤ φ``, and its CI
+  contains the oracle truth on a sampled subset;
+- a same-tick micro-batched round equals the sequential per-query
+  reference bit-for-bit — answers AND published index evolution.
+
+    PYTHONPATH=src python -m benchmarks.serving_concurrency [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.core import AQPEngine, IndexConfig, ServingEngine
+from repro.core.index import TileIndex
+from repro.data import make_synthetic_dataset
+
+from . import common
+from .common import emit
+
+PHI = 0.05
+DOMAIN = 1000.0
+N_HOT = 8                  # hot-spot pool size (zipf-weighted)
+ZIPF_S = 1.3               # zipf exponent over the hot-spot ranks
+SESSION_COUNTS = (1, 4, 16)
+ORACLE_SAMPLE = 5          # containment-check every k-th result
+
+# answer fields that must match bit-for-bit across serving modes
+PARITY_FIELDS = ("value", "lo", "hi", "bound", "exact", "tiles_full",
+                 "tiles_partial", "tiles_processed", "speculative_rows",
+                 "retired_during_query")
+
+
+def _ticks():
+    return 4 if common.SMOKE else 10
+
+
+def _serving_cfg():
+    return IndexConfig(grid0=(8, 8),
+                       min_split_count=64 if common.SMOKE else 512,
+                       init_metadata_attrs=("a0",))
+
+
+def _dataset(seed=common.SEED):
+    # array storage: B7 measures scheduling/kernel fusion, not text
+    # parsing — keep the in-situ CSV cost out of the latency numbers
+    return make_synthetic_dataset(n=common.N_ROWS, seed=seed,
+                                  storage="array")
+
+
+def _hot_spots(rng):
+    pts = rng.uniform(0.1 * DOMAIN, 0.9 * DOMAIN, size=(N_HOT, 2))
+    w = 1.0 / np.arange(1, N_HOT + 1) ** ZIPF_S
+    return pts, w / w.sum()
+
+
+def _submit_workload(server, sessions, rng, hot, pw, n_ticks):
+    """Drive ``n_ticks`` micro-batched rounds; returns results +
+    (window per result) in served order."""
+    results, windows = [], []
+    for _ in range(n_ticks):
+        for k, s in enumerate(sessions):
+            cx, cy = (hot[rng.choice(N_HOT, p=pw)]
+                      + rng.normal(0, 0.02 * DOMAIN, 2))
+            w = rng.uniform(0.05, 0.15) * DOMAIN
+            win = (cx - w, cy - w, cx + w, cy + w)
+            if (len(results) + k) % 4 == 3:
+                s.heatmap(win, "mean", "a0", bins=(4, 4), phi=PHI)
+            else:
+                s.query(win, "mean", "a0", phi=PHI)
+            windows.append(win)
+        results.extend(server.tick())
+    return results, windows
+
+
+def session_sweep(n_sessions: int):
+    eng = AQPEngine(_dataset(), _serving_cfg())
+    server = ServingEngine(eng)
+    sessions = [server.open_session(f"s{i}") for i in range(n_sessions)]
+    rng = np.random.default_rng(100 + n_sessions)
+    hot, pw = _hot_spots(np.random.default_rng(23))
+
+    reads0 = eng.io_stats.rows_read
+    t0 = time.perf_counter()
+    results, windows = _submit_workload(server, sessions, rng, hot, pw,
+                                        _ticks())
+    wall = time.perf_counter() - t0
+    rows = eng.io_stats.rows_read - reads0
+
+    # hard gate 1: φ-containment on EVERY answer + sampled oracle truth
+    for i, (r, win) in enumerate(zip(results, windows)):
+        assert r.exact or r.bound <= PHI + 1e-12, (i, r.bound)
+        if i % ORACLE_SAMPLE == 0:
+            if not hasattr(r, "values"):          # scalar
+                truth = eng.oracle(win, "mean", "a0")
+                assert r.lo - 1e-9 <= truth <= r.hi + 1e-9, (i, win)
+            else:                                  # heatmap bins
+                ht = eng.heatmap_oracle(win, "mean", "a0", bins=r.bins)
+                fin = np.isfinite(ht)
+                assert ((r.lo[fin] - 1e-6 <= ht[fin]).all()
+                        and (ht[fin] <= r.hi[fin] + 1e-6).all()), (i, win)
+
+    lat = np.array([r.eval_time_s for r in results])
+    return {
+        "n_sessions": n_sessions,
+        "queries": len(results),
+        "wall_s": wall,
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "rows_read": int(rows),
+        "rows_per_s": rows / wall,
+        "queries_per_s": len(results) / wall,
+        "rounds_published": server.last_publish["rounds_published"],
+        "splits_masked": server.last_publish["splits_masked"],
+        "epochs": server.epoch,
+    }
+
+
+def _fingerprint(index):
+    tis = ([index] if isinstance(index, TileIndex)
+           else [index._indexes[k] for k in sorted(index._indexes)])
+    return [(ti.n_tiles, ti.count[:ti.n_tiles].copy(), ti.perm.copy(),
+             {a: v[:ti.n_tiles].copy() for a, v in ti.meta_sum.items()})
+            for ti in tis]
+
+
+def batched_equals_sequential() -> bool:
+    """Hard gate 2: the SAME multi-session tick script served batched
+    and sequentially yields identical answers and identical published
+    index state, bit for bit."""
+    out = {}
+    for mode in ("batched", "sequential"):
+        eng = AQPEngine(_dataset(seed=common.SEED + 1), _serving_cfg())
+        server = ServingEngine(eng, mode=mode)
+        sessions = [server.open_session() for _ in range(4)]
+        rng = np.random.default_rng(55)
+        hot, pw = _hot_spots(np.random.default_rng(23))
+        results, _ = _submit_workload(server, sessions, rng, hot, pw, 3)
+        out[mode] = (results, _fingerprint(server.index),
+                     server.last_publish)
+    ra, fa, pa = out["batched"]
+    rb, fb, pb = out["sequential"]
+    ok = len(ra) == len(rb) and pa == pb
+    for x, y in zip(ra, rb):
+        for f in PARITY_FIELDS:
+            if hasattr(x, f):
+                va, vb = getattr(x, f), getattr(y, f)
+                ok &= bool(np.array_equal(va, vb))
+        if hasattr(x, "values"):
+            ok &= bool(np.array_equal(x.values, y.values)
+                       and np.array_equal(x.bin_bound, y.bin_bound))
+    for (n1, c1, p1, m1), (n2, c2, p2, m2) in zip(fa, fb):
+        ok &= bool(n1 == n2 and np.array_equal(c1, c2)
+                   and np.array_equal(p1, p2))
+        ok &= m1.keys() == m2.keys()
+        ok &= all(np.array_equal(m1[k], m2[k]) for k in m1)
+    return ok
+
+
+def main():
+    for n in SESSION_COUNTS:
+        out = session_sweep(n)
+        emit(f"serving_n{n}",
+             out["wall_s"] * 1e6 / max(out["queries"], 1),
+             f"sessions={n};queries={out['queries']};"
+             f"p50_ms={out['p50_ms']:.2f};p99_ms={out['p99_ms']:.2f};"
+             f"rows_per_s={out['rows_per_s']:.0f};"
+             f"queries_per_s={out['queries_per_s']:.1f};"
+             f"rows_read={out['rows_read']};"
+             f"epochs={out['epochs']};"
+             f"rounds_published={out['rounds_published']};"
+             f"splits_masked={out['splits_masked']}")
+    parity = batched_equals_sequential()
+    assert parity, "micro-batched tick diverged from sequential reference"
+    emit("serving_batched_eq_sequential", 0.0, f"bit_for_bit={parity}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-n smoke sizing (same code paths)")
+    if ap.parse_args(sys.argv[1:]).smoke:
+        common.configure_smoke()
+    print("name,us_per_call,derived")
+    main()

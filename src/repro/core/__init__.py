@@ -4,15 +4,17 @@ from .bounds import (AccuracyPolicy, GroupedAccumulator, GroupedPendingTile,
                      HeatmapResult, PendingTile, QueryAccumulator,
                      QueryResult)
 from .engine import AQPEngine, EngineTrace
-from .index import AdaptStats, ChunkIndexSet, IndexConfig, TileIndex
+from .index import AdaptStats, ChunkIndexSet, EpochStage, IndexConfig, TileIndex
 from .query import (evaluate, evaluate_heatmap, evaluate_heatmap_oracle,
                     evaluate_oracle)
 from .refine import (HeatmapQueryAdapter, RefinementDriver,
                      ScalarQueryAdapter)
+from .serving import NullStage, ServingEngine, Session, Ticket
 
 __all__ = [
     "AQPEngine", "EngineTrace", "TileIndex", "ChunkIndexSet",
-    "IndexConfig", "AdaptStats",
+    "IndexConfig", "AdaptStats", "EpochStage",
+    "ServingEngine", "Session", "Ticket", "NullStage",
     "AccuracyPolicy",
     "QueryResult", "QueryAccumulator", "PendingTile",
     "HeatmapResult", "GroupedAccumulator", "GroupedPendingTile",

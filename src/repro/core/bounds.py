@@ -232,6 +232,8 @@ class QueryResult:
     batch_rounds: int = 0      # batched refinement rounds (0 ⇒ sequential)
     speculative_rows: int = 0  # rows read past the stopping point
     pruned_chunks: int = 0     # chunks skipped on their bbox (chunked ds)
+    retired_during_query: bool = False  # a chunk retired mid-query; its
+    #                            tiles were dropped from the answer set
     eval_time_s: float = 0.0
 
 
@@ -283,6 +285,19 @@ class QueryAccumulator:
         self._p_lo -= lo
         self._p_hi -= hi
         self.fold_full(cnt_q, s_q, min_q, max_q)
+
+    def drop_pending(self, tile_id: int) -> bool:
+        """Remove a pending tile WITHOUT folding it (its chunk retired
+        mid-query) — the answer now covers only the still-live data.
+        Returns False when the tile was never pending (already folded)."""
+        p = self.pending.pop(tile_id, None)
+        if p is None:
+            return False
+        lo, hi = p.ci_sum()
+        self._p_cnt -= p.cnt_q
+        self._p_lo -= lo
+        self._p_hi -= hi
+        return True
 
     # -------------------------- reading ------------------------------ #
     def total_count(self) -> int:
@@ -416,6 +431,8 @@ class HeatmapResult:
     batch_rounds: int = 0      # batched refinement rounds (0 ⇒ sequential)
     speculative_rows: int = 0  # rows read past the stopping point
     pruned_chunks: int = 0     # chunks skipped on their bbox (chunked ds)
+    retired_during_query: bool = False  # a chunk retired mid-query; its
+    #                            tiles were dropped from the answer set
     eval_time_s: float = 0.0
     # per-bin allocation (AccuracyPolicy queries; None ⇒ uniform φ).
     # NOTE: under a non-trivial policy the query-level ``bound`` (max
@@ -529,6 +546,20 @@ class GroupedAccumulator:
                                self.ex_min)
         self.ex_max = np.where(nz, np.maximum(self.ex_max, max_b),
                                self.ex_max)
+
+    def drop_pending(self, tile_id: int) -> bool:
+        """Remove a pending tile WITHOUT folding it (its chunk retired
+        mid-query) — the answer now covers only the still-live data.
+        Returns False when the tile was never pending (already folded)."""
+        p = self.pending.pop(tile_id, None)
+        if p is None:
+            return False
+        cb = p.cnt_b.astype(np.float64)
+        self._p_cnt -= p.cnt_b
+        self._p_lo -= cb * p.vmin
+        self._p_hi -= cb * p.vmax
+        self._p_mid -= cb * (0.5 * (p.vmin + p.vmax))
+        return True
 
     # -------------------------- reading ------------------------------ #
     def interval(self):

@@ -67,7 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -833,9 +833,17 @@ class DistributedAQPEngine:
     lifecycle natively)."""
 
     def __init__(self, dataset, mesh: Mesh,
-                 cfg: DistConfig = DistConfig()):
+                 cfg: DistConfig = DistConfig(), *,
+                 defer_epochs: bool = False):
         self.mesh = mesh
         self.cfg = cfg
+        # epoch publication seam (the SPMD analog of the serving
+        # layer's EpochStage): with defer_epochs=True, refine epochs
+        # are STAGED instead of applied inside the query — the session
+        # state stays frozen for a whole serving tick, and
+        # publish_epochs() applies them atomically between ticks
+        self.defer_epochs = bool(defer_epochs)
+        self._staged_epochs: List[tuple] = []
         axes = _all_axes(mesh)
         n_dev = int(np.prod([mesh.shape[a] for a in axes]))
         n = (dataset.n // n_dev) * n_dev  # truncate to shardable length
@@ -891,16 +899,79 @@ class DistributedAQPEngine:
     def _epoch_runner(self, holder, attr: str, bins, win):
         """The EpochDriver's ``run_epoch`` hook, shared by both query
         paths: crack the tiles the final pass read, persist the state
-        in the caller's holder, report how many split."""
+        in the caller's holder, report how many split.
+
+        Under ``defer_epochs`` the crack is STAGED instead — recorded
+        with the query's selection mask and applied by
+        :meth:`publish_epochs` once the tick has quiesced. The answer
+        is unaffected (the epoch runs strictly after the last
+        selection pass anyway); only the state mutation moves."""
         epoch = self._epoch(bins)
 
         def run_epoch(out):
+            if self.defer_epochs:
+                self._staged_epochs.append(
+                    (attr, bins, np.asarray(win), np.asarray(out["sel"])))
+                return 0
             st2, info = epoch(holder["state"], self.xs, self.ys,
                               self.vals[attr], win,
                               jnp.asarray(out["sel"]))
             holder["state"] = st2
             return int(info["n_split"])
         return run_epoch
+
+    def publish_epochs(self) -> Dict[str, int]:
+        """Apply every staged refine epoch atomically (staging order =
+        arrival order) and invalidate the grouped exact-state registry
+        rows of tiles the publication deactivated.
+
+        The first-claimant rule of the host
+        :class:`~repro.core.index.EpochStage` holds by construction: a
+        tile split by an earlier staged epoch is inactive when a later
+        epoch's selection mask reaches it, so its candidate row drops
+        out of the later epoch's eligibility (``sel & active``) and a
+        tile can never split twice. Registry invalidation is the SPMD
+        analog of the host payloads' apply-time ``hm_key`` resolution:
+        rows of now-inactive parents are cleared wholesale so a
+        post-publication query re-reads the children instead of
+        trusting state keyed to the pre-publication table."""
+        staged, self._staged_epochs = self._staged_epochs, []
+        n_split = 0
+        touched = set()
+        for attr, bins, win, sel in staged:
+            if attr not in self._states:
+                continue
+            st2, info = self._epoch(bins)(
+                self._states[attr], self.xs, self.ys, self.vals[attr],
+                jnp.asarray(win), jnp.asarray(sel))
+            self._states[attr] = st2
+            n_split += int(info["n_split"])
+            touched.add(attr)
+        invalidated = 0
+        for attr in touched:
+            invalidated += self._invalidate_caches(attr)
+        return {"epochs_published": len(staged), "tiles_split": n_split,
+                "cache_rows_invalidated": invalidated}
+
+    def _invalidate_caches(self, attr: str) -> int:
+        """Drop registry rows of tiles no longer active in the
+        published state (split parents); returns rows cleared."""
+        active = np.asarray(self._states[attr].active)
+        dropped = 0
+        for key, cache in list(self._caches.items()):
+            if key[0] != attr:
+                continue
+            valid = np.asarray(cache.valid)
+            stale = valid & ~active
+            if not stale.any():
+                continue
+            dropped += int(stale.sum())
+            nvalid = jnp.asarray(valid & active)
+            self._caches[key] = GroupedCache(
+                cnt_tb=jnp.where(nvalid[:, None], cache.cnt_tb, 0.0),
+                val_tb=jnp.where(nvalid[:, None], cache.val_tb, 0.0),
+                valid=nvalid, window=cache.window)
+        return dropped
 
     @property
     def n_active(self) -> Dict[str, int]:

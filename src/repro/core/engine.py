@@ -173,6 +173,31 @@ class AQPEngine:
         self.trace.results.append(r)
         return r
 
+    def serve(self, *, mode: str = "batched",
+              crack_budget: Optional[int] = None):
+        """Lift this engine into a concurrent multi-session server.
+
+        Returns a :class:`~repro.core.serving.ServingEngine` wrapping
+        THIS engine's index: sessions opened on it
+        (:meth:`~repro.core.serving.ServingEngine.open_session`) share
+        the one adaptive index, same-tick queries are micro-batched into
+        fused gathered reads + packed multi-window kernel passes, and
+        index mutation is isolated behind epoch publication — no session
+        ever observes a half-applied split. Each session carries its own
+        :class:`EngineTrace`; queries served through ``serve()`` are
+        recorded there, not on ``self.trace``.
+
+        mode: "batched" (micro-batched ticks) or "sequential" (per-query
+          reference path — same answers and same published index,
+          bit-for-bit).
+        crack_budget: max queries per tick allowed to stage index
+          mutations; later arrivals skip cracking and still answer
+          within φ from pending-interval bounds (None ⇒ unlimited).
+        """
+        from .serving import ServingEngine  # circular at module scope
+        return ServingEngine(self, alpha=self.alpha, mode=mode,
+                             crack_budget=crack_budget)
+
     def oracle(self, window, agg: str, attr: str) -> float:
         return query_mod.evaluate_oracle(self.index, window, agg, attr)
 

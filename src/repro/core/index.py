@@ -316,8 +316,12 @@ class TileIndex:
         compute the exact in-window contribution, split t into sub-tiles,
         reorganize its object segment, and store sub-tile metadata.
 
-        Returns (cnt_q, sum_q, min_q, max_q) — exact contribution of t∩Q.
+        Returns (cnt_q, sum_q, min_q, max_q) — exact contribution of t∩Q,
+        or ``None`` when the dataset retired mid-query (the caller drops
+        the tile from its answer set instead of crashing mid-kernel).
         """
+        if self.ds.closed:
+            return None
         self.ensure_attr(attr)
         o, c = int(self.offset[tile_id]), int(self.count[tile_id])
         if c == 0:
@@ -383,8 +387,11 @@ class TileIndex:
         like :meth:`process`.
 
         Returns ``(cnt_b, sum_b, min_b, max_b)`` — per-bin arrays of
-        length ``bx*by`` (bin id = by_row*bx + bx_col).
+        length ``bx*by`` (bin id = by_row*bx + bx_col) — or ``None``
+        when the dataset retired mid-query (see :meth:`process`).
         """
+        if self.ds.closed:
+            return None
         bx, by = bins
         nbins = bx * by
         self.ensure_attr(attr)
@@ -549,6 +556,18 @@ class TileIndex:
                    "xs": xs, "ys": ys, "vals": vals, "attr": attr}
         return tile_ids, idx, bounds, xs, ys, vals, payload
 
+    def _dead_batch(self, tile_ids, attr: str):
+        """Degraded phase-1 result when the dataset retired mid-query:
+        every contribution is ``None`` (the driver drops those tiles from
+        the answer set) and the payload is inert — all-zero segment
+        bounds, so speculative accounting adds nothing, and
+        :meth:`apply_batch` is a no-op on it."""
+        tile_ids = np.asarray(tile_ids, np.int64)
+        payload = {"tile_ids": tile_ids,
+                   "bounds": np.zeros(len(tile_ids) + 1, np.int64),
+                   "attr": attr, "dead": True}
+        return [None] * len(tile_ids), payload
+
     def read_batch(self, tile_ids, window, attr: str):
         """Phase 1 of a batched refinement round: amortized read + kernel.
 
@@ -571,6 +590,8 @@ class TileIndex:
         backend override ("jnp"/"pallas" — the TPU deploy data plane)
         computes them in float32 and matches to f32 tolerance only.
         """
+        if self.ds.closed:
+            return self._dead_batch(tile_ids, attr)
         tile_ids, idx, bounds, xs, ys, vals, payload = \
             self._read_batch_gather(tile_ids, attr)
         # exact in-window contributions: one packed kernel over the batch
@@ -606,6 +627,8 @@ class TileIndex:
         remain the TPU bulk data plane, validated against this mirror in
         tests/test_kernels.py.
         """
+        if self.ds.closed:
+            return self._dead_batch(tile_ids, attr)
         bx, by = bins
         tile_ids, idx, bounds, xs, ys, vals, payload = \
             self._read_batch_gather(tile_ids, attr)
@@ -623,8 +646,13 @@ class TileIndex:
             for s in range(len(tile_ids))]
         # session bin-grid memory: apply_batch registers the FOLDED
         # prefix (speculatively-read tiles stay unregistered, exactly as
-        # under sequential processing)
-        payload["hm_cache"] = self.heatmap_cache(window, bins, attr)
+        # under sequential processing). The payload carries the registry
+        # KEY, not the dict: with staged (epoch-deferred) applies another
+        # query may rotate the registry between read and publish, and a
+        # key mismatch at apply time must drop the registration instead
+        # of writing rows into a registry keyed to a different viewport.
+        cache = self.heatmap_cache(window, bins, attr)
+        payload["hm_key"] = self._hm_key if cache is not None else None
         payload["hm_contribs"] = contribs
         return contribs, payload
 
@@ -639,7 +667,7 @@ class TileIndex:
         growth — the same decisions the sequential path makes). All
         children of all split tiles are appended in one SoA update.
         """
-        if n_used == 0:
+        if n_used == 0 or payload.get("dead"):
             return
         attr = payload["attr"]
         tile_ids = payload["tile_ids"][:n_used]
@@ -712,12 +740,16 @@ class TileIndex:
             r = s
 
         # heatmap rounds: register the folded, still-active tiles in the
-        # session bin-grid memory (mirrors process_heatmap)
-        cache = payload.get("hm_cache")
-        if cache is not None:
+        # session bin-grid memory (mirrors process_heatmap). Resolved by
+        # KEY at apply time — if the registry rotated to another viewport
+        # since the read (staged applies under concurrent sessions), the
+        # stale registration is dropped rather than corrupting the
+        # current registry.
+        key = payload.get("hm_key")
+        if key is not None and key == self._hm_key:
             contribs = payload["hm_contribs"]
             for i, t in enumerate(tile_ids):
-                self._hm_record(cache, t, contribs[i])
+                self._hm_record(self._hm_reg, t, contribs[i])
 
     def process_batch(self, tile_ids, window, attr: str, split_flags):
         """Read + fully apply one batch (convenience one-shot wrapper)."""
@@ -874,6 +906,92 @@ class TileIndex:
     @property
     def n_active(self) -> int:
         return int(self.active[:self.n_tiles].sum())
+
+
+class EpochStage:
+    """Staged (epoch-deferred) application of refinement rounds.
+
+    The serving layer's isolation mechanism: during a tick every query
+    reads against ONE frozen index epoch — rounds that would normally
+    enrich/split tiles in place (:meth:`TileIndex.apply_batch`) are
+    STAGED here instead, and :meth:`publish` applies them all at once
+    between ticks. Because no read happens while publish runs, no
+    reader can ever observe a half-applied split: an epoch is either
+    entirely pre-publish or entirely post-publish.
+
+    Publication is canonicalized two ways so the micro-batched and
+    sequential-reference serving modes produce bit-for-bit identical
+    index evolution:
+
+    - entries publish in ``(owner, staging-seq)`` order — i.e. per
+      query in arrival order, each query's rounds in round order —
+      which is exactly the order the sequential reference stages them;
+    - a tile is split by its FIRST claimant only: when two same-tick
+      queries both request a split of tile t, the later request is
+      masked to an enrichment (its exact metadata write is idempotent),
+      so the split grid/edges applied are deterministic and the tile
+      can never be split twice.
+    """
+
+    def __init__(self):
+        self._entries = []       # (owner, seq, tile_index, payload,
+        #                           n_used, split_flags)
+        self._seq = 0
+        self._owner = 0
+
+    def set_owner(self, owner: int) -> None:
+        """Tag subsequent staged rounds with the owning query's arrival
+        index (the publication sort key)."""
+        self._owner = int(owner)
+
+    @property
+    def n_staged(self) -> int:
+        return len(self._entries)
+
+    def stage_apply(self, index, payload, n_used: int, split_flags):
+        """Driver seam: called where the driver would call
+        ``index.apply_batch``. Composite (chunk-forest) payloads are
+        decomposed into their per-chunk runs here, with the driver's
+        global folded prefix routed per run exactly as
+        :meth:`ChunkIndexSet.apply_batch` would."""
+        runs = payload.get("runs")
+        if runs is None:
+            self._entries.append((self._owner, self._seq, index, payload,
+                                  int(n_used), list(split_flags[:n_used])))
+            self._seq += 1
+            return
+        for ti, p, s, e in runs:
+            used = min(max(n_used - s, 0), e - s)
+            self._entries.append((self._owner, self._seq, ti, p, used,
+                                  list(split_flags[s:s + used])))
+            self._seq += 1
+
+    def publish(self) -> Dict[str, int]:
+        """Apply every staged round atomically (no concurrent readers by
+        construction — the tick has quiesced). Returns publication
+        counters: rounds applied and split requests masked by the
+        first-claimant rule."""
+        entries = sorted(self._entries, key=lambda en: (en[0], en[1]))
+        self._entries = []
+        claimed = set()
+        masked = 0
+        applied = 0
+        for _, _, ti, payload, used, flags in entries:
+            if used == 0 or payload.get("dead"):
+                continue
+            eff = []
+            for i, t in enumerate(payload["tile_ids"][:used]):
+                want = bool(flags[i])
+                key = (id(ti), int(t))
+                if want and key in claimed:
+                    want = False
+                    masked += 1
+                elif want:
+                    claimed.add(key)
+                eff.append(want)
+            ti.apply_batch(payload, used, eff)
+            applied += 1
+        return {"rounds_published": applied, "splits_masked": masked}
 
 
 def _chunk_overlaps(bbox, window) -> bool:

@@ -111,7 +111,7 @@ def _build_accumulator(index, window, agg: str, attr: str):
 def evaluate(index, window, agg: str, attr: str,
              phi: float = 0.0, alpha: float = 1.0, *,
              batch_k: Optional[int] = None,
-             sequential: bool = False) -> QueryResult:
+             sequential: bool = False, stage=None) -> QueryResult:
     # chunked forests materialize overlapped chunks' indexes BEFORE the
     # per-query snapshot: lazy build cost is index-construction I/O
     # (init_rows + init-metadata reads on the chunk's own stats), same
@@ -128,7 +128,8 @@ def evaluate(index, window, agg: str, attr: str,
         index, window, agg, attr)
 
     driver = RefinementDriver(
-        acc, ScalarQueryAdapter(index, window, attr, full_set), phi, alpha)
+        acc, ScalarQueryAdapter(index, window, attr, full_set), phi, alpha,
+        stage=stage)
     processed = driver.run(batch_k=batch_k, sequential=sequential)
 
     value, lo, hi, bound = acc.interval()
@@ -143,6 +144,7 @@ def evaluate(index, window, agg: str, attr: str,
         batch_rounds=adapt_delta.batch_rounds,
         speculative_rows=adapt_delta.speculative_rows,
         pruned_chunks=io_delta.pruned_calls,
+        retired_during_query=driver.dropped > 0,
         eval_time_s=time.perf_counter() - t_start)
 
 
@@ -216,7 +218,7 @@ def evaluate_heatmap(index, window, agg: str, attr: str,
                      alpha: float = 1.0, *,
                      policy: Optional[AccuracyPolicy] = None,
                      batch_k: Optional[int] = None,
-                     sequential: bool = False) -> HeatmapResult:
+                     sequential: bool = False, stage=None) -> HeatmapResult:
     """φ-constrained heatmap (2-D group-by) over the window's bx×by grid.
 
     Same evaluation skeleton as :func:`evaluate` — literally the same
@@ -262,7 +264,8 @@ def evaluate_heatmap(index, window, agg: str, attr: str,
         acc.set_policy(policy, phi, (bx, by))
 
     driver = RefinementDriver(
-        acc, HeatmapQueryAdapter(index, window, attr, (bx, by)), phi, alpha)
+        acc, HeatmapQueryAdapter(index, window, attr, (bx, by)), phi, alpha,
+        stage=stage)
     processed = driver.run(batch_k=batch_k, sequential=sequential)
 
     values, lo, hi, bin_bound, bound = acc.interval()
@@ -280,6 +283,7 @@ def evaluate_heatmap(index, window, agg: str, attr: str,
         batch_rounds=adapt_delta.batch_rounds,
         speculative_rows=adapt_delta.speculative_rows,
         pruned_chunks=io_delta.pruned_calls,
+        retired_during_query=driver.dropped > 0,
         eval_time_s=time.perf_counter() - t_start,
         phi_b=acc.phi_b.copy() if policy_active else None,
         eps_abs=acc.eps_abs,

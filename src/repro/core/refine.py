@@ -151,7 +151,8 @@ class RefinementDriver:
     """One score → round-size → read → fold → apply loop for every query
     type; see the module docstring for the contract."""
 
-    def __init__(self, acc, adapter, phi: float, alpha: float = 1.0):
+    def __init__(self, acc, adapter, phi: float, alpha: float = 1.0,
+                 stage=None):
         # the index is the adapter's: reads, splits, and accounting must
         # hit the same object, so the driver never takes a separate one.
         # It may be a TileIndex or a ChunkIndexSet — both present cfg,
@@ -163,6 +164,16 @@ class RefinementDriver:
         self.adapter = adapter
         self.phi = float(phi)
         self.alpha = float(alpha)
+        # epoch publication seam (serving layer): when set, refinement
+        # side effects are STAGED on this EpochStage instead of applied
+        # in place — the index stays frozen until the scheduler
+        # publishes the epoch between ticks. Read-only w.r.t. answers:
+        # a query's rounds touch disjoint tiles, so deferring applies
+        # past its own reads never changes its fold decisions.
+        self.stage = stage
+        # pending tiles dropped because their chunk retired mid-query
+        # (the answer then covers only the still-live data)
+        self.dropped = 0
 
     def _met(self, bound: float) -> bool:
         return met(self.phi, bound)
@@ -181,6 +192,8 @@ class RefinementDriver:
             return 0
         order = self.adapter.score_order(acc, self.alpha)
         if sequential:
+            assert self.stage is None, \
+                "epoch staging requires the batched path"
             return self._run_sequential(order, bound)
         return self._run_batched(order, bound, batch_k)
 
@@ -193,8 +206,13 @@ class RefinementDriver:
         for t in order:
             if self._met(bound):
                 break
-            acc.fold_exact(t, *self.adapter.process_one(t))
-            processed += 1
+            contrib = self.adapter.process_one(t)
+            if contrib is None:          # chunk retired mid-query
+                acc.drop_pending(t)
+                self.dropped += 1
+            else:
+                acc.fold_exact(t, *contrib)
+                processed += 1
             bound = acc.query_bound()
         return processed
 
@@ -231,6 +249,15 @@ class RefinementDriver:
                 if self._met(bound):
                     stop = True
                     break
+                if contrib is None:      # chunk retired mid-query: drop
+                    # the tile from the answer set. It still counts into
+                    # the applied prefix — its (dead) payload applies as
+                    # a no-op, keeping the prefix aligned for live runs
+                    acc.drop_pending(t)
+                    self.dropped += 1
+                    n_used += 1
+                    bound = acc.query_bound()
+                    continue
                 acc.fold_exact(t, *contrib)
                 n_used += 1
                 processed += 1
@@ -242,9 +269,14 @@ class RefinementDriver:
             index.adapt_stats.speculative_rows += int(
                 bounds_[len(batch)] - bounds_[n_used])
             # refinement applies to exactly the folded prefix, so the
-            # index evolves bit-for-bit as under sequential processing
-            index.apply_batch(payload, n_used,
-                              self.adapter.split_flags(batch[:n_used]))
+            # index evolves bit-for-bit as under sequential processing —
+            # either in place, or staged for epoch publication when the
+            # serving layer holds the index frozen for concurrent readers
+            flags = self.adapter.split_flags(batch[:n_used])
+            if self.stage is not None:
+                self.stage.stage_apply(index, payload, n_used, flags)
+            else:
+                index.apply_batch(payload, n_used, flags)
         return processed
 
 

@@ -1,0 +1,619 @@
+"""Concurrent multi-session serving: epoch-isolated cracking over ONE
+shared adaptive index.
+
+Exploration frontends multiplex many sessions (users panning their own
+viewports) over a single dataset. Running each query straight through
+:class:`~repro.core.engine.AQPEngine` would interleave index mutation
+with concurrent reads — a reader could observe a half-applied split —
+and would pay one gathered raw-file read + one kernel launch per query
+per round even when many same-tick queries touch the same storage.
+
+:class:`ServingEngine` fixes both with a tick-based scheduler:
+
+- **Sessions** (:meth:`ServingEngine.open_session`) submit queries as
+  :class:`Ticket`\\ s; nothing runs until :meth:`ServingEngine.tick`.
+  Each session keeps its own
+  :class:`~repro.core.engine.EngineTrace`, so per-session accounting
+  (``totals()``) works exactly as for a private engine.
+
+- **Epoch isolation**: during a tick every query reads ONE frozen index
+  epoch. Refinement side effects are STAGED on an
+  :class:`~repro.core.index.EpochStage` instead of applied in place,
+  and published atomically between ticks — splits are never visible
+  half-applied, and two same-tick queries splitting the same tile
+  resolve deterministically (first claimant splits, the later request
+  is masked to an enrichment).
+
+- **Micro-batching** (the default ``mode="batched"``): same-tick
+  queries advance in lock-step rounds. Each round gathers the UNION of
+  every active query's next score-ordered batch — one
+  ``read_values`` call per (storage part, attribute) — and answers all
+  scalar queries with ONE packed ``segment_window_agg_multi`` pass
+  (per-segment windows; see :mod:`repro.kernels.segment_agg`) and all
+  same-resolution heatmap queries with ONE
+  ``segment_window_bin_agg_multi`` pass. Per-query fold loops,
+  round sizing (predictive ``min_folds_needed`` / geometric ramp), and
+  stopping are byte-identical to the private
+  :class:`~repro.core.refine.RefinementDriver`, so a micro-batched
+  tick produces bit-for-bit the same answers AND the same published
+  index evolution as ``mode="sequential"`` (the per-query reference:
+  each ticket runs its own driver against the same frozen epoch).
+  Cost attribution differs by construction — that is the point.
+
+- **Skip-under-contention**: a query whose phase-1 pending-interval
+  bound already meets φ answers with ZERO reads and no staged
+  mutation (the pure metadata fast path). Under index-mutation
+  contention (``crack_budget`` queries per tick already staging),
+  later queries still read and fold until φ is met but SKIP cracking
+  entirely — their answers remain φ-contained because staged applies
+  never feed back into a running query's folds. The budget is keyed on
+  arrival order, so both serving modes skip the same queries and the
+  published evolution stays identical.
+
+Cross-mode parity contract (asserted in tests/test_serving.py and
+benchmarks/serving_concurrency.py): ``value/lo/hi/bound/exact``,
+``tiles_*``, ``speculative_rows`` and ``retired_during_query`` match
+bit-for-bit between modes; ``objects_read``/``read_calls``/
+``batch_rounds`` are cost attribution and legitimately differ (shared
+reads are credited to every participant). The per-part session
+bin-grid registry is re-keyed canonically before publication (last
+overlapping heatmap ticket by arrival), so registry evolution matches
+the sequential reference too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from ..kernels import ops
+from ..kernels import ref as ref_mod
+from ..kernels.segment_agg import MAX_SEGMENTS, MAX_UNROLL
+from . import query as query_mod
+from .bounds import AccuracyPolicy, HeatmapResult, QueryResult
+from .engine import AQPEngine, EngineTrace
+from .index import ChunkIndexSet, EpochStage, _chunk_overlaps
+from .refine import HeatmapQueryAdapter, ScalarQueryAdapter, met
+
+
+class NullStage:
+    """Stage sink for crack-skipped queries: accepts the driver's
+    staged rounds and discards them — the query reads, folds, and
+    answers within φ, but contributes nothing to the published epoch."""
+
+    n_staged = 0
+
+    def set_owner(self, owner: int) -> None:
+        pass
+
+    def stage_apply(self, index, payload, n_used, split_flags) -> None:
+        pass
+
+    def publish(self) -> Dict[str, int]:
+        return {"rounds_published": 0, "splits_masked": 0}
+
+
+_NULL_STAGE = NullStage()
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One submitted query; ``result`` is populated by the tick that
+    serves it (``None`` until then)."""
+    session: "Session"
+    kind: str                    # "query" | "heatmap"
+    window: Tuple[float, float, float, float]
+    agg: str
+    attr: str
+    phi: float = 0.0
+    alpha: float = 1.0
+    bins: Optional[Tuple[int, int]] = None
+    policy: Optional[AccuracyPolicy] = None
+    batch_k: Optional[int] = None
+    result: Optional[Union[QueryResult, HeatmapResult]] = None
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class Session:
+    """A client handle on the shared engine: submits tickets, owns a
+    private :class:`EngineTrace`. Closing drops its queued tickets."""
+
+    def __init__(self, engine: "ServingEngine", sid: int,
+                 name: Optional[str] = None):
+        self.engine = engine
+        self.sid = sid
+        self.name = name or f"session-{sid}"
+        self.trace = EngineTrace()
+        self.closed = False
+
+    def query(self, window, agg: str, attr: str, phi: float = 0.0,
+              alpha: float = 1.0,
+              batch_k: Optional[int] = None) -> Ticket:
+        return self.engine._submit(Ticket(
+            session=self, kind="query", window=tuple(window), agg=agg,
+            attr=attr, phi=float(phi), alpha=float(alpha),
+            batch_k=batch_k))
+
+    def heatmap(self, window, agg: str, attr: str,
+                bins: Tuple[int, int] = (8, 8), phi: float = 0.0,
+                alpha: float = 1.0,
+                policy: Optional[AccuracyPolicy] = None,
+                batch_k: Optional[int] = None) -> Ticket:
+        assert np.isfinite(np.asarray(window, np.float64)).all(), \
+            "heatmap windows must be finite rectangles"
+        return self.engine._submit(Ticket(
+            session=self, kind="heatmap", window=tuple(window), agg=agg,
+            attr=attr, phi=float(phi), alpha=float(alpha),
+            bins=(int(bins[0]), int(bins[1])), policy=policy,
+            batch_k=batch_k))
+
+    def close(self) -> None:
+        self.closed = True
+        self.engine._drop_session(self)
+
+
+class _QueryRun:
+    """Per-ticket refinement state machine of a micro-batched tick.
+
+    Replicates :meth:`RefinementDriver._run_batched` exactly — same
+    round sizing, same per-item stopping rule, same speculative
+    accounting, same staged prefix — but yields its round batches to
+    the scheduler instead of reading itself, so the scheduler can fuse
+    all active queries' reads and kernel passes."""
+
+    def __init__(self, arrival: int, ticket: Ticket, index, stage,
+                 may_crack: bool):
+        self.i = arrival
+        self.tk = ticket
+        self.index = index
+        self.stage = stage if may_crack else _NULL_STAGE
+        self.processed = 0
+        self.dropped = 0
+        self.speculative = 0
+        self.objects_read = 0
+        self.read_calls = 0
+        self.rounds = 0
+        self.finish_time: Optional[float] = None
+
+        # ---- phase 1: build (frozen-epoch classification) ----
+        tk = ticket
+        prepare = getattr(index, "prepare", None)
+        if prepare is not None:
+            prepare(tk.window, tk.attr)
+        io_before = index.ds.stats.snapshot()
+        index.ensure_attr(tk.attr)
+        if tk.kind == "query":
+            acc, full_set, n_full, n_partial = \
+                query_mod._build_accumulator(index, tk.window, tk.agg,
+                                             tk.attr)
+            self.adapter = ScalarQueryAdapter(index, tk.window, tk.attr,
+                                              full_set)
+        else:
+            acc, n_full, n_partial = query_mod._build_grouped_accumulator(
+                index, tk.window, tk.agg, tk.attr, tk.bins)
+            if tk.policy is not None and tk.phi > 0.0:
+                acc.set_policy(tk.policy, tk.phi, tk.bins)
+            self.adapter = HeatmapQueryAdapter(index, tk.window, tk.attr,
+                                               tk.bins)
+        self.pruned = index.ds.stats.delta(io_before).pruned_calls
+        self.acc = acc
+        self.phi = tk.phi
+        self.n_full, self.n_partial = n_full, n_partial
+        self.bound = acc.query_bound()
+        # the metadata fast path: pending-interval bounds already meet
+        # φ → answer with zero reads, zero staged mutation (SKIP)
+        self.finished = (not acc.pending) or met(self.phi, self.bound)
+        self.stop = False
+        self.pos = 0
+        if not self.finished:
+            self.order = self.adapter.score_order(acc, tk.alpha)
+            k = (index.cfg.batch_k if tk.batch_k is None
+                 else int(tk.batch_k))
+            self.k = max(1, min(k, MAX_SEGMENTS,
+                                MAX_UNROLL // self.adapter.max_split_cells()))
+            self.predictive = tk.phi > 0.0 and acc.agg in ("sum", "mean")
+            self.size = 1 if tk.phi > 0.0 else self.k
+        else:
+            self.order = []
+
+    def next_batch(self):
+        """The driver's round-head logic; ``None`` once finished."""
+        if self.finished:
+            return None
+        if (self.pos >= len(self.order) or self.stop
+                or met(self.phi, self.bound)):
+            self.finished = True
+            return None
+        if self.predictive:
+            self.size = self.acc.min_folds_needed(self.order[self.pos:],
+                                                  self.phi)
+        batch = self.order[self.pos:self.pos + min(self.size, self.k)]
+        self.pos += len(batch)
+        if not self.predictive:
+            self.size = min(self.size * 2, self.k)
+        return batch
+
+    def fold(self, batch, contribs, payload) -> None:
+        """The driver's per-round fold + stage epilogue, verbatim."""
+        acc = self.acc
+        n_used = 0
+        for t, contrib in zip(batch, contribs):
+            if met(self.phi, self.bound):
+                self.stop = True
+                break
+            if contrib is None:          # chunk retired mid-query
+                acc.drop_pending(t)
+                self.dropped += 1
+                n_used += 1
+                self.bound = acc.query_bound()
+                continue
+            acc.fold_exact(t, *contrib)
+            n_used += 1
+            self.processed += 1
+            self.bound = acc.query_bound()
+        bounds_ = payload["bounds"]
+        spec = int(bounds_[len(batch)] - bounds_[n_used])
+        self.index.adapt_stats.speculative_rows += spec
+        self.speculative += spec
+        self.objects_read += int(bounds_[-1])
+        self.rounds += 1
+        flags = self.adapter.split_flags(batch[:n_used])
+        self.stage.set_owner(self.i)
+        self.stage.stage_apply(self.index, payload, n_used, flags)
+
+    def build_result(self, now: float, t0: float):
+        tk = self.tk
+        eval_s = (self.finish_time if self.finish_time is not None
+                  else now) - t0
+        common = dict(
+            agg=tk.agg, attr=tk.attr, exact=not self.acc.pending,
+            tiles_full=self.n_full, tiles_partial=self.n_partial,
+            tiles_processed=self.processed,
+            objects_read=self.objects_read, read_calls=self.read_calls,
+            batch_rounds=self.rounds, speculative_rows=self.speculative,
+            pruned_chunks=self.pruned,
+            retired_during_query=self.dropped > 0, eval_time_s=eval_s)
+        if tk.kind == "query":
+            value, lo, hi, bound = self.acc.interval()
+            return QueryResult(value=float(value), lo=float(lo),
+                               hi=float(hi), bound=float(bound), **common)
+        values, lo, hi, bin_bound, bound = self.acc.interval()
+        policy_active = self.acc.phi_b is not None
+        return HeatmapResult(
+            bins=tk.bins, values=np.asarray(values, np.float64),
+            lo=np.asarray(lo, np.float64), hi=np.asarray(hi, np.float64),
+            bin_bound=np.asarray(bin_bound, np.float64),
+            bound=float(bound),
+            phi_b=self.acc.phi_b.copy() if policy_active else None,
+            eps_abs=self.acc.eps_abs,
+            bin_met=(self.acc.bin_satisfied(tk.phi)
+                     if policy_active else None), **common)
+
+
+class ServingEngine:
+    """Tick-based scheduler serving N concurrent sessions against one
+    shared adaptive index (see the module docstring).
+
+    ``engine`` may be an existing :class:`AQPEngine` (its index is
+    shared and keeps evolving) or a dataset, from which a private
+    engine is built. ``mode`` picks the default tick execution:
+    ``"batched"`` (micro-batched reads/kernels) or ``"sequential"``
+    (the per-query reference). ``crack_budget`` caps how many queries
+    per tick may stage index mutation (by arrival order; ``None`` ⇒
+    unlimited) — the skip-under-contention knob."""
+
+    def __init__(self, engine, config=None, alpha: float = 1.0, *,
+                 mode: str = "batched",
+                 crack_budget: Optional[int] = None):
+        if not isinstance(engine, AQPEngine):
+            engine = AQPEngine(engine, config, alpha=alpha)
+        self.engine = engine
+        self.index = engine.index
+        if mode not in ("batched", "sequential"):
+            raise ValueError(f"unknown serving mode {mode!r}")
+        self.mode = mode
+        self.crack_budget = crack_budget
+        self.epoch = 0
+        self.last_publish: Dict[str, int] = {"rounds_published": 0,
+                                             "splits_masked": 0}
+        self._sessions: Dict[int, Session] = {}
+        self._next_sid = 0
+        self._queue: List[Ticket] = []
+
+    # ------------------------- sessions ------------------------------ #
+    def open_session(self, name: Optional[str] = None) -> Session:
+        s = Session(self, self._next_sid, name)
+        self._sessions[s.sid] = s
+        self._next_sid += 1
+        return s
+
+    def _drop_session(self, session: Session) -> None:
+        self._sessions.pop(session.sid, None)
+        self._queue = [t for t in self._queue if t.session is not session]
+
+    def _submit(self, ticket: Ticket) -> Ticket:
+        if ticket.session.closed:
+            raise RuntimeError(f"{ticket.session.name} is closed")
+        self._queue.append(ticket)
+        return ticket
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    def _may_crack(self, arrival: int) -> bool:
+        return self.crack_budget is None or arrival < self.crack_budget
+
+    # ------------------------- ticks --------------------------------- #
+    def tick(self, *, mode: Optional[str] = None):
+        """Serve every queued ticket as one epoch: all queries read the
+        frozen pre-tick index, staged refinement publishes atomically
+        at the end. Returns the tickets' results in arrival order."""
+        mode = mode or self.mode
+        tickets, self._queue = self._queue, []
+        if not tickets:
+            return []
+        stage = EpochStage()
+        t0 = time.perf_counter()
+        if mode == "sequential":
+            self._tick_sequential(tickets, stage)
+        elif mode == "batched":
+            self._tick_batched(tickets, stage, t0)
+        else:
+            raise ValueError(f"unknown serving mode {mode!r}")
+        self.last_publish = stage.publish()
+        self.epoch += 1
+        for tk in tickets:
+            tk.session.trace.results.append(tk.result)
+        return [tk.result for tk in tickets]
+
+    def _tick_sequential(self, tickets, stage) -> None:
+        """Reference execution: one private driver per ticket, arrival
+        order, against the same frozen epoch (applies staged)."""
+        for i, tk in enumerate(tickets):
+            stage.set_owner(i)
+            st = stage if self._may_crack(i) else _NULL_STAGE
+            if tk.kind == "query":
+                tk.result = query_mod.evaluate(
+                    self.index, tk.window, tk.agg, tk.attr, phi=tk.phi,
+                    alpha=tk.alpha, batch_k=tk.batch_k, stage=st)
+            else:
+                tk.result = query_mod.evaluate_heatmap(
+                    self.index, tk.window, tk.agg, tk.attr, bins=tk.bins,
+                    phi=tk.phi, alpha=tk.alpha, policy=tk.policy,
+                    batch_k=tk.batch_k, stage=st)
+
+    def _tick_batched(self, tickets, stage, t0: float) -> None:
+        """Micro-batched execution: lock-step rounds, fused reads."""
+        runs = [_QueryRun(i, tk, self.index, stage, self._may_crack(i))
+                for i, tk in enumerate(tickets)]
+        now = time.perf_counter()
+        for qr in runs:
+            if qr.finished:
+                qr.finish_time = now
+        while True:
+            entries = []
+            for qr in runs:
+                if qr.finished:
+                    continue
+                batch = qr.next_batch()
+                if batch is None:
+                    qr.finish_time = time.perf_counter()
+                    continue
+                entries.append((qr, np.asarray(batch, np.int64)))
+            if not entries:
+                break
+            self._execute_round(entries)
+            now = time.perf_counter()
+            for qr, _ in entries:
+                # stamp latency the moment the stopping rule fires
+                if ((qr.stop or qr.pos >= len(qr.order)
+                     or met(qr.phi, qr.bound))
+                        and qr.finish_time is None):
+                    qr.finish_time = now
+        self._canonicalize_hm(tickets)
+        now = time.perf_counter()
+        for qr in runs:
+            qr.tk.result = qr.build_result(now, t0)
+
+    # -- micro-round execution ---------------------------------------- #
+    def _entry_runs(self, batch):
+        """Split one query's round batch into (TileIndex, local_ids,
+        s, e) chunk runs (global prefix coordinates), mirroring
+        :meth:`ChunkIndexSet._read_batch_runs` routing."""
+        index = self.index
+        if not isinstance(index, ChunkIndexSet):
+            return [(index, batch, 0, len(batch))]
+        out = []
+        for s, e in index._chunk_runs(batch):
+            ti, _ = index.resolve(int(batch[s]))
+            out.append((ti, batch[s:e] % index._stride, s, e))
+        return out
+
+    def _execute_round(self, entries) -> None:
+        """One micro-batched round: fuse every active query's batch
+        into one gathered read per (part, attribute) and one packed
+        multi-window kernel pass per family (+ per heatmap bin
+        resolution), then fold/stage per query exactly as its private
+        driver would."""
+        # item: one (query, chunk-run) piece of the round
+        items = []      # dicts; gather-group order assigned below
+        per_entry = []  # (qr, batch, [item indices in run order])
+        for qr, batch in entries:
+            idxs = []
+            for ti, local, s, e in self._entry_runs(batch):
+                items.append({"qr": qr, "ti": ti, "local": local,
+                              "s": s, "e": e})
+                idxs.append(len(items) - 1)
+            per_entry.append((qr, batch, idxs))
+
+        # group items by (part, attr); scalar items first, then heatmap
+        # items grouped by bin resolution — per-family contiguity lets
+        # one kernel pass cover each family
+        groups: Dict[tuple, List[int]] = {}
+        for j, it in enumerate(items):
+            tk = it["qr"].tk
+            fam = ((0,) if tk.kind == "query"
+                   else (1, tk.bins[0], tk.bins[1]))
+            groups.setdefault((id(it["ti"]), tk.attr), []).append(j)
+            it["fam"] = fam
+        for key, js in groups.items():
+            js.sort(key=lambda j: (items[j]["fam"], j))
+            self._read_group([items[j] for j in js])
+
+        # per query: reassemble contribs + payload across its runs and
+        # run the driver's fold/stage epilogue
+        for qr, batch, idxs in per_entry:
+            contribs = []
+            for j in idxs:
+                contribs.extend(items[j]["contribs"])
+            if not isinstance(self.index, ChunkIndexSet):
+                payload = items[idxs[0]]["payload"]
+            else:
+                runs, g_bounds, base = [], [np.zeros(1, np.int64)], 0
+                for j in idxs:
+                    it = items[j]
+                    runs.append((it["ti"], it["payload"], it["s"],
+                                 it["e"]))
+                    g_bounds.append(base + it["payload"]["bounds"][1:])
+                    base += int(it["payload"]["bounds"][-1])
+                payload = {"tile_ids": batch,
+                           "bounds": np.concatenate(g_bounds),
+                           "runs": runs, "attr": qr.tk.attr}
+            qr.fold(batch, contribs, payload)
+
+    def _read_group(self, group_items) -> None:
+        """One gathered read + packed kernel passes for every item of a
+        (part, attr) group; writes ``contribs``/``payload`` per item."""
+        ti = group_items[0]["ti"]
+        attr = group_items[0]["qr"].tk.attr
+        ti.ensure_attr(attr)
+        if ti.ds.closed:
+            # the whole part retired: degrade every item (the driver
+            # drops the tiles from its answer set)
+            for it in group_items:
+                it["contribs"], it["payload"] = ti._dead_batch(
+                    it["local"], attr)
+                it["qr"].read_calls += 1
+            return
+        all_local = np.concatenate([it["local"] for it in group_items])
+        idx, bounds = ti._gather_segments(all_local)
+        rows = ti.perm[idx]
+        vals = ti.ds.read_values(attr, rows)   # ← ONE accounted read
+        xs, ys = ti.x_s[idx], ti.y_s[idx]
+        ti.adapt_stats.batch_rounds += 1
+
+        # per-item segment spans within the group gather
+        seg0 = 0
+        for it in group_items:
+            it["seg"] = (seg0, seg0 + len(it["local"]))
+            seg0 += len(it["local"])
+            it["qr"].read_calls += 1
+
+        # one packed multi-window pass per family
+        fams: Dict[tuple, List[dict]] = {}
+        for it in group_items:
+            fams.setdefault(it["fam"], []).append(it)
+        for fam, its in fams.items():
+            s0, s1 = its[0]["seg"][0], its[-1]["seg"][1]
+            a, b = int(bounds[s0]), int(bounds[s1])
+            f_bounds = bounds[s0:s1 + 1] - bounds[s0]
+            windows = np.concatenate([
+                np.broadcast_to(
+                    np.asarray(it["qr"].tk.window, np.float64),
+                    (len(it["local"]), 4))
+                for it in its])
+            if fam[0] == 0:
+                agg = self._scalar_multi(ti, xs[a:b], ys[a:b], vals[a:b],
+                                         f_bounds, windows)
+                contribs = [
+                    (int(agg[s, 0]), float(agg[s, 1]), float(agg[s, 2]),
+                     float(agg[s, 3]))
+                    if agg[s, 0] else (0, 0.0, np.inf, -np.inf)
+                    for s in range(s1 - s0)]
+            else:
+                bx, by = fam[1], fam[2]
+                # forced f64 host mirror, like read_batch_heatmap: bin
+                # counts must match the axis-index binning bit-for-bit
+                agg = ref_mod.segment_window_bin_agg_multi_np(
+                    xs[a:b], ys[a:b], vals[a:b], f_bounds, windows,
+                    bx, by)
+                ti.adapt_stats.kernel_calls += 1
+                contribs = [
+                    (agg[s, :, 0].astype(np.int64), agg[s, :, 1].copy(),
+                     agg[s, :, 2].copy(), agg[s, :, 3].copy())
+                    for s in range(s1 - s0)]
+            pos = 0
+            for it in its:
+                it["contribs"] = contribs[pos:pos + len(it["local"])]
+                pos += len(it["local"])
+
+        # per-item payloads: slices of the group gather — identical
+        # content to what TileIndex.read_batch(_heatmap) would build
+        for it in group_items:
+            s0, s1 = it["seg"]
+            a, b = int(bounds[s0]), int(bounds[s1])
+            payload = {"tile_ids": it["local"], "idx": idx[a:b],
+                       "bounds": bounds[s0:s1 + 1] - bounds[s0],
+                       "xs": xs[a:b], "ys": ys[a:b], "vals": vals[a:b],
+                       "attr": attr}
+            tk = it["qr"].tk
+            if tk.kind == "heatmap":
+                payload["split_edges"] = ti._heatmap_split_edges(
+                    it["local"], tk.window, tk.bins)
+                cache = ti.heatmap_cache(tk.window, tk.bins, attr)
+                payload["hm_key"] = (ti._hm_key if cache is not None
+                                     else None)
+                payload["hm_contribs"] = it["contribs"]
+            it["payload"] = payload
+
+    def _scalar_multi(self, ti, xs, ys, vals, bounds, windows):
+        """One ``segment_window_agg_multi`` pass; device backends are
+        chunked to the packed kernels' static segment limit (the host
+        "np" mirror — the default control plane — has none)."""
+        n_seg = len(bounds) - 1
+        if ti._backend == "np" or n_seg <= MAX_SEGMENTS:
+            ti.adapt_stats.kernel_calls += 1
+            return np.asarray(ops.segment_window_agg_multi(
+                xs, ys, vals, bounds, windows, backend=ti._backend))
+        outs = []
+        for s in range(0, n_seg, MAX_SEGMENTS):
+            e = min(s + MAX_SEGMENTS, n_seg)
+            a, b = int(bounds[s]), int(bounds[e])
+            ti.adapt_stats.kernel_calls += 1
+            outs.append(np.asarray(ops.segment_window_agg_multi(
+                xs[a:b], ys[a:b], vals[a:b], bounds[s:e + 1] - bounds[s],
+                windows[s:e], backend=ti._backend)))
+        return np.concatenate(outs)
+
+    def _canonicalize_hm(self, tickets) -> None:
+        """Re-key each part's session bin-grid registry to the LAST
+        overlapping heatmap ticket (arrival order) — the state the
+        sequential reference naturally ends a tick in, whatever order
+        the micro rounds interleaved reads (rotation is what gates
+        which staged registrations survive publication)."""
+        hm = [tk for tk in tickets if tk.kind == "heatmap"]
+        for tk in hm:
+            for ti in self._parts_silent(tk.window):
+                ti.heatmap_cache(tk.window, tk.bins, tk.attr)
+
+    def _parts_silent(self, window):
+        """Window-overlapping, already-materialized parts — without the
+        pruning accounting of :meth:`ChunkIndexSet.parts`."""
+        index = self.index
+        if not isinstance(index, ChunkIndexSet):
+            return [index]
+        out = []
+        for chunk in index.ds.chunks():
+            ti = index._indexes.get(chunk.chunk_id)
+            if ti is not None and _chunk_overlaps(chunk.bbox, window):
+                out.append(ti)
+        return out
+
+
+__all__ = ["ServingEngine", "Session", "Ticket", "NullStage"]

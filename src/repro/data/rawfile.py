@@ -118,6 +118,13 @@ class RawDataset:
         """(x0, y0, x1, y1) bounding box of the axis attributes."""
         return self._domain
 
+    @property
+    def closed(self) -> bool:
+        """True once :meth:`close` ran (chunk retired) — readers probe
+        this to degrade gracefully instead of tripping the accounted-read
+        guard mid-refinement."""
+        return self._closed
+
     def close(self) -> None:
         """Release column storage (chunk retirement). Accounted reads
         after close raise — a retired chunk must never be read."""

@@ -29,7 +29,9 @@ from .window_agg import window_agg_pallas, LANES, DEFAULT_BLOCK_ROWS
 from .bin_agg import bin_agg_pallas
 from .segment_agg import (segment_window_agg_pallas, segment_bin_agg_pallas,
                           segment_bin_agg_edges_pallas,
-                          segment_window_bin_agg_pallas)
+                          segment_window_bin_agg_pallas,
+                          segment_window_agg_multi_pallas,
+                          segment_window_bin_agg_multi_pallas)
 
 
 def default_backend() -> str:
@@ -349,6 +351,87 @@ def segment_window_bin_agg(xs, ys, vals, boundaries, window, *, bx, by,
         jnp.asarray(n, jnp.int32), n_seg, bx, by, backend, interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("n_seg", "backend", "interpret"))
+def _segment_window_agg_multi_flat(xs, ys, vals, sids, windows, n, n_seg,
+                                   backend, interpret):
+    if backend == "jnp":
+        valid = jnp.arange(xs.shape[0]) < n
+        return ref.segment_window_agg_multi_ref(xs, ys, vals, sids, windows,
+                                                valid, n_seg)
+    xs2, ys2, vs2, sid2, valid2 = pack2d(xs, ys, vals, sids, n=xs.shape[0])
+    valid2 = valid2 * (jnp.arange(valid2.size).reshape(valid2.shape) <
+                       n).astype(jnp.int8)
+    return segment_window_agg_multi_pallas(xs2, ys2, vs2, sid2, valid2,
+                                           windows, n_seg=n_seg,
+                                           interpret=interpret)
+
+
+def segment_window_agg_multi(xs, ys, vals, boundaries, windows, *,
+                             backend=None, interpret=True):
+    """Per-segment (count, sum, min, max) where segment s is filtered by
+    its OWN closed ``windows[s]`` — the multi-query serving primitive:
+    the concatenated (query, tile) streams of one serving tick answer N
+    different viewports in a single packed kernel pass. ``windows`` is
+    ``(S, 4)``. Backend semantics as in :func:`segment_window_agg`
+    ("np" ⇒ float64 host mirror that delegates each segment slice to the
+    single-window path, bit-for-bit the per-query sequential reference).
+    """
+    backend = backend or default_backend()
+    boundaries = np.asarray(boundaries, np.int64)
+    if backend == "np":
+        return ref.segment_window_agg_multi_np(xs, ys, vals, boundaries,
+                                               windows)
+    n_seg = len(boundaries) - 1
+    n = int(boundaries[-1])
+    sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
+    xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
+    return _segment_window_agg_multi_flat(
+        jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(vals),
+        jnp.asarray(sids), jnp.asarray(windows, jnp.float32),
+        jnp.asarray(n, jnp.int32), n_seg, backend, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_seg", "bx", "by", "backend",
+                                             "interpret"))
+def _segment_window_bin_agg_multi_flat(xs, ys, vals, sids, windows, n, n_seg,
+                                       bx, by, backend, interpret):
+    if backend == "jnp":
+        valid = jnp.arange(xs.shape[0]) < n
+        return ref.segment_window_bin_agg_multi_ref(xs, ys, vals, sids,
+                                                    windows, (bx, by), valid,
+                                                    n_seg)
+    xs2, ys2, vs2, sid2, valid2 = pack2d(xs, ys, vals, sids, n=xs.shape[0])
+    valid2 = valid2 * (jnp.arange(valid2.size).reshape(valid2.shape) <
+                       n).astype(jnp.int8)
+    return segment_window_bin_agg_multi_pallas(xs2, ys2, vs2, sid2, valid2,
+                                               windows, n_seg=n_seg, bx=bx,
+                                               by=by, interpret=interpret)
+
+
+def segment_window_bin_agg_multi(xs, ys, vals, boundaries, windows, *, bx,
+                                 by, backend=None, interpret=True):
+    """Per-segment, per-bin (count, sum, min, max) where segment s is
+    binned by the ``bx × by`` grid of its OWN window ``windows[s]`` — the
+    multi-query heatmap serving primitive. All queries in the packed tick
+    must share a bin resolution (bx, by); windows may differ freely.
+    Returns ``(S, bx*by, 4)``. Backend semantics as in
+    :func:`segment_window_agg_multi`.
+    """
+    backend = backend or default_backend()
+    boundaries = np.asarray(boundaries, np.int64)
+    if backend == "np":
+        return ref.segment_window_bin_agg_multi_np(xs, ys, vals, boundaries,
+                                                   windows, bx, by)
+    n_seg = len(boundaries) - 1
+    n = int(boundaries[-1])
+    sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
+    xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
+    return _segment_window_bin_agg_multi_flat(
+        jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(vals),
+        jnp.asarray(sids), jnp.asarray(windows, jnp.float32),
+        jnp.asarray(n, jnp.int32), n_seg, bx, by, backend, interpret)
+
+
 def window_count(xs, ys, window, *, n=None, backend=None):
     """Count of objects in window (axis attributes only — no file access)."""
     agg = window_agg(xs, ys, jnp.zeros_like(jnp.asarray(xs, jnp.float32)),
@@ -364,4 +447,5 @@ def window_mask_np(xs, ys, window):
 
 __all__ = ["window_agg", "bin_agg", "segment_window_agg", "segment_bin_agg",
            "segment_bin_agg_edges", "segment_window_bin_agg",
+           "segment_window_agg_multi", "segment_window_bin_agg_multi",
            "window_count", "window_mask_np", "pack2d", "default_backend"]

@@ -137,6 +137,62 @@ def segment_window_bin_agg_ref(xs, ys, vals, sids, window, grid, valid,
     return jnp.stack(out)
 
 
+def segment_window_agg_multi_ref(xs, ys, vals, sids, windows, valid,
+                                 n_seg):
+    """Per-segment (count, sum, min, max), each segment under its OWN
+    window — the multi-query serving primitive.
+
+    Like :func:`segment_window_agg_ref` but ``windows`` is ``(n_seg, 4)``
+    and segment s selects against ``windows[s]``: one packed pass
+    answers one (query, tile) stream per segment for MANY concurrent
+    queries with different viewports. Returns float32 ``(n_seg, 4)``.
+    """
+    vm = vals.astype(jnp.float32)
+    out = []
+    for s in range(n_seg):
+        m = window_mask(xs, ys, windows[s], valid) & (sids == s)
+        cnt = jnp.sum(m, dtype=jnp.float32)
+        total = jnp.sum(jnp.where(m, vm, 0.0), dtype=jnp.float32)
+        mn = jnp.min(jnp.where(m, vm, jnp.inf))
+        mx = jnp.max(jnp.where(m, vm, -jnp.inf))
+        out.append(jnp.stack([cnt, total, mn, mx]))
+    return jnp.stack(out)
+
+
+def segment_window_bin_agg_multi_ref(xs, ys, vals, sids, windows, grid,
+                                     valid, n_seg):
+    """Per-segment, per-bin aggregates; segment s binned by the bx×by
+    grid of its OWN window ``windows[s]`` — the multi-query heatmap
+    serving primitive (one shared (bx, by) per call; the scheduler
+    groups same-bin-shape queries into a pass). Returns float32
+    ``(n_seg, bx*by, 4)``; bin id = by_row * bx + bx_col.
+    """
+    bx, by = grid
+    vm = vals.astype(jnp.float32)
+    out = []
+    for s in range(n_seg):
+        w = windows[s]
+        m = window_mask(xs, ys, w, valid) & (sids == s)
+        x0, y0 = w[0], w[1]
+        cw = jnp.maximum((w[2] - w[0]) / bx, 1e-30)
+        ch = jnp.maximum((w[3] - w[1]) / by, 1e-30)
+        cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32),
+                      0, bx - 1)
+        cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32),
+                      0, by - 1)
+        cid = cy * bx + cx
+        cells = []
+        for c in range(bx * by):
+            mc = m & (cid == c)
+            cnt = jnp.sum(mc, dtype=jnp.float32)
+            total = jnp.sum(jnp.where(mc, vm, 0.0), dtype=jnp.float32)
+            mn = jnp.min(jnp.where(mc, vm, jnp.inf))
+            mx = jnp.max(jnp.where(mc, vm, -jnp.inf))
+            cells.append(jnp.stack([cnt, total, mn, mx]))
+        out.append(jnp.stack(cells))
+    return jnp.stack(out)
+
+
 def segment_bin_agg_edges_ref(xs, ys, vals, sids, x_edges, y_edges, valid,
                               n_seg):
     """Per-segment, per-cell aggregates under per-segment SPLIT EDGES.
@@ -331,6 +387,54 @@ def segment_bin_agg_edges_np(xs, ys, vals, boundaries, x_edges, y_edges):
         else:
             out[c] = (0, 0.0, np.inf, -np.inf)
     return out.reshape(n_seg, k, 4)
+
+
+def segment_window_agg_multi_np(xs, ys, vals, boundaries, windows):
+    """Per-contiguous-segment (count, sum, min, max), each segment under
+    its OWN window (f64 ``(S, 4)``).
+
+    Host mirror of :func:`segment_window_agg_multi_ref` in the
+    contiguous layout. Delegates each segment's slice to
+    :func:`segment_window_agg_np`, so segment s's row is BIT-FOR-BIT
+    what a single-window call over the same stream produces — the
+    serving scheduler's packed pass answers each query exactly as that
+    query's own per-query round would.
+    """
+    windows = np.asarray(windows, np.float64)
+    n_seg = len(boundaries) - 1
+    out = np.empty((n_seg, 4), np.float64)
+    two = np.array([0, 0], np.int64)
+    for s in range(n_seg):
+        a, b = int(boundaries[s]), int(boundaries[s + 1])
+        two[1] = b - a
+        out[s] = segment_window_agg_np(xs[a:b], ys[a:b], vals[a:b],
+                                       two, windows[s])[0]
+    return out
+
+
+def segment_window_bin_agg_multi_np(xs, ys, vals, boundaries, windows,
+                                    bx, by):
+    """Per-contiguous-segment, per-bin aggregates, each segment binned
+    by the bx×by grid of its OWN window (f64 ``(S, bx*by, 4)``).
+
+    Host mirror of :func:`segment_window_bin_agg_multi_ref` in the
+    contiguous layout; per segment it is bit-for-bit a single-window
+    :func:`segment_window_bin_agg_np` call over the same stream (same
+    per-cell sorted-slice f64 accumulation), which is what lets the
+    serving layer's micro-batched heatmap pass equal the per-query
+    reference exactly.
+    """
+    windows = np.asarray(windows, np.float64)
+    n_seg = len(boundaries) - 1
+    k = bx * by
+    out = np.empty((n_seg, k, 4), np.float64)
+    two = np.array([0, 0], np.int64)
+    for s in range(n_seg):
+        a, b = int(boundaries[s]), int(boundaries[s + 1])
+        two[1] = b - a
+        out[s] = segment_window_bin_agg_np(xs[a:b], ys[a:b], vals[a:b],
+                                           two, windows[s], bx, by)[0]
+    return out
 
 
 def window_bin_ids_np(xs, ys, window, bx, by):

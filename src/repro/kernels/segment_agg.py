@@ -120,6 +120,74 @@ def segment_window_agg_pallas(xs2d, ys2d, vals2d, sid2d, valid2d, window,
     return jnp.stack([cnt, s, mn, mx], axis=-1)
 
 
+def _make_segment_window_agg_multi_kernel(n_seg: int):
+    def kernel(win_ref, x_ref, y_ref, v_ref, sid_ref, valid_ref, out_ref):
+        xs = x_ref[...]
+        ys = y_ref[...]
+        vs = v_ref[...]
+        sid = sid_ref[...]
+        valid = valid_ref[...] != 0
+        for s in range(n_seg):  # static unroll: segment s has its OWN
+            # window (the multi-query serving pass) — per-segment VREG
+            # compares against the resident planes, no extra bytes moved
+            x0 = win_ref[s, 0]
+            y0 = win_ref[s, 1]
+            x1 = win_ref[s, 2]
+            y1 = win_ref[s, 3]
+            m = ((xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1)
+                 & valid & (sid == s))
+            out_ref[0, s, 0] = jnp.sum(m.astype(jnp.float32))
+            out_ref[0, s, 1] = jnp.sum(jnp.where(m, vs, 0.0))
+            out_ref[0, s, 2] = jnp.min(jnp.where(m, vs, jnp.inf))
+            out_ref[0, s, 3] = jnp.max(jnp.where(m, vs, -jnp.inf))
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_seg", "block_rows", "interpret"))
+def segment_window_agg_multi_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
+                                    windows, *, n_seg,
+                                    block_rows=DEFAULT_BLOCK_ROWS,
+                                    interpret=True):
+    """Per-segment window aggregation with PER-SEGMENT windows.
+
+    The multi-session serving primitive: one packed pass over the union
+    stream of a scheduler tick, where segment s is one (query, tile)
+    stream selected against that query's own viewport ``windows[s]``
+    (float32 ``(n_seg, 4)``, ±inf edges allowed). Other args mirror
+    :func:`segment_window_agg_pallas`. Returns float32 ``(n_seg, 4)``.
+    """
+    assert n_seg <= MAX_SEGMENTS, n_seg
+    rows = xs2d.shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = rows // block_rows
+    win2d = windows.reshape(n_seg, 4).astype(jnp.float32)
+    valid2d = valid2d.astype(jnp.int8)
+
+    partial = pl.pallas_call(
+        _make_segment_window_agg_multi_kernel(n_seg),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((n_seg, 4), lambda i: (0, 0)),       # windows (broadcast)
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_seg, 4), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid, n_seg, 4), jnp.float32),
+        interpret=interpret,
+    )(win2d, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
+      vals2d.astype(jnp.float32), sid2d.astype(jnp.float32), valid2d)
+
+    cnt = jnp.sum(partial[:, :, 0], axis=0)
+    s = jnp.sum(partial[:, :, 1], axis=0)
+    mn = jnp.min(partial[:, :, 2], axis=0)
+    mx = jnp.max(partial[:, :, 3], axis=0)
+    return jnp.stack([cnt, s, mn, mx], axis=-1)
+
+
 def _make_segment_window_bin_agg_kernel(n_seg: int, bx: int, by: int):
     k = bx * by
 
@@ -184,6 +252,89 @@ def segment_window_bin_agg_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
         grid=(grid,),
         in_specs=[
             pl.BlockSpec((1, 4), lambda i: (0, 0)),           # window (broadcast)
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_seg * k, 4), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid, n_seg * k, 4), jnp.float32),
+        interpret=interpret,
+    )(win2d, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
+      vals2d.astype(jnp.float32), sid2d.astype(jnp.float32), valid2d)
+
+    cnt = jnp.sum(partial[:, :, 0], axis=0)
+    s = jnp.sum(partial[:, :, 1], axis=0)
+    mn = jnp.min(partial[:, :, 2], axis=0)
+    mx = jnp.max(partial[:, :, 3], axis=0)
+    return jnp.stack([cnt, s, mn, mx], axis=-1).reshape(n_seg, k, 4)
+
+
+def _make_segment_window_bin_agg_multi_kernel(n_seg: int, bx: int, by: int):
+    k = bx * by
+
+    def kernel(win_ref, x_ref, y_ref, v_ref, sid_ref, valid_ref, out_ref):
+        xs = x_ref[...]
+        ys = y_ref[...]
+        vs = v_ref[...]
+        sid = sid_ref[...]
+        valid = valid_ref[...] != 0
+        for s in range(n_seg):  # static unroll over segments: each has
+            # its OWN window AND the bx×by grid laid over it
+            x0 = win_ref[s, 0]
+            y0 = win_ref[s, 1]
+            x1 = win_ref[s, 2]
+            y1 = win_ref[s, 3]
+            inw = (xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1) & valid
+            cw = jnp.maximum((x1 - x0) / bx, 1e-30)
+            ch = jnp.maximum((y1 - y0) / by, 1e-30)
+            cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32),
+                          0, bx - 1)
+            cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32),
+                          0, by - 1)
+            cid = cy * bx + cx
+            ms = inw & (sid == s)
+            for c in range(k):  # …and window bins: S·K masked reductions
+                m = ms & (cid == c)
+                out_ref[0, s * k + c, 0] = jnp.sum(m.astype(jnp.float32))
+                out_ref[0, s * k + c, 1] = jnp.sum(jnp.where(m, vs, 0.0))
+                out_ref[0, s * k + c, 2] = jnp.min(jnp.where(m, vs, jnp.inf))
+                out_ref[0, s * k + c, 3] = jnp.max(
+                    jnp.where(m, vs, -jnp.inf))
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_seg", "bx", "by", "block_rows",
+                                    "interpret"))
+def segment_window_bin_agg_multi_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
+                                        windows, *, n_seg, bx, by,
+                                        block_rows=DEFAULT_BLOCK_ROWS,
+                                        interpret=True):
+    """Per-segment, per-bin aggregation with PER-SEGMENT windows.
+
+    The multi-session heatmap serving primitive: segment s is binned by
+    the ``bx × by`` grid of its own window ``windows[s]`` (one shared
+    bin shape per call — the scheduler groups same-shape heatmap
+    queries into a pass). Args mirror
+    :func:`segment_window_bin_agg_pallas` with ``windows`` float32
+    ``(n_seg, 4)``. Returns float32 ``(n_seg, bx*by, 4)``.
+    """
+    k = bx * by
+    assert n_seg <= MAX_SEGMENTS, n_seg
+    assert n_seg * k <= MAX_UNROLL, (n_seg, bx, by)
+    rows = xs2d.shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = rows // block_rows
+    win2d = windows.reshape(n_seg, 4).astype(jnp.float32)
+    valid2d = valid2d.astype(jnp.int8)
+
+    partial = pl.pallas_call(
+        _make_segment_window_bin_agg_multi_kernel(n_seg, bx, by),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((n_seg, 4), lambda i: (0, 0)),       # windows (broadcast)
             pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
             pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
             pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),

@@ -34,16 +34,20 @@ def main(argv=None):
         cfg.vision_patches if cfg.family == "vlm" else 0)
     state = init_serve_state(cfg, args.batch, max_len, jnp.float32)
 
-    k = jax.random.key(1)
-    prompts = jax.random.randint(k, (args.batch, args.prompt_len), 0,
+    # one key per stream: reusing a key across randint/normal draws
+    # correlated inputs (prompts and frames/patches would share bits)
+    k_prompts, k_frames, k_patches = jax.random.split(jax.random.key(1), 3)
+    prompts = jax.random.randint(k_prompts,
+                                 (args.batch, args.prompt_len), 0,
                                  cfg.vocab)
     extras = {}
     if cfg.family == "encdec":
         extras["frames"] = jax.random.normal(
-            k, (args.batch, cfg.encoder_seq, cfg.d_model), jnp.float32)
+            k_frames, (args.batch, cfg.encoder_seq, cfg.d_model),
+            jnp.float32)
     if cfg.family == "vlm":
         extras["patches"] = jax.random.normal(
-            k, (args.batch, cfg.vision_patches, cfg.vision_d),
+            k_patches, (args.batch, cfg.vision_patches, cfg.vision_d),
             jnp.float32)
 
     pf = jax.jit(lambda p, t, s: prefill_step(cfg, p, t, s, extras))

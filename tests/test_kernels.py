@@ -349,3 +349,67 @@ def test_segment_window_agg_everywhere_is_full_segment():
                 a[s, 1], vs[i:j].sum(dtype=np.float64), rtol=0)
             assert a[s, 2] == vs[i:j].min()
             assert a[s, 3] == vs[i:j].max()
+
+
+@pytest.mark.parametrize("lens", [[1], [0, 37, 500, 128, 3],
+                                  [4096, 1, 4096], [256] * 8])
+def test_segment_window_agg_multi_backends_agree(lens):
+    """Serving-tick kernel: each segment filtered by its OWN window."""
+    xs, ys, vs, bounds = _segments(lens)
+    rng = np.random.default_rng(17)
+    n_seg = len(lens)
+    lo = rng.uniform(0, 60, (n_seg, 2))
+    wins = np.concatenate(
+        [lo, lo + rng.uniform(20, 40, (n_seg, 2))], axis=1
+    ).astype(np.float32)
+    a = np.asarray(ops.segment_window_agg_multi(xs, ys, vs, bounds, wins,
+                                                backend="np"))
+    b = np.asarray(ops.segment_window_agg_multi(xs, ys, vs, bounds, wins,
+                                                backend="jnp"))
+    c = np.asarray(ops.segment_window_agg_multi(xs, ys, vs, bounds, wins,
+                                                backend="pallas"))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=2e-3)
+    np.testing.assert_allclose(b, c, rtol=1e-5, atol=2e-3)
+    np.testing.assert_array_equal(a[:, 0], b[:, 0])  # counts exact
+    np.testing.assert_array_equal(b[:, 0], c[:, 0])
+    # packed multi-window call ≡ one single-window call per segment —
+    # bit-for-bit on the np mirror (what makes a micro-batched serving
+    # tick equal the sequential reference)
+    for s in range(n_seg):
+        sl = slice(bounds[s], bounds[s + 1])
+        solo = np.asarray(ops.segment_window_agg(
+            xs[sl], ys[sl], vs[sl], [0, lens[s]], wins[s],
+            backend="np"))[0]
+        np.testing.assert_array_equal(a[s], solo)
+
+
+@pytest.mark.parametrize("lens", [[1, 300], [0, 37, 500, 128, 3],
+                                  [600] * 5])
+@pytest.mark.parametrize("grid", [(2, 2), (4, 3)])
+def test_segment_window_bin_agg_multi_backends_agree(lens, grid):
+    """Heatmap serving-tick kernel: per-segment own window + bin grid."""
+    bx, by = grid
+    xs, ys, vs, bounds = _segments(lens)
+    rng = np.random.default_rng(19)
+    n_seg = len(lens)
+    lo = rng.uniform(0, 50, (n_seg, 2))
+    wins = np.concatenate(
+        [lo, lo + rng.uniform(25, 45, (n_seg, 2))], axis=1
+    ).astype(np.float32)
+    a = np.asarray(ops.segment_window_bin_agg_multi(
+        xs, ys, vs, bounds, wins, bx=bx, by=by, backend="np"))
+    b = np.asarray(ops.segment_window_bin_agg_multi(
+        xs, ys, vs, bounds, wins, bx=bx, by=by, backend="jnp"))
+    c = np.asarray(ops.segment_window_bin_agg_multi(
+        xs, ys, vs, bounds, wins, bx=bx, by=by, backend="pallas"))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=2e-3)
+    np.testing.assert_allclose(b, c, rtol=1e-5, atol=2e-3)
+    np.testing.assert_array_equal(a[:, :, 0], b[:, :, 0])  # counts exact
+    np.testing.assert_array_equal(b[:, :, 0], c[:, :, 0])
+    # packed ≡ per-segment single-window bin kernel, bit-for-bit (np)
+    for s in range(n_seg):
+        sl = slice(bounds[s], bounds[s + 1])
+        solo = np.asarray(ops.segment_window_bin_agg(
+            xs[sl], ys[sl], vs[sl], [0, lens[s]], wins[s], bx=bx, by=by,
+            backend="np"))[0]
+        np.testing.assert_array_equal(a[s], solo)

@@ -1,0 +1,315 @@
+"""Concurrent serving engine: epoch isolation, micro-batch ≡ sequential
+parity, skip-under-contention, and mid-session retire degradation."""
+import numpy as np
+import pytest
+
+from repro.core import AQPEngine, IndexConfig, ServingEngine
+from repro.core.index import ChunkIndexSet, EpochStage, TileIndex
+from repro.data.chunked import ChunkedDataset
+from repro.data.rawfile import RawDataset
+
+PHI = 0.05
+# answer fields that must match bit-for-bit across serving modes;
+# cost fields (objects_read/read_calls/batch_rounds/eval_time_s) are
+# attribution and legitimately differ
+ANSWER_FIELDS = ("value", "lo", "hi", "bound", "exact", "tiles_full",
+                 "tiles_partial", "tiles_processed", "speculative_rows",
+                 "retired_during_query")
+
+
+def _dataset(n=60_000, seed=0):
+    rng = np.random.default_rng(seed)
+    xs = rng.uniform(0, 1000, n)
+    ys = rng.uniform(0, 1000, n)
+    a0 = (xs / 10 + rng.normal(0, 5, n) + 100).astype(np.float64)
+    return RawDataset(xs, ys, {"a0": a0})
+
+
+def _server(seed=0, *, chunked=False, mode="batched", crack_budget=None,
+            n=60_000):
+    ds = _dataset(n, seed)
+    if chunked:
+        ds = ChunkedDataset.from_dataset(ds)
+    cfg = IndexConfig(grid0=(8, 8), min_split_count=256,
+                      init_metadata_attrs=("a0",))
+    return ServingEngine(AQPEngine(ds, cfg), mode=mode,
+                         crack_budget=crack_budget)
+
+
+# a deterministic two-session interleaving: per tick, each session's
+# (window, kind) submissions in arrival order
+def _script(rng):
+    ticks = []
+    for _ in range(3):
+        subs = []
+        for sid in range(2):
+            cx, cy = rng.uniform(150, 850, 2)
+            w = rng.uniform(60, 200)
+            subs.append((sid, "query",
+                         (cx - w, cy - w, cx + w, cy + w), None))
+        # session 1 also pans a heatmap over session 0's region —
+        # same-tile contention between the two sessions
+        subs.append((1, "heatmap", subs[0][2], (4, 4)))
+        ticks.append(subs)
+    return ticks
+
+
+def _play(server, sessions, ticks, *, phi=PHI):
+    out = []
+    for subs in ticks:
+        for sid, kind, win, bins in subs:
+            s = sessions[sid]
+            if kind == "query":
+                s.query(win, "mean", "a0", phi=phi)
+            else:
+                s.heatmap(win, "mean", "a0", bins=bins, phi=phi)
+        out.extend(server.tick())
+    return out
+
+
+def _parts(index):
+    if isinstance(index, TileIndex):
+        return [index]
+    return [index._indexes[k] for k in sorted(index._indexes)]
+
+
+def _fingerprint(index):
+    return [(ti.n_tiles, int(ti.active.sum()), ti.count[:ti.n_tiles].copy(),
+             ti.perm.copy(),
+             {a: (v[:ti.n_tiles].copy(),
+                  ti.meta_min[a][:ti.n_tiles].copy(),
+                  ti.meta_max[a][:ti.n_tiles].copy(),
+                  ti.meta_valid[a][:ti.n_tiles].copy())
+              for a, v in ti.meta_sum.items()})
+            for ti in _parts(index)]
+
+
+def _assert_fingerprint_equal(fa, fb):
+    assert len(fa) == len(fb)
+    for (n1, a1, c1, p1, m1), (n2, a2, c2, p2, m2) in zip(fa, fb):
+        assert n1 == n2 and a1 == a2
+        np.testing.assert_array_equal(c1, c2)
+        np.testing.assert_array_equal(p1, p2)
+        assert m1.keys() == m2.keys()
+        for k in m1:
+            for x, y in zip(m1[k], m2[k]):
+                np.testing.assert_array_equal(x, y)
+
+
+def _assert_answers_equal(ra, rb):
+    assert type(ra) is type(rb)
+    for f in ANSWER_FIELDS:
+        if not hasattr(ra, f):
+            continue
+        va, vb = getattr(ra, f), getattr(rb, f)
+        if isinstance(va, np.ndarray):
+            np.testing.assert_array_equal(va, vb, err_msg=f)
+        else:
+            assert va == vb, (f, va, vb)
+    if hasattr(ra, "values"):       # heatmap grids
+        np.testing.assert_array_equal(ra.values, rb.values)
+        np.testing.assert_array_equal(ra.bin_bound, rb.bin_bound)
+
+
+@pytest.mark.parametrize("chunked", [False, True])
+@pytest.mark.parametrize("crack_budget", [None, 1])
+def test_batched_tick_equals_sequential(chunked, crack_budget):
+    """The tentpole contract: a micro-batched tick produces bit-for-bit
+    the same answers AND the same published index evolution as the
+    per-query sequential reference — with and without the
+    skip-under-contention budget."""
+    sa = _server(chunked=chunked, mode="batched",
+                 crack_budget=crack_budget)
+    sb = _server(chunked=chunked, mode="sequential",
+                 crack_budget=crack_budget)
+    ses_a = [sa.open_session() for _ in range(2)]
+    ses_b = [sb.open_session() for _ in range(2)]
+    ticks = _script(np.random.default_rng(7))
+    ra = _play(sa, ses_a, ticks)
+    rb = _play(sb, ses_b, ticks)
+    assert len(ra) == len(rb) == sum(len(t) for t in ticks)
+    for x, y in zip(ra, rb):
+        _assert_answers_equal(x, y)
+    _assert_fingerprint_equal(_fingerprint(sa.index),
+                              _fingerprint(sb.index))
+    assert sa.last_publish == sb.last_publish
+
+
+def test_oracle_containment_while_cracking():
+    """Every answer served during active index cracking keeps its
+    deterministic guarantee: truth ∈ [lo, hi] and bound ≤ φ."""
+    server = _server()
+    sessions = [server.open_session() for _ in range(2)]
+    tickets = []
+    rng = np.random.default_rng(11)
+    for _ in range(4):
+        for s in sessions:
+            cx, cy = rng.uniform(200, 800, 2)
+            w = rng.uniform(80, 250)
+            tickets.append(s.query((cx - w, cy - w, cx + w, cy + w),
+                                   "mean", "a0", phi=PHI))
+        server.tick()
+    assert server.epoch == 4
+    for tk in tickets:
+        r = tk.result
+        assert r.exact or r.bound <= PHI + 1e-12
+        truth = server.engine.oracle(tk.window, "mean", "a0")
+        assert r.lo - 1e-9 <= truth <= r.hi + 1e-9
+
+
+def test_no_reader_observes_half_applied_split(monkeypatch):
+    """Epoch isolation: the shared index is byte-identical to its
+    pre-tick state up to the instant of publication — every mutation of
+    the tick goes through the stage, none lands mid-round."""
+    server = _server()
+    s0 = server.open_session()
+    s1 = server.open_session()
+    pre = {}
+    seen = {"published": 0}
+    orig_publish = EpochStage.publish
+
+    def checked_publish(self):
+        _assert_fingerprint_equal(_fingerprint(server.index),
+                                  pre["fp"])
+        seen["published"] += 1
+        return orig_publish(self)
+
+    monkeypatch.setattr(EpochStage, "publish", checked_publish)
+    for tick in range(2):
+        s0.query((100, 100, 600, 600), "mean", "a0", phi=PHI)
+        s1.query((150, 150, 700, 700), "sum", "a0", phi=PHI)
+        s1.heatmap((100, 100, 600, 600), "mean", "a0", bins=(4, 4),
+                   phi=PHI)
+        pre["fp"] = _fingerprint(server.index)
+        server.tick()
+    assert seen["published"] == 2
+    # publication DID mutate the index afterwards (splits landed)
+    post = _fingerprint(server.index)
+    assert post[0][0] > pre["fp"][0][0]
+
+
+def test_same_tick_queries_read_frozen_epoch():
+    """Two identical same-tick queries each see the pre-tick index: the
+    second does NOT benefit from the first one's cracking (equal work,
+    equal answers); after publication a repeat costs strictly less."""
+    win = (200, 200, 700, 700)
+    server = _server(mode="sequential")   # per-query cost attribution
+    sa, sb = server.open_session(), server.open_session()
+    ta = sa.query(win, "mean", "a0", phi=PHI)
+    tb = sb.query(win, "mean", "a0", phi=PHI)
+    server.tick()
+    assert ta.result.objects_read == tb.result.objects_read > 0
+    assert ta.result.value == tb.result.value
+    tc = sa.query(win, "mean", "a0", phi=PHI)
+    server.tick()
+    assert tc.result.objects_read < ta.result.objects_read
+
+
+def test_same_tile_split_contention_masked():
+    """Two sessions refining the same region stage splits of the same
+    tiles; publication lets the first claimant split and masks the
+    later one to an enrichment — and counts it."""
+    win = (200, 200, 700, 700)
+    server = _server()
+    sa, sb = server.open_session(), server.open_session()
+    sa.query(win, "mean", "a0", phi=PHI)
+    sb.query(win, "sum", "a0", phi=PHI)
+    server.tick()
+    assert server.last_publish["rounds_published"] > 0
+    assert server.last_publish["splits_masked"] > 0
+
+
+def test_crack_budget_skip_still_meets_phi():
+    """Queries past the per-tick crack budget skip staging entirely but
+    still answer within φ; only budgeted queries publish rounds."""
+    server = _server(crack_budget=1)
+    sessions = [server.open_session() for _ in range(3)]
+    win = (150, 150, 800, 800)
+    tickets = [s.query(win, "mean", "a0", phi=PHI) for s in sessions]
+    server.tick()
+    for tk in tickets:
+        r = tk.result
+        assert r.exact or r.bound <= PHI + 1e-12
+        truth = server.engine.oracle(win, "mean", "a0")
+        assert r.lo - 1e-9 <= truth <= r.hi + 1e-9
+    # an unbudgeted run of the same tick publishes strictly more rounds
+    free = _server(crack_budget=None)
+    ses = [free.open_session() for _ in range(3)]
+    for s in ses:
+        s.query(win, "mean", "a0", phi=PHI)
+    free.tick()
+    assert (free.last_publish["rounds_published"]
+            > server.last_publish["rounds_published"])
+
+
+def test_metadata_fast_path_skips_reads():
+    """φ met from pending-interval bounds alone ⇒ zero reads, zero
+    staged rounds (the SKIP fast path)."""
+    server = _server()
+    s = server.open_session()
+    t = s.query((-1e9, -1e9, 1e9, 1e9), "count", "a0", phi=0.5)
+    server.tick()
+    assert t.result.objects_read == 0
+    assert server.last_publish["rounds_published"] == 0
+
+
+def test_retired_during_query_degrades_gracefully():
+    """A chunk retired mid-session: read-time detection drops its tiles
+    from the answer set and surfaces ``retired_during_query`` — in both
+    serving modes, with identical degraded answers."""
+    results = {}
+    for mode in ("batched", "sequential"):
+        server = _server(chunked=True, mode=mode)
+        s = server.open_session()
+        win = (100, 100, 900, 900)
+        s.query(win, "mean", "a0", phi=PHI)
+        server.tick()               # materializes per-chunk indexes
+        ds = server.engine.dataset
+        ds.chunk(ds.live_ids[0]).data.close()
+        t = s.query(win, "mean", "a0", phi=0.0)
+        server.tick()
+        assert t.result.retired_during_query
+        results[mode] = t.result
+    _assert_answers_equal(results["batched"], results["sequential"])
+
+
+def test_per_session_traces_and_lifecycle():
+    server = _server()
+    sa = server.open_session("alice")
+    sb = server.open_session("bob")
+    sa.query((100, 100, 500, 500), "mean", "a0", phi=PHI)
+    sb.query((300, 300, 700, 700), "mean", "a0", phi=PHI)
+    sb.heatmap((300, 300, 700, 700), "mean", "a0", bins=(2, 2), phi=PHI)
+    server.tick()
+    assert sa.trace.totals()["queries"] == 1
+    tb = sb.trace.totals()
+    assert tb["queries"] == 2
+    assert tb["scalar_queries"] == 1 and tb["heatmap_queries"] == 1
+    # closing drops queued tickets and rejects new submissions
+    sb.query((0, 0, 100, 100), "mean", "a0", phi=PHI)
+    sb.close()
+    assert server.n_queued == 0
+    with pytest.raises(RuntimeError):
+        sb.query((0, 0, 100, 100), "mean", "a0", phi=PHI)
+    assert server.tick() == []      # empty tick is a no-op
+    assert sa.trace.totals()["queries"] == 1
+
+
+def test_engine_serve_shares_index():
+    """AQPEngine.serve() lifts the live engine: serving-published splits
+    are visible to direct engine queries and vice versa."""
+    ds = _dataset()
+    eng = AQPEngine(ds, IndexConfig(grid0=(8, 8), min_split_count=256,
+                                    init_metadata_attrs=("a0",)))
+    server = eng.serve()
+    assert server.engine is eng and server.index is eng.index
+    s = server.open_session()
+    # φ=1%: tighter than the seed grid's metadata bound, forcing reads
+    t = s.query((200, 200, 800, 800), "mean", "a0", phi=0.01)
+    server.tick()
+    assert t.result.objects_read > 0
+    # adaptation published through serving is visible to direct engine
+    # queries on the same index: the repeat answers more from metadata
+    r = eng.query((200, 200, 800, 800), "mean", "a0", phi=0.01)
+    assert r.exact or r.bound <= 0.01 + 1e-12
+    assert r.objects_read < t.result.objects_read
