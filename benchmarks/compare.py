@@ -1,0 +1,72 @@
+"""Bench-compare gate: fail CI when a bandwidth row regresses.
+
+    PYTHONPATH=src python -m benchmarks.compare \
+        experiments/BENCH_baseline.json experiments/BENCH_smoke.json
+
+Reads two BENCH_*.json artifacts (benchmarks/run.py format), extracts
+every row carrying a ``GB_s=<float>`` term in its derived field, and
+exits non-zero if any row present in BOTH files dropped by more than
+``TOLERANCE`` (30%) against the baseline. The wide tolerance absorbs
+container noise (timing is already min-of-reps); what it catches is the
+class of regression that motivated the gate — an accidental revert of a
+bandwidth-engineered kernel path (e.g. the grouped jnp scatter_agg4
+rewrite is worth 2×, far outside 30%).
+
+Rows only in one file are reported but never fail the gate, so adding
+or renaming benches doesn't require a lockstep baseline update; refresh
+the committed baseline (run ``-m benchmarks.run --smoke`` and copy
+``BENCH_smoke.json`` over ``BENCH_baseline.json``) when a deliberate
+change moves the floor.
+"""
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+TOLERANCE = 0.30
+
+_GBS = re.compile(r"(?:^|;)GB_s=([0-9.eE+-]+)")
+
+
+def load_gbs(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    out = {}
+    for row in data["rows"]:
+        m = _GBS.search(row.get("derived", ""))
+        if m:
+            out[row["name"]] = float(m.group(1))
+    return out
+
+
+def compare(baseline_path: str, current_path: str) -> int:
+    base = load_gbs(baseline_path)
+    cur = load_gbs(current_path)
+    failures = []
+    for name in sorted(base):
+        if name not in cur:
+            print(f"# {name}: only in baseline (skipped)")
+            continue
+        b, c = base[name], cur[name]
+        drop = (b - c) / b if b > 0 else 0.0
+        status = "FAIL" if drop > TOLERANCE else "ok"
+        print(f"{name}: baseline={b:.2f} GB/s current={c:.2f} GB/s "
+              f"({-drop:+.1%}) {status}")
+        if status == "FAIL":
+            failures.append(name)
+    for name in sorted(set(cur) - set(base)):
+        print(f"# {name}: new row, {cur[name]:.2f} GB/s (not gated)")
+    if failures:
+        print(f"# {len(failures)} bandwidth row(s) regressed more than "
+              f"{TOLERANCE:.0%}: {', '.join(failures)}")
+        return 1
+    print(f"# bench-compare ok ({len(base)} baseline rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        print(__doc__)
+        sys.exit(2)
+    sys.exit(compare(sys.argv[1], sys.argv[2]))

@@ -48,9 +48,11 @@ def main(save_csv=None):
     s5_total = t_ex.sum() / max(t_05.sum(), 1e-9)
     s1_total = t_ex.sum() / max(t_01.sum(), 1e-9)
     # the late phase only exists on full-length paths (smoke runs fewer
-    # than 40 queries)
+    # than 40 queries), and sub-ms smoke timings can mean to ~0 — guard
+    # both, report "n/a" instead of a NaN percentage in BENCH output
     late_gap = ((t_ex[40:].mean() - t_05[40:].mean()) / t_ex[40:].mean()
-                if len(t_ex) > 40 else float("nan"))
+                if len(t_ex) > 40 and t_ex[40:].mean() > 0
+                else None)
 
     emit("fig2_exact_total", t_ex.sum() * 1e6 / N_QUERIES,
          f"total_s={t_ex.sum():.3f}")
@@ -63,8 +65,9 @@ def main(save_csv=None):
     emit("fig2_at_q20", 0.0,
          f"q15-25_speedup_phi5={s5_q20:.2f}x;phi1={s1_q20:.2f}x;"
          f"peak_early_phi5={s5_peak:.2f}x")
+    gap_s = "n/a" if late_gap is None else f"{late_gap:+.2%}"
     emit("fig2_late_phase", 0.0,
-         f"exact_vs_phi5_gap={late_gap:+.2%} (paper: exact catches up)")
+         f"exact_vs_phi5_gap={gap_s} (paper: exact catches up)")
     return {"s5_total": s5_total, "s1_total": s1_total,
             "s5_q20": s5_q20, "s1_q20": s1_q20, "csv": csv}
 

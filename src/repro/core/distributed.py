@@ -75,6 +75,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from ..kernels import fused_select as fsel
 from .bounds import (AccuracyPolicy, HeatmapResult, QueryResult,
                      bin_budgets_met, budget_ratios, phi_budgets)
 from .engine import EngineTrace
@@ -324,18 +325,25 @@ def make_init_state(mesh: Mesh, cfg: DistConfig = DistConfig()):
     return jax.jit(_init_state_raw(mesh, cfg))
 
 
-def _session_query_raw(mesh: Mesh, cfg: DistConfig):
+def _session_query_raw(mesh: Mesh, cfg: DistConfig, fused: bool = True):
     cap = cfg.capacity
     axes = _all_axes(mesh)
 
     def local(state, xs, ys, vals, window, phi):
-        inq = _window_mask(xs, ys, window)
-        vf = vals.astype(jnp.float32)
         cell = state.cell
-        cnt_q = jnp.zeros((cap,), jnp.float32).at[cell].add(
-            jnp.where(inq, 1.0, 0.0))
-        s_q = jnp.zeros((cap,), jnp.float32).at[cell].add(
-            jnp.where(inq, vf, 0.0))
+        if fused:
+            # one fused classify+scatter primitive (the heatmap's
+            # nb = 1 degenerate: bin id ≡ 0, key ≡ cell) — bit-for-bit
+            # the composed expressions below
+            cnt_q, s_q = fsel.fused_count_val(cell, xs, ys, vals, window,
+                                              cap, 1, 1, 1, "sum")
+        else:
+            inq = _window_mask(xs, ys, window)
+            vf = vals.astype(jnp.float32)
+            cnt_q = jnp.zeros((cap,), jnp.float32).at[cell].add(
+                jnp.where(inq, 1.0, 0.0))
+            s_q = jnp.zeros((cap,), jnp.float32).at[cell].add(
+                jnp.where(inq, vf, 0.0))
         cnt_q = jax.lax.psum(cnt_q, axes)
         s_q = jax.lax.psum(s_q, axes)
 
@@ -360,11 +368,14 @@ def _session_query_raw(mesh: Mesh, cfg: DistConfig):
             -jnp.inf)
         order = jnp.argsort(-score)
         width_sorted = width[order]
-        # residual CI width if tiles [0..j) are processed. Reversed
-        # cumsum, not total−prefix: the subtraction leaves f32 ≈+ε at
-        # j = n_partial and φ=0 would then select nothing.
-        resid = jnp.concatenate(
-            [jnp.cumsum(width_sorted[::-1])[::-1], jnp.zeros((1,))])
+        if fused:
+            resid = fsel.suffix_residual(width_sorted, "sum")
+        else:
+            # residual CI width if tiles [0..j) are processed. Reversed
+            # cumsum, not total−prefix: the subtraction leaves f32 ≈+ε
+            # at j = n_partial and φ=0 would then select nothing.
+            resid = jnp.concatenate(
+                [jnp.cumsum(width_sorted[::-1])[::-1], jnp.zeros((1,))])
         approx0 = exact_sum + jnp.sum(mid_p)
         surrogate = (0.5 * resid) / jnp.maximum(jnp.abs(approx0), 1e-9)
         n_partial = jnp.sum(partial.astype(jnp.int32))
@@ -397,18 +408,25 @@ def _session_query_raw(mesh: Mesh, cfg: DistConfig):
                      out_specs={k: P() for k in keys}, check_rep=False)
 
 
-def make_session_query_step(mesh: Mesh, cfg: DistConfig = DistConfig()):
+def make_session_query_step(mesh: Mesh, cfg: DistConfig = DistConfig(),
+                            fused: bool = True):
     """Jitted scalar (sum) query step over the session state:
     ``step(state, xs, ys, vals, window, phi)`` — classification,
     pending intervals, and selection all come from the PERSISTENT tile
     table, so a cracked session answers the same window with fewer and
-    cheaper pending tiles than the fresh-surrogate wrapper."""
-    return jax.jit(_session_query_raw(mesh, cfg))
+    cheaper pending tiles than the fresh-surrogate wrapper.
+
+    ``fused=True`` (default) routes the per-device classify→scatter and
+    the selection suffix scan through the
+    :mod:`repro.kernels.fused_select` primitives; ``fused=False`` keeps
+    the historical composed chain. The two are bit-for-bit identical
+    (asserted in tests/test_distributed.py)."""
+    return jax.jit(_session_query_raw(mesh, cfg, fused))
 
 
 def _session_heatmap_raw(mesh: Mesh, cfg: DistConfig,
                          bins: Tuple[int, int], agg: str,
-                         with_policy: bool):
+                         with_policy: bool, fused: bool = True):
     assert agg in ("sum", "min", "max"), agg
     bx, by = _check_bins(bins)
     nb = bx * by
@@ -416,10 +434,26 @@ def _session_heatmap_raw(mesh: Mesh, cfg: DistConfig,
     axes = _all_axes(mesh)
 
     def local(state, cache, xs, ys, vals, window, phi, phi_b, eps_abs):
-        inq, wid = _window_bin_ids(xs, ys, window, bx, by)
-        vf = vals.astype(jnp.float32)
-        cnt_tb, v_tb = _scatter_grouped(state.cell, wid, inq, vf, cap,
-                                        nb, agg, axes)
+        if fused:
+            # fused classify→scatter: one kernels-layer primitive gives
+            # the pre-merge per-(tile, bin) count/value tables —
+            # bit-for-bit the composed _window_bin_ids+_scatter_grouped
+            # chain it replaces
+            cnt_f, v_f = fsel.fused_count_val(state.cell, xs, ys, vals,
+                                              window, cap, nb, bx, by,
+                                              agg, neg=NEG, pos=POS)
+            cnt_tb = jax.lax.psum(cnt_f, axes).reshape(cap, nb)
+            if agg == "sum":
+                v_tb = jax.lax.psum(v_f, axes).reshape(cap, nb)
+            elif agg == "min":
+                v_tb = jax.lax.pmin(v_f, axes).reshape(cap, nb)
+            else:
+                v_tb = jax.lax.pmax(v_f, axes).reshape(cap, nb)
+        else:
+            inq, wid = _window_bin_ids(xs, ys, window, bx, by)
+            vf = vals.astype(jnp.float32)
+            cnt_tb, v_tb = _scatter_grouped(state.cell, wid, inq, vf,
+                                            cap, nb, agg, axes)
         mn, mx = state.vmin, state.vmax
 
         # --- classification + per-(tile, bin) exact-state reuse ---
@@ -503,18 +537,24 @@ def _session_heatmap_raw(mesh: Mesh, cfg: DistConfig,
             # Reversed cumsum, not total−prefix: the f32 subtraction
             # leaves ≈+ε at j = n_partial and φ=0 would then select
             # nothing.
-            resid = jnp.concatenate(
-                [jnp.cumsum(width_sorted[::-1], axis=0)[::-1],
-                 jnp.zeros((1, nb))])        # (cap+1, nb)
+            if fused:
+                resid = fsel.suffix_residual(width_sorted, "sum")
+            else:
+                resid = jnp.concatenate(
+                    [jnp.cumsum(width_sorted[::-1], axis=0)[::-1],
+                     jnp.zeros((1, nb))])    # (cap+1, nb)
         else:
             # an unprocessed pending tile leaves at most its value-range
             # width of deviation on every bin it touches — suffix
             # RUNNING MAX plays the role the suffix cumsum plays for sum
             wb_tb = jnp.where(pend[:, None] & touch,
                               (mx - mn)[:, None], 0.0)
-            resid = jnp.concatenate(
-                [jax.lax.cummax(wb_tb[order], axis=0, reverse=True),
-                 jnp.zeros((1, nb))])        # (cap+1, nb)
+            if fused:
+                resid = fsel.suffix_residual(wb_tb[order], agg)
+            else:
+                resid = jnp.concatenate(
+                    [jax.lax.cummax(wb_tb[order], axis=0, reverse=True),
+                     jnp.zeros((1, nb))])    # (cap+1, nb)
         ratio = (0.5 * resid) / denom0[None, :]
         if with_policy:
             # per-bin budgets τ_b = max(φ_b·|v_b|, ε_abs) replace the
@@ -615,7 +655,8 @@ def _session_heatmap_raw(mesh: Mesh, cfg: DistConfig,
 
 def make_session_heatmap_step(mesh: Mesh, cfg: DistConfig,
                               bins: Tuple[int, int], agg: str = "sum",
-                              with_policy: bool = False):
+                              with_policy: bool = False,
+                              fused: bool = True):
     """Jitted distributed HEATMAP (2-D group-by) step over the session
     state: ``step(state, cache, xs, ys, vals, window, phi, phi_b,
     eps_abs) → (out, new_cache)``.
@@ -627,9 +668,17 @@ def make_session_heatmap_step(mesh: Mesh, cfg: DistConfig,
     budgets ``τ_b = max(φ_b·|v_b|, ε_abs)`` (``with_policy=True``; the
     ``with_policy=False`` build takes the same arguments but tests the
     scalar φ — the two are bit-for-bit identical under the uniform
-    policy, regression-tested in tests/test_distributed.py)."""
+    policy, regression-tested in tests/test_distributed.py).
+
+    ``fused=True`` (default) replaces the in-step
+    classify→scatter→select chain with the
+    :mod:`repro.kernels.fused_select` primitives (one fused count/value
+    scatter + the suffix-scan selection epilogue); ``fused=False``
+    keeps the historical composed chain. Answers and index evolution
+    are bit-for-bit identical between the two (asserted in
+    tests/test_distributed.py)."""
     return jax.jit(_session_heatmap_raw(mesh, cfg, bins, agg,
-                                        with_policy))
+                                        with_policy, fused))
 
 
 def _refine_epoch_raw(mesh: Mesh, cfg: DistConfig,

@@ -39,6 +39,7 @@ from typing import Dict, Optional, Sequence, Tuple
 import numpy as np
 
 from ..data.rawfile import RawDataset
+from ..kernels import fused_select as fused_mod
 from ..kernels import ops
 from ..kernels import ref as ref_mod
 from . import geometry
@@ -623,17 +624,27 @@ class TileIndex:
         (``window_bin_ids_np``) bit-for-bit — f32 device binning divides
         in float32 and can move bin-edge objects across bins, which
         would break the grouped accumulator's exact count bookkeeping.
-        The device kernels (``segment_window_bin_agg`` jnp/pallas)
+        The device kernels (``segment_window_bin_select`` jnp/pallas)
         remain the TPU bulk data plane, validated against this mirror in
         tests/test_kernels.py.
+
+        The pass runs the FUSED select mirror
+        (``segment_window_bin_select_np``): the grouped table is
+        bit-for-bit ``segment_window_bin_agg_np``'s, and the same call
+        also yields the selection-ready suffix widths from the tiles'
+        sound value bounds (``payload["suffix_w"]``, fold order) —
+        ``suffix_w[s]`` is the residual per-bin CI width were the driver
+        to stop after folding s tiles of this round.
         """
         if self.ds.closed:
             return self._dead_batch(tile_ids, attr)
         bx, by = bins
         tile_ids, idx, bounds, xs, ys, vals, payload = \
             self._read_batch_gather(tile_ids, attr)
-        agg = ref_mod.segment_window_bin_agg_np(xs, ys, vals, bounds,
-                                                window, bx, by)
+        agg, suffix_w = fused_mod.segment_window_bin_select_np(
+            xs, ys, vals, bounds, window, bx, by,
+            self.meta_min[attr][tile_ids], self.meta_max[attr][tile_ids])
+        payload["suffix_w"] = suffix_w
         self.adapt_stats.kernel_calls += 1
         # bin-aligned split lines for every tile of the round (the same
         # edges process_heatmap computes) — apply_batch slices the folded

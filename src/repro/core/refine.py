@@ -245,6 +245,21 @@ class RefinementDriver:
                 size = min(size * 2, k)
             contribs, payload = self.adapter.read_batch(batch)
             n_used = 0
+            if predictive and all(c is not None for c in contribs):
+                # certainty fast path: min_folds_needed is a CERTAIN
+                # lower bound, so a round sized by it cannot fire the
+                # stopping rule before its last fold — every interim
+                # _met/query_bound of the loop below is provably a
+                # no-op. Fold the whole batch and re-derive the bound
+                # once. (Any dropped tile falls back to the per-fold
+                # loop: a drop removes width differently from a fold
+                # and the certainty argument no longer covers it.)
+                for t, contrib in zip(batch, contribs):
+                    acc.fold_exact(t, *contrib)
+                n_used = len(batch)
+                processed += len(batch)
+                bound = acc.query_bound()
+                contribs = ()            # consumed
             for t, contrib in zip(batch, contribs):
                 if self._met(bound):
                     stop = True

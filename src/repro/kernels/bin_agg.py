@@ -8,13 +8,17 @@ formulation streams the segment HBM→VMEM once and evaluates all G² cell
 masks per block in VREGs — G² masked reductions over data that is already
 resident, i.e. arithmetic intensity grows ~G² with no extra bytes moved.
 
-Layout mirrors window_agg: ``(BLOCK_ROWS, 128)`` f32 operand tiles, 1-D
-grid over row blocks. Cell masks are unrolled statically (G² ≤ 64) — no
-scatter, which TPUs lack; each cell's partial row goes to
-``out[step, cell, :]`` and the caller reduces over steps.
+Layout mirrors window_agg: ``(BLOCK_ROWS, 128)`` f32 operand tiles,
+``(1, row_blocks)`` grid (the grouped-kernel family's 2-D shape with a
+single cell group — G² ≤ 64 always fits one program's unroll). Cell
+masks are unrolled statically — no scatter, which TPUs lack; the
+``(1, G², 4)`` output block is mapped to the same location on every row
+step and accumulated in-kernel (``@pl.when`` init + read-modify-write),
+so no partial slab is materialized and no host reduce runs.
 
 VMEM per step (BR=256): 3·256·128·4 B ≈ 384 KiB + out (G²·4·4 B) — fits
-v5e VMEM with double buffering.
+v5e VMEM with double buffering (see kernels/gridplan.py for the sizing
+rule).
 """
 from __future__ import annotations
 
@@ -31,6 +35,14 @@ MAX_CELLS = 64
 
 def _make_bin_agg_kernel(gx: int, gy: int):
     def kernel(bbox_ref, x_ref, y_ref, v_ref, valid_ref, out_ref):
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            shp = out_ref.shape[:-1]
+            out_ref[:, :, 0] = jnp.zeros(shp, jnp.float32)
+            out_ref[:, :, 1] = jnp.zeros(shp, jnp.float32)
+            out_ref[:, :, 2] = jnp.full(shp, jnp.inf, jnp.float32)
+            out_ref[:, :, 3] = jnp.full(shp, -jnp.inf, jnp.float32)
+
         x0 = bbox_ref[0, 0]
         y0 = bbox_ref[0, 1]
         x1 = bbox_ref[0, 2]
@@ -48,10 +60,14 @@ def _make_bin_agg_kernel(gx: int, gy: int):
         cid = cy * gx + cx
         for c in range(gx * gy):  # static unroll: G² masked reductions
             m = valid & (cid == c)
-            out_ref[0, c, 0] = jnp.sum(m.astype(jnp.float32))
-            out_ref[0, c, 1] = jnp.sum(jnp.where(m, vs, 0.0))
-            out_ref[0, c, 2] = jnp.min(jnp.where(m, vs, jnp.inf))
-            out_ref[0, c, 3] = jnp.max(jnp.where(m, vs, -jnp.inf))
+            out_ref[0, c, 0] = out_ref[0, c, 0] + jnp.sum(
+                m.astype(jnp.float32))
+            out_ref[0, c, 1] = out_ref[0, c, 1] + jnp.sum(
+                jnp.where(m, vs, 0.0))
+            out_ref[0, c, 2] = jnp.minimum(
+                out_ref[0, c, 2], jnp.min(jnp.where(m, vs, jnp.inf)))
+            out_ref[0, c, 3] = jnp.maximum(
+                out_ref[0, c, 3], jnp.max(jnp.where(m, vs, -jnp.inf)))
     return kernel
 
 
@@ -67,28 +83,23 @@ def bin_agg_pallas(xs2d, ys2d, vals2d, valid2d, bbox, *, gx, gy,
     assert gx * gy <= MAX_CELLS, (gx, gy)
     rows = xs2d.shape[0]
     assert rows % block_rows == 0, (rows, block_rows)
-    grid = rows // block_rows
     bbox2d = bbox.reshape(1, 4).astype(jnp.float32)
     valid2d = valid2d.astype(jnp.int8)
 
-    partial = pl.pallas_call(
+    out = pl.pallas_call(
         _make_bin_agg_kernel(gx, gy),
-        grid=(grid,),
+        grid=(1, rows // block_rows),
         in_specs=[
-            pl.BlockSpec((1, 4), lambda i: (0, 0)),            # bbox (broadcast)
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 4), lambda g, r: (0, 0)),         # bbox (broadcast)
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
         ],
-        out_specs=pl.BlockSpec((1, gx * gy, 4), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((grid, gx * gy, 4), jnp.float32),
+        out_specs=pl.BlockSpec((1, gx * gy, 4), lambda g, r: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, gx * gy, 4), jnp.float32),
         interpret=interpret,
     )(bbox2d, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
       vals2d.astype(jnp.float32), valid2d)
 
-    cnt = jnp.sum(partial[:, :, 0], axis=0)
-    s = jnp.sum(partial[:, :, 1], axis=0)
-    mn = jnp.min(partial[:, :, 2], axis=0)
-    mx = jnp.max(partial[:, :, 3], axis=0)
-    return jnp.stack([cnt, s, mn, mx], axis=-1)
+    return out[0]

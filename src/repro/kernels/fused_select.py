@@ -1,0 +1,297 @@
+"""Fused selection megakernel: classify → grouped scatter → select stats.
+
+The paper's query-evaluation hot path answers a φ-constrained heatmap by
+(1) classifying every object against the query window and its bx×by bin
+grid, (2) scattering per-(tile, bin) ``(count, sum, min, max)``
+aggregates, and (3) running suffix scans over the score-sorted
+(tiles × bins) width matrix to find the smallest prefix of tiles whose
+residual uncertainty meets the per-bin budgets. Composed naively that is
+three passes' worth of dispatches; fused, the per-object work is ONE
+pass over data the query already streams (the zero-overhead-adaptation
+argument: incremental index work must piggyback on the scan).
+
+Three backends, per house style:
+
+- :func:`segment_window_bin_select_np` — f64 host mirror: the grouped
+  table is bit-for-bit ``ref.segment_window_bin_agg_np`` (sorted-slice
+  pairwise f64 accumulation — the sequential reference), extended with
+  the selection-ready suffix widths in the same call.
+- :func:`segment_window_bin_select_ref` / the shared jnp primitives
+  (:func:`window_bin_ids`, :func:`fused_count_val`,
+  :func:`suffix_residual`) — the jit oracle. ``core.distributed``'s
+  fused session steps call these SAME primitives, so the SPMD
+  classify→scatter→select chain and this oracle are one expression.
+- :func:`fused_table_pallas` / :func:`segment_window_bin_select_pallas`
+  — the TPU megakernel. Unlike the 1-D ``segment_agg`` ancestors it
+  runs a REAL 2-D grid ``(cell_groups, row_blocks)`` planned by
+  :mod:`repro.kernels.gridplan`: the outer axis walks groups of
+  segments, the minor axis streams double-buffered row tiles with the
+  group's ``(1, group·nb, 4)`` output block VMEM-resident and
+  accumulated in-kernel (``@pl.when(r == 0)`` init + read-modify-write)
+  — window mask, bin ids, grouped scatter all inside one kernel body,
+  no host-side partial reduction. The O(S·nb) selection epilogue
+  (suffix widths) is jnp inside the same jit, so the whole op is a
+  single dispatch.
+
+Suffix-width contract: given per-segment sound value bounds
+``vmin_s/vmax_s`` (the pending intervals of the tiles, in FOLD ORDER),
+``w[s, b] = cnt[s, b] · (vmax_s[s] − vmin_s[s])`` is the per-bin CI
+width tile s still contributes while unfolded, and
+``suffix_w[s] = Σ_{s' ≥ s} w[s']`` (shape ``(S+1, nb)``, last row
+exactly zero) is the residual width after folding the first s tiles —
+the quantity the refinement driver's stopping rule consumes. Computed
+as a reversed cumsum, not total − prefix: the f32/f64 subtraction would
+leave ≈+ε at s = S where the exact-method (φ=0) selection must see 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+from .gridplan import plan_cell_groups
+from .segment_agg import LANES, DEFAULT_BLOCK_ROWS, MAX_SEGMENTS
+
+NEG = -3.4e38
+POS = 3.4e38
+
+
+# --------------------------------------------------------------------- #
+# shared jnp selection primitives (the SPMD fused path and the oracle
+# are these same expressions — bit-for-bit)
+# --------------------------------------------------------------------- #
+
+def window_bin_ids(xs, ys, window, bx: int, by: int):
+    """jnp mirror of ``ref.window_bin_ids_np``: ``(in_window_mask,
+    bin_id)`` of the bx×by heatmap grid laid over the closed query
+    window; bin id = by_row·bx + bx_col, closed-max-edge objects
+    clipped into the last bin."""
+    qx0, qy0, qx1, qy1 = window[0], window[1], window[2], window[3]
+    m = ((xs >= qx0) & (xs <= qx1) & (ys >= qy0) & (ys <= qy1))
+    cw = jnp.maximum((qx1 - qx0) / bx, 1e-30)
+    ch = jnp.maximum((qy1 - qy0) / by, 1e-30)
+    wx = jnp.clip(jnp.floor((xs - qx0) / cw).astype(jnp.int32), 0, bx - 1)
+    wy = jnp.clip(jnp.floor((ys - qy0) / ch).astype(jnp.int32), 0, by - 1)
+    return m, wy * bx + wx
+
+
+def fused_count_val(cell, xs, ys, vals, window, cap: int, nb: int,
+                    bx: int, by: int, agg: str,
+                    neg: float = NEG, pos: float = POS):
+    """One-pass classify + per-(tile, bin) grouped scatter — the fused
+    data plane of a selection step, pre-merge.
+
+    Window classification, bin assignment, and the masked binned
+    scatter keyed by the persistent ``cell`` ids happen in one
+    expression over the local objects; returns the flat ``(cap·nb,)``
+    count and value (sum / grouped min / grouped max) tables for the
+    caller to psum/pmin/pmax across shards. ``nb = bx·by = 1``
+    degenerates to the scalar query's per-tile scatter (``key ≡
+    cell``), so one primitive serves both session steps. Masked-out
+    objects contribute the channel-neutral element (0, or the ±3.4e38
+    scatter sentinel for extrema — f32-finite so pmin/pmax stay
+    NaN-safe)."""
+    assert agg in ("sum", "min", "max"), agg
+    inq, wid = window_bin_ids(xs, ys, window, bx, by)
+    vf = vals.astype(jnp.float32)
+    key = cell * nb + wid
+    cnt = jnp.zeros((cap * nb,), jnp.float32).at[key].add(
+        jnp.where(inq, 1.0, 0.0))
+    if agg == "sum":
+        val = jnp.zeros((cap * nb,), jnp.float32).at[key].add(
+            jnp.where(inq, vf, 0.0))
+    elif agg == "min":
+        val = jnp.full((cap * nb,), pos, jnp.float32).at[key].min(
+            jnp.where(inq, vf, pos))
+    else:
+        val = jnp.full((cap * nb,), neg, jnp.float32).at[key].max(
+            jnp.where(inq, vf, neg))
+    return cnt, val
+
+
+def suffix_residual(width_sorted, agg: str = "sum"):
+    """Selection-ready suffix statistics over a score-sorted width
+    matrix ``(T[, nb])``: residual per-bin CI width if the first j rows
+    are processed, shape ``(T+1[, nb])`` with row T exactly zero.
+
+    ``agg="sum"`` → reversed cumsum (widths add); min/max → reversed
+    running max (an unprocessed tile leaves at most its value-range
+    width on every bin it touches). Reversed scan, not total − prefix:
+    the f32 subtraction leaves ≈+ε at j = T and φ=0 would then select
+    nothing."""
+    zrow = jnp.zeros((1,) + width_sorted.shape[1:], width_sorted.dtype)
+    if agg == "sum":
+        suf = jnp.cumsum(width_sorted[::-1], axis=0)[::-1]
+    else:
+        suf = jax.lax.cummax(width_sorted, axis=0, reverse=True)
+    return jnp.concatenate([suf, zrow])
+
+
+# --------------------------------------------------------------------- #
+# f64 host mirror (the RefinementDriver's control plane)
+# --------------------------------------------------------------------- #
+
+def segment_window_bin_select_np(xs, ys, vals, boundaries, window,
+                                 bx: int, by: int, vmin_s, vmax_s):
+    """Fused host pass: grouped table + selection suffix widths.
+
+    The table is BIT-FOR-BIT ``ref.segment_window_bin_agg_np`` (the
+    sequential per-tile f64 reference the batched rounds must match);
+    the suffix widths are derived from its count channel and the
+    fold-order pending intervals ``vmin_s/vmax_s`` per the module
+    contract. Returns ``(agg (S, bx·by, 4) f64, suffix_w (S+1, bx·by)
+    f64)``."""
+    agg = ref.segment_window_bin_agg_np(xs, ys, vals, boundaries,
+                                        window, bx, by)
+    dv = (np.asarray(vmax_s, np.float64)
+          - np.asarray(vmin_s, np.float64))[:, None]
+    w = agg[:, :, 0] * dv
+    suffix_w = np.concatenate(
+        [np.cumsum(w[::-1], axis=0)[::-1],
+         np.zeros((1, bx * by), np.float64)])
+    return agg, suffix_w
+
+
+# --------------------------------------------------------------------- #
+# jnp oracle
+# --------------------------------------------------------------------- #
+
+def segment_window_bin_select_ref(xs, ys, vals, sids, window, grid,
+                                  valid, n_seg, vmin_s, vmax_s):
+    """jnp oracle of the fused op: grouped table via the scatter oracle
+    + the same suffix-width epilogue in f32. Returns ``(agg (S, k, 4),
+    suffix_w (S+1, k))``."""
+    agg = ref.segment_window_bin_agg_ref(xs, ys, vals, sids, window,
+                                         grid, valid, n_seg)
+    w = agg[:, :, 0] * (vmax_s - vmin_s)[:, None]
+    return agg, suffix_residual(w, "sum")
+
+
+# --------------------------------------------------------------------- #
+# the Pallas megakernel (real 2-D grid, in-kernel accumulation)
+# --------------------------------------------------------------------- #
+
+def _make_fused_table_kernel(group: int, bx: int, by: int):
+    nb = bx * by
+
+    def kernel(win_ref, x_ref, y_ref, v_ref, sid_ref, valid_ref,
+               out_ref):
+        g = pl.program_id(0)    # cell group (outer)
+        r = pl.program_id(1)    # row block (minor) — out block resident
+
+        @pl.when(r == 0)
+        def _init():
+            shp = out_ref.shape[:-1]
+            out_ref[:, :, 0] = jnp.zeros(shp, jnp.float32)
+            out_ref[:, :, 1] = jnp.zeros(shp, jnp.float32)
+            out_ref[:, :, 2] = jnp.full(shp, jnp.inf, jnp.float32)
+            out_ref[:, :, 3] = jnp.full(shp, -jnp.inf, jnp.float32)
+
+        x0 = win_ref[0, 0]
+        y0 = win_ref[0, 1]
+        x1 = win_ref[0, 2]
+        y1 = win_ref[0, 3]
+        xs = x_ref[...]
+        ys = y_ref[...]
+        vs = v_ref[...]
+        sid = sid_ref[...]
+        valid = valid_ref[...] != 0
+        # fused classification: window mask + bin ids once per block,
+        # shared across the whole segment×bin unroll below
+        inw = (xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1) & valid
+        cw = jnp.maximum((x1 - x0) / bx, 1e-30)
+        ch = jnp.maximum((y1 - y0) / by, 1e-30)
+        cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32),
+                      0, bx - 1)
+        cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32),
+                      0, by - 1)
+        cid = cy * bx + cx
+        for t in range(group):  # static unroll over the GROUP's segments
+            s_glob = (g * group + t).astype(jnp.float32)
+            ms = inw & (sid == s_glob)
+            for c in range(nb):  # …and window bins: group·nb reductions
+                m = ms & (cid == c)
+                i = t * nb + c
+                out_ref[0, i, 0] = out_ref[0, i, 0] + jnp.sum(
+                    m.astype(jnp.float32))
+                out_ref[0, i, 1] = out_ref[0, i, 1] + jnp.sum(
+                    jnp.where(m, vs, 0.0))
+                out_ref[0, i, 2] = jnp.minimum(
+                    out_ref[0, i, 2], jnp.min(jnp.where(m, vs, jnp.inf)))
+                out_ref[0, i, 3] = jnp.maximum(
+                    out_ref[0, i, 3],
+                    jnp.max(jnp.where(m, vs, -jnp.inf)))
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_seg", "bx", "by", "block_rows",
+                                    "seg_group", "interpret"))
+def fused_table_pallas(xs2d, ys2d, vals2d, sid2d, valid2d, window, *,
+                       n_seg, bx, by, block_rows=DEFAULT_BLOCK_ROWS,
+                       seg_group=None, interpret=True):
+    """The megakernel proper: per-(segment, window-bin) ``(count, sum,
+    min, max)`` in ONE kernel over a 2-D ``(cell_groups, row_blocks)``
+    grid.
+
+    Args mirror ``segment_agg.segment_window_bin_agg_pallas``; the
+    result is identical up to f32 sum accumulation order (counts and
+    extrema exact). The outer grid axis walks segment groups sized by
+    :func:`~repro.kernels.gridplan.plan_cell_groups` (``seg_group``
+    forces the group size — tests use it to cover the multi-group
+    path); the minor axis streams row blocks with the group's output
+    block VMEM-resident, accumulated in-kernel: no partial slab, no
+    host reduce. Returns float32 ``(n_seg, bx·by, 4)``."""
+    nb = bx * by
+    assert n_seg <= MAX_SEGMENTS, n_seg
+    rows = xs2d.shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    group, n_groups, _ = plan_cell_groups(n_seg, nb,
+                                          block_rows=block_rows,
+                                          group=seg_group)
+    win2d = window.reshape(1, 4).astype(jnp.float32)
+    valid2d = valid2d.astype(jnp.int8)
+
+    out = pl.pallas_call(
+        _make_fused_table_kernel(group, bx, by),
+        grid=(n_groups, rows // block_rows),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda g, r: (0, 0)),    # window
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group * nb, 4),
+                               lambda g, r: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_groups, group * nb, 4),
+                                       jnp.float32),
+        interpret=interpret,
+    )(win2d, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
+      vals2d.astype(jnp.float32), sid2d.astype(jnp.float32), valid2d)
+
+    return out.reshape(n_groups * group, nb, 4)[:n_seg]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_seg", "bx", "by", "block_rows",
+                                    "seg_group", "interpret"))
+def segment_window_bin_select_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
+                                     window, vmin_s, vmax_s, *, n_seg,
+                                     bx, by,
+                                     block_rows=DEFAULT_BLOCK_ROWS,
+                                     seg_group=None, interpret=True):
+    """Single-dispatch fused select: the :func:`fused_table_pallas`
+    megakernel + the O(S·nb) jnp suffix-width epilogue in one jit.
+    Returns ``(agg (S, bx·by, 4), suffix_w (S+1, bx·by))`` float32."""
+    agg = fused_table_pallas(xs2d, ys2d, vals2d, sid2d, valid2d, window,
+                             n_seg=n_seg, bx=bx, by=by,
+                             block_rows=block_rows, seg_group=seg_group,
+                             interpret=interpret)
+    w = agg[:, :, 0] * (vmax_s - vmin_s)[:, None]
+    return agg, suffix_residual(w, "sum")

@@ -1,0 +1,89 @@
+"""Grid planning for the grouped kernel family: 2-D (groups × rows).
+
+The grouped kernels (``segment_agg``, ``fused_select``) unroll their
+(segment × cell) masked reductions statically inside the kernel body.
+The original formulation bounded that unroll by capping the CALL
+(``n_seg · k ≤ MAX_UNROLL``) and ran a 1-D grid over row blocks, each
+step writing an independent partial slab that the caller reduced on the
+host. The real 2-D grid replaces both halves of that compromise:
+
+- the OUTER grid axis walks *cell groups* — contiguous runs of
+  ``group`` segments whose ``group · k`` unroll fits the budget — so a
+  call may carry arbitrarily many segments without inflating any one
+  program's unroll;
+- the MINOR grid axis walks row blocks with the group's output block
+  mapped to the SAME location every step: the ``(1, group·k, 4)``
+  aggregate stays VMEM-resident and is accumulated in-kernel
+  (``@pl.when(r == 0)`` init + read-modify-write), eliminating the
+  ``(grid, S·K, 4)`` partial-slab materialization and the host-side
+  reduction entirely.
+
+The plan is sized against the ~16 MiB v5e VMEM budget documented in
+``benchmarks/kernels_bench.py``: per program the resident set is the
+streamed f32 operand planes + the int8 validity plane (×2 for double
+buffering of the streams) + the group's persistent output block + the
+group's parameter rows. Input bytes are re-streamed once per group —
+for the common ``n_groups == 1`` case (every batched-refinement shape:
+``MAX_SEGMENTS·nb ≤ MAX_UNROLL`` for small bin grids) the stream is
+read exactly once, strictly better than the old 1-D grid which paid an
+extra O(grid·S·K) partial-slab write + host reduce.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+LANES = 128
+DEFAULT_BLOCK_ROWS = 256
+MAX_UNROLL = 512            # bound on group·k static unroll per program
+VMEM_BUDGET = 16 * 2**20    # ~v5e per-core VMEM (double-buffer headroom)
+
+
+def vmem_bytes(block_rows: int = DEFAULT_BLOCK_ROWS, unroll: int = 1,
+               n_planes: int = 4, param_floats: int = 0) -> int:
+    """Resident VMEM bytes of one grouped-kernel program.
+
+    ``n_planes`` f32 operand planes of ``(block_rows, LANES)`` plus one
+    int8 validity plane, ×2 for double-buffered streaming; the
+    persistent ``(1, unroll, 4)`` f32 output block (not double-buffered
+    — it is revisited, not re-fetched); ``param_floats`` f32 parameter
+    entries (windows/bboxes/edges rows of the group).
+    """
+    streams = 2 * block_rows * LANES * (n_planes * 4 + 1)
+    out = unroll * 4 * 4
+    return streams + out + param_floats * 4
+
+
+def plan_cell_groups(n_seg: int, k: int, *,
+                     max_unroll: int = MAX_UNROLL,
+                     block_rows: int = DEFAULT_BLOCK_ROWS,
+                     n_planes: int = 4,
+                     budget: int = VMEM_BUDGET,
+                     group: int | None = None) -> Tuple[int, int, int]:
+    """Size the outer (cell-group) grid axis for a grouped kernel call.
+
+    Returns ``(group, n_groups, n_seg_pad)``: ``group`` segments per
+    program (``group · k ≤ max_unroll`` and the program's
+    :func:`vmem_bytes` fits ``budget``), ``n_groups`` programs on the
+    outer axis, and ``n_seg_pad = group · n_groups`` (callers pad their
+    per-segment parameter arrays to this row count; padded rows are
+    never matched by any object's segment id and are sliced off the
+    result). ``group`` may be forced (tests use it to exercise the
+    multi-group path at small shapes).
+    """
+    if n_seg <= 0 or k <= 0:
+        raise ValueError(f"need n_seg > 0 and k > 0, got {n_seg}, {k}")
+    if k > max_unroll:
+        raise ValueError(f"k={k} cells per segment exceeds the "
+                         f"per-program unroll bound {max_unroll}")
+    if group is None:
+        group = max(1, min(n_seg, max_unroll // k))
+        # back off until the program's resident set fits the budget
+        # (streams dominate; this only ever triggers for huge k·group)
+        while group > 1 and vmem_bytes(block_rows, group * k, n_planes,
+                                       param_floats=group * 8) > budget:
+            group -= 1
+    else:
+        group = max(1, min(int(group), n_seg))
+        assert group * k <= max_unroll, (group, k)
+    n_groups = -(-n_seg // group)
+    return group, n_groups, group * n_groups

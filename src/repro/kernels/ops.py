@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import fused_select
 from . import ref
 from .window_agg import window_agg_pallas, LANES, DEFAULT_BLOCK_ROWS
 from .bin_agg import bin_agg_pallas
@@ -89,6 +90,18 @@ def _bin_agg_np(xs, ys, vals, bbox, gx, gy, n):
     return np.stack([cnt, s, mn, mx], axis=-1)
 
 
+def _dev(a):
+    """Prepare a (possibly large) host array for a jit'd call.
+
+    Passing NumPy float32 directly lets jit's own device_put alias the
+    host buffer on CPU (zero copy); an eager ``jnp.asarray`` here costs a
+    separate synchronous dispatch per array — measured ~4 ms of the old
+    6 ms ``bin_agg`` jnp wall time at 200K rows. Device arrays pass
+    through untouched.
+    """
+    return a if isinstance(a, jax.Array) else np.asarray(a, np.float32)
+
+
 def _pad_to_blocks(n: int, block_rows: int) -> int:
     per = block_rows * LANES
     return max(per, ((n + per - 1) // per) * per)
@@ -108,10 +121,13 @@ def pack2d(*arrays, n=None, block_rows=DEFAULT_BLOCK_ROWS):
     return (*outs, valid)
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
-def _window_agg_flat(xs, ys, vals, window, n, backend, interpret):
+@functools.partial(jax.jit, static_argnames=("backend", "interpret", "full"))
+def _window_agg_flat(xs, ys, vals, window, n, backend, interpret,
+                     full=False):
     if backend == "jnp":
-        valid = jnp.arange(xs.shape[0]) < n
+        # full=True: the caller passed n=None (whole array live) — skip
+        # the validity stream, the sweeps are bandwidth-bound
+        valid = None if full else jnp.arange(xs.shape[0]) < n
         return ref.window_agg_ref(xs, ys, vals, window, valid)
     xs2, ys2, vs2, valid2 = pack2d(xs, ys, vals, n=xs.shape[0])
     # mask padding AND the tail beyond n
@@ -132,20 +148,20 @@ def window_agg(xs, ys, vals, window, *, n=None, backend=None,
     if backend == "np":
         n = len(xs) if n is None else int(n)
         return _window_agg_np(xs, ys, vals, window, n)
-    xs = jnp.asarray(xs, jnp.float32)
-    ys = jnp.asarray(ys, jnp.float32)
-    vals = jnp.asarray(vals, jnp.float32)
-    window = jnp.asarray(window, jnp.float32)
+    full = n is None
+    xs, ys, vals = _dev(xs), _dev(ys), _dev(vals)
+    window = np.asarray(window, np.float32)
     n = xs.shape[0] if n is None else n
-    return _window_agg_flat(xs, ys, vals, window, jnp.asarray(n, jnp.int32),
-                            backend, interpret)
+    return _window_agg_flat(xs, ys, vals, window, int(n),
+                            backend, interpret, full=full)
 
 
 @functools.partial(jax.jit, static_argnames=("gx", "gy", "backend",
-                                             "interpret"))
-def _bin_agg_flat(xs, ys, vals, bbox, n, gx, gy, backend, interpret):
+                                             "interpret", "full"))
+def _bin_agg_flat(xs, ys, vals, bbox, n, gx, gy, backend, interpret,
+                  full=False):
     if backend == "jnp":
-        valid = jnp.arange(xs.shape[0]) < n
+        valid = None if full else jnp.arange(xs.shape[0]) < n
         return ref.bin_agg_ref(xs, ys, vals, bbox, (gx, gy), valid)
     xs2, ys2, vs2, valid2 = pack2d(xs, ys, vals, n=xs.shape[0])
     valid2 = valid2 * (jnp.arange(valid2.size).reshape(valid2.shape) <
@@ -161,13 +177,12 @@ def bin_agg(xs, ys, vals, bbox, *, gx, gy, n=None, backend=None,
     if backend == "np":
         n = len(xs) if n is None else int(n)
         return _bin_agg_np(xs, ys, vals, bbox, gx, gy, n)
-    xs = jnp.asarray(xs, jnp.float32)
-    ys = jnp.asarray(ys, jnp.float32)
-    vals = jnp.asarray(vals, jnp.float32)
-    bbox = jnp.asarray(bbox, jnp.float32)
+    full = n is None
+    xs, ys, vals = _dev(xs), _dev(ys), _dev(vals)
+    bbox = np.asarray(bbox, np.float32)
     n = xs.shape[0] if n is None else n
-    return _bin_agg_flat(xs, ys, vals, bbox, jnp.asarray(n, jnp.int32),
-                         gx, gy, backend, interpret)
+    return _bin_agg_flat(xs, ys, vals, bbox, int(n),
+                         gx, gy, backend, interpret, full=full)
 
 
 def _bucket_pad(*arrays, n):
@@ -218,9 +233,8 @@ def segment_window_agg(xs, ys, vals, boundaries, window, *, backend=None,
     sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
     xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
     return _segment_window_agg_flat(
-        jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(vals),
-        jnp.asarray(sids), jnp.asarray(window, jnp.float32),
-        jnp.asarray(n, jnp.int32), n_seg, backend, interpret)
+        xs, ys, vals, sids, np.asarray(window, np.float32),
+        int(n), n_seg, backend, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("n_seg", "gx", "gy", "backend",
@@ -257,9 +271,8 @@ def segment_bin_agg(xs, ys, vals, boundaries, bboxes, *, gx, gy,
     sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
     xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
     return _segment_bin_agg_flat(
-        jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(vals),
-        jnp.asarray(sids), jnp.asarray(bboxes, jnp.float32),
-        jnp.asarray(n, jnp.int32), n_seg, gx, gy, backend, interpret)
+        xs, ys, vals, sids, np.asarray(bboxes, np.float32),
+        int(n), n_seg, gx, gy, backend, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("n_seg", "gx", "gy", "backend",
@@ -304,9 +317,8 @@ def segment_bin_agg_edges(xs, ys, vals, boundaries, x_edges, y_edges, *,
     sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
     xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
     return _segment_bin_agg_edges_flat(
-        jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(vals),
-        jnp.asarray(sids), jnp.asarray(x_edges, jnp.float32),
-        jnp.asarray(y_edges, jnp.float32), jnp.asarray(n, jnp.int32),
+        xs, ys, vals, sids, np.asarray(x_edges, np.float32),
+        np.asarray(y_edges, np.float32), int(n),
         n_seg, gx, gy, backend, interpret)
 
 
@@ -346,9 +358,62 @@ def segment_window_bin_agg(xs, ys, vals, boundaries, window, *, bx, by,
     sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
     xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
     return _segment_window_bin_agg_flat(
-        jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(vals),
-        jnp.asarray(sids), jnp.asarray(window, jnp.float32),
-        jnp.asarray(n, jnp.int32), n_seg, bx, by, backend, interpret)
+        xs, ys, vals, sids, np.asarray(window, np.float32),
+        int(n), n_seg, bx, by, backend, interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_seg", "bx", "by", "backend",
+                                    "interpret", "seg_group"))
+def _segment_window_bin_select_flat(xs, ys, vals, sids, window, vmin_s,
+                                    vmax_s, n, n_seg, bx, by, backend,
+                                    interpret, seg_group=None):
+    if backend == "jnp":
+        valid = jnp.arange(xs.shape[0]) < n
+        return fused_select.segment_window_bin_select_ref(
+            xs, ys, vals, sids, window, (bx, by), valid, n_seg,
+            vmin_s, vmax_s)
+    xs2, ys2, vs2, sid2, valid2 = pack2d(xs, ys, vals, sids, n=xs.shape[0])
+    valid2 = valid2 * (jnp.arange(valid2.size).reshape(valid2.shape) <
+                       n).astype(jnp.int8)
+    return fused_select.segment_window_bin_select_pallas(
+        xs2, ys2, vs2, sid2, valid2, window, vmin_s, vmax_s, n_seg=n_seg,
+        bx=bx, by=by, seg_group=seg_group, interpret=interpret)
+
+
+def segment_window_bin_select(xs, ys, vals, boundaries, window, vmin_s,
+                              vmax_s, *, bx, by, backend=None,
+                              interpret=True, seg_group=None):
+    """Fused heatmap-selection primitive: per-segment per-window-bin
+    ``(count, sum, min, max)`` PLUS the selection-ready suffix widths, in
+    one pass.
+
+    Like :func:`segment_window_bin_agg` with a selection epilogue:
+    ``vmin_s/vmax_s`` are the per-segment sound value bounds (fold
+    order), and the second return is ``suffix_w`` of shape
+    ``(S+1, bx*by)`` — residual per-bin CI width after folding the first
+    s segments (row S exactly zero). Returns ``(agg, suffix_w)``.
+    Backend semantics as in :func:`segment_window_agg`: "np" is the f64
+    host mirror whose ``agg`` is bit-for-bit
+    ``segment_window_bin_agg(backend="np")``; "pallas" runs the
+    :mod:`repro.kernels.fused_select` megakernel (2-D grid, in-kernel
+    accumulation) with the suffix scan fused into the same dispatch.
+    ``seg_group`` forces the megakernel's segments-per-program group
+    (tests exercise the multi-group outer axis with it).
+    """
+    backend = backend or default_backend()
+    boundaries = np.asarray(boundaries, np.int64)
+    if backend == "np":
+        return fused_select.segment_window_bin_select_np(
+            xs, ys, vals, boundaries, window, bx, by, vmin_s, vmax_s)
+    n_seg = len(boundaries) - 1
+    n = int(boundaries[-1])
+    sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
+    xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
+    return _segment_window_bin_select_flat(
+        xs, ys, vals, sids, np.asarray(window, np.float32),
+        np.asarray(vmin_s, np.float32), np.asarray(vmax_s, np.float32),
+        int(n), n_seg, bx, by, backend, interpret, seg_group)
 
 
 @functools.partial(jax.jit, static_argnames=("n_seg", "backend", "interpret"))
@@ -386,9 +451,8 @@ def segment_window_agg_multi(xs, ys, vals, boundaries, windows, *,
     sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
     xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
     return _segment_window_agg_multi_flat(
-        jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(vals),
-        jnp.asarray(sids), jnp.asarray(windows, jnp.float32),
-        jnp.asarray(n, jnp.int32), n_seg, backend, interpret)
+        xs, ys, vals, sids, np.asarray(windows, np.float32),
+        int(n), n_seg, backend, interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("n_seg", "bx", "by", "backend",
@@ -427,9 +491,8 @@ def segment_window_bin_agg_multi(xs, ys, vals, boundaries, windows, *, bx,
     sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
     xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
     return _segment_window_bin_agg_multi_flat(
-        jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(vals),
-        jnp.asarray(sids), jnp.asarray(windows, jnp.float32),
-        jnp.asarray(n, jnp.int32), n_seg, bx, by, backend, interpret)
+        xs, ys, vals, sids, np.asarray(windows, np.float32),
+        int(n), n_seg, bx, by, backend, interpret)
 
 
 def window_count(xs, ys, window, *, n=None, backend=None):
@@ -447,5 +510,6 @@ def window_mask_np(xs, ys, window):
 
 __all__ = ["window_agg", "bin_agg", "segment_window_agg", "segment_bin_agg",
            "segment_bin_agg_edges", "segment_window_bin_agg",
+           "segment_window_bin_select",
            "segment_window_agg_multi", "segment_window_bin_agg_multi",
            "window_count", "window_mask_np", "pack2d", "default_backend"]

@@ -23,7 +23,7 @@ in a single kernel invocation,
   same state in-SPMD with a per-(tile, bin) scatter merged by
   pmin/pmax).
 
-Both reuse the ``pack2d`` block layout of :mod:`repro.kernels.window_agg`
+All reuse the ``pack2d`` block layout of :mod:`repro.kernels.window_agg`
 (flat object arrays padded to ``(rows, 128)`` f32 planes + validity plane)
 and add one more plane: the *segment id* of each object (f32; ids are
 small integers, exactly representable). Segments are contiguous in the
@@ -32,10 +32,17 @@ per-segment masks are VREG compares against the resident sid plane, i.e.
 batching k tiles multiplies arithmetic intensity by k with no extra bytes
 moved — the same trick :mod:`repro.kernels.bin_agg` plays with cells.
 
-Grid/outputs mirror bin_agg: 1-D grid over row blocks, each step writes
-its partial ``(1, S[, K], 4)`` aggregate, caller reduces over steps. The
-segment (and cell) loops are static unrolls, bounded by ``MAX_SEGMENTS``
-(batch_k is a small knob) and ``MAX_UNROLL`` for S·K.
+Grid: a real 2-D ``(cell_groups, row_blocks)`` launch planned by
+:mod:`repro.kernels.gridplan`. The outer axis walks groups of segments
+whose ``group · k`` unroll fits the per-program budget; the minor axis
+streams row blocks with the group's ``(1, group·k, 4)`` output block
+mapped to the SAME location every step — ``@pl.when(r == 0)`` init +
+read-modify-write accumulation keeps it VMEM-resident, so there is no
+``(grid, S·K, 4)`` partial slab and no host-side reduction (the 1-D-grid
+ancestors of these kernels paid both). Per-segment parameter arrays
+(windows / bboxes / edges) are padded to ``group · n_groups`` rows and
+block-sliced per group; padded segments match no object's sid and are
+sliced off the result.
 """
 from __future__ import annotations
 
@@ -45,14 +52,59 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANES = 128
-DEFAULT_BLOCK_ROWS = 256
+from .gridplan import (LANES, DEFAULT_BLOCK_ROWS, MAX_UNROLL,  # noqa: F401
+                       plan_cell_groups)
+
 MAX_SEGMENTS = 64
-MAX_UNROLL = 512        # bound on n_seg * gx * gy static unroll
+
+def _acc_init(out_ref):
+    """Write the (count, sum, min, max) neutral element to the whole
+    resident output block — run under ``@pl.when(r == 0)``. Channel-wise
+    scalar broadcasts: a stacked ``[0, 0, +inf, -inf]`` constant would be
+    a captured array, which pallas kernels reject."""
+    shp = out_ref.shape[:-1]
+    out_ref[:, :, 0] = jnp.zeros(shp, jnp.float32)
+    out_ref[:, :, 1] = jnp.zeros(shp, jnp.float32)
+    out_ref[:, :, 2] = jnp.full(shp, jnp.inf, jnp.float32)
+    out_ref[:, :, 3] = jnp.full(shp, -jnp.inf, jnp.float32)
 
 
-def _make_segment_window_agg_kernel(n_seg: int):
+def _acc_cell(out_ref, i: int, m, vs):
+    """Read-modify-write one (segment, cell) row of the resident block
+    with the masked reductions of the current row block."""
+    out_ref[0, i, 0] = out_ref[0, i, 0] + jnp.sum(m.astype(jnp.float32))
+    out_ref[0, i, 1] = out_ref[0, i, 1] + jnp.sum(jnp.where(m, vs, 0.0))
+    out_ref[0, i, 2] = jnp.minimum(out_ref[0, i, 2],
+                                   jnp.min(jnp.where(m, vs, jnp.inf)))
+    out_ref[0, i, 3] = jnp.maximum(out_ref[0, i, 3],
+                                   jnp.max(jnp.where(m, vs, -jnp.inf)))
+
+
+def _pad_rows(a, n_pad: int):
+    """Zero-pad a per-segment parameter array to ``n_pad`` rows (padded
+    segments are never matched by any object's sid)."""
+    n = a.shape[0]
+    if n == n_pad:
+        return a
+    pad = jnp.zeros((n_pad - n,) + a.shape[1:], a.dtype)
+    return jnp.concatenate([a, pad])
+
+
+def _plane_specs(block_rows: int, n: int = 5):
+    """BlockSpecs of the streamed object planes (x, y, v, sid, valid):
+    row-block r of the minor axis, re-streamed for every group g."""
+    return [pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0))
+            for _ in range(n)]
+
+
+def _make_segment_window_agg_kernel(group: int):
     def kernel(win_ref, x_ref, y_ref, v_ref, sid_ref, valid_ref, out_ref):
+        g = pl.program_id(0)
+
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            _acc_init(out_ref)
+
         x0 = win_ref[0, 0]
         y0 = win_ref[0, 1]
         x1 = win_ref[0, 2]
@@ -63,20 +115,19 @@ def _make_segment_window_agg_kernel(n_seg: int):
         sid = sid_ref[...]
         valid = valid_ref[...] != 0
         inw = (xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1) & valid
-        for s in range(n_seg):  # static unroll: per-segment masked reductions
-            m = inw & (sid == s)
-            out_ref[0, s, 0] = jnp.sum(m.astype(jnp.float32))
-            out_ref[0, s, 1] = jnp.sum(jnp.where(m, vs, 0.0))
-            out_ref[0, s, 2] = jnp.min(jnp.where(m, vs, jnp.inf))
-            out_ref[0, s, 3] = jnp.max(jnp.where(m, vs, -jnp.inf))
+        for t in range(group):  # static unroll: per-segment masked reductions
+            s_glob = (g * group + t).astype(jnp.float32)
+            m = inw & (sid == s_glob)
+            _acc_cell(out_ref, t, m, vs)
     return kernel
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_seg", "block_rows", "interpret"))
+                   static_argnames=("n_seg", "block_rows", "seg_group",
+                                    "interpret"))
 def segment_window_agg_pallas(xs2d, ys2d, vals2d, sid2d, valid2d, window,
                               *, n_seg, block_rows=DEFAULT_BLOCK_ROWS,
-                              interpret=True):
+                              seg_group=None, interpret=True):
     """Per-segment window aggregation over 2-D laid-out object arrays.
 
     Args:
@@ -85,6 +136,8 @@ def segment_window_agg_pallas(xs2d, ys2d, vals2d, sid2d, valid2d, window,
       valid2d: int8/bool ``(R, 128)``.
       window: float32 ``(4,)`` closed rectangle (±inf edges allowed — an
         all-covering window yields full-segment aggregates).
+      seg_group: force the segments-per-program group size (tests use it
+        to exercise the multi-group outer axis at small shapes).
     Returns:
       float32 ``(n_seg, 4)`` = per-segment (count, sum, min, max);
       empty selection ⇒ (0, 0, +inf, -inf).
@@ -92,63 +145,60 @@ def segment_window_agg_pallas(xs2d, ys2d, vals2d, sid2d, valid2d, window,
     assert n_seg <= MAX_SEGMENTS, n_seg
     rows = xs2d.shape[0]
     assert rows % block_rows == 0, (rows, block_rows)
-    grid = rows // block_rows
+    group, n_groups, n_pad = plan_cell_groups(n_seg, 1,
+                                              block_rows=block_rows,
+                                              group=seg_group)
     win2d = window.reshape(1, 4).astype(jnp.float32)
     valid2d = valid2d.astype(jnp.int8)
 
-    partial = pl.pallas_call(
-        _make_segment_window_agg_kernel(n_seg),
-        grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((1, 4), lambda i: (0, 0)),           # window (broadcast)
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, n_seg, 4), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((grid, n_seg, 4), jnp.float32),
+    out = pl.pallas_call(
+        _make_segment_window_agg_kernel(group),
+        grid=(n_groups, rows // block_rows),
+        in_specs=[pl.BlockSpec((1, 4), lambda g, r: (0, 0))]  # window
+        + _plane_specs(block_rows),
+        out_specs=pl.BlockSpec((1, group, 4), lambda g, r: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_groups, group, 4), jnp.float32),
         interpret=interpret,
     )(win2d, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
       vals2d.astype(jnp.float32), sid2d.astype(jnp.float32), valid2d)
 
-    cnt = jnp.sum(partial[:, :, 0], axis=0)
-    s = jnp.sum(partial[:, :, 1], axis=0)
-    mn = jnp.min(partial[:, :, 2], axis=0)
-    mx = jnp.max(partial[:, :, 3], axis=0)
-    return jnp.stack([cnt, s, mn, mx], axis=-1)
+    return out.reshape(n_pad, 4)[:n_seg]
 
 
-def _make_segment_window_agg_multi_kernel(n_seg: int):
+def _make_segment_window_agg_multi_kernel(group: int):
     def kernel(win_ref, x_ref, y_ref, v_ref, sid_ref, valid_ref, out_ref):
+        g = pl.program_id(0)
+
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            _acc_init(out_ref)
+
         xs = x_ref[...]
         ys = y_ref[...]
         vs = v_ref[...]
         sid = sid_ref[...]
         valid = valid_ref[...] != 0
-        for s in range(n_seg):  # static unroll: segment s has its OWN
+        for t in range(group):  # static unroll: segment t has its OWN
             # window (the multi-query serving pass) — per-segment VREG
             # compares against the resident planes, no extra bytes moved
-            x0 = win_ref[s, 0]
-            y0 = win_ref[s, 1]
-            x1 = win_ref[s, 2]
-            y1 = win_ref[s, 3]
+            x0 = win_ref[t, 0]
+            y0 = win_ref[t, 1]
+            x1 = win_ref[t, 2]
+            y1 = win_ref[t, 3]
+            s_glob = (g * group + t).astype(jnp.float32)
             m = ((xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1)
-                 & valid & (sid == s))
-            out_ref[0, s, 0] = jnp.sum(m.astype(jnp.float32))
-            out_ref[0, s, 1] = jnp.sum(jnp.where(m, vs, 0.0))
-            out_ref[0, s, 2] = jnp.min(jnp.where(m, vs, jnp.inf))
-            out_ref[0, s, 3] = jnp.max(jnp.where(m, vs, -jnp.inf))
+                 & valid & (sid == s_glob))
+            _acc_cell(out_ref, t, m, vs)
     return kernel
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("n_seg", "block_rows", "interpret"))
+                   static_argnames=("n_seg", "block_rows", "seg_group",
+                                    "interpret"))
 def segment_window_agg_multi_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
                                     windows, *, n_seg,
                                     block_rows=DEFAULT_BLOCK_ROWS,
-                                    interpret=True):
+                                    seg_group=None, interpret=True):
     """Per-segment window aggregation with PER-SEGMENT windows.
 
     The multi-session serving primitive: one packed pass over the union
@@ -160,38 +210,36 @@ def segment_window_agg_multi_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
     assert n_seg <= MAX_SEGMENTS, n_seg
     rows = xs2d.shape[0]
     assert rows % block_rows == 0, (rows, block_rows)
-    grid = rows // block_rows
-    win2d = windows.reshape(n_seg, 4).astype(jnp.float32)
+    group, n_groups, n_pad = plan_cell_groups(n_seg, 1,
+                                              block_rows=block_rows,
+                                              group=seg_group)
+    win2d = _pad_rows(windows.reshape(n_seg, 4).astype(jnp.float32), n_pad)
     valid2d = valid2d.astype(jnp.int8)
 
-    partial = pl.pallas_call(
-        _make_segment_window_agg_multi_kernel(n_seg),
-        grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((n_seg, 4), lambda i: (0, 0)),       # windows (broadcast)
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, n_seg, 4), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((grid, n_seg, 4), jnp.float32),
+    out = pl.pallas_call(
+        _make_segment_window_agg_multi_kernel(group),
+        grid=(n_groups, rows // block_rows),
+        in_specs=[pl.BlockSpec((group, 4), lambda g, r: (g, 0))]  # windows
+        + _plane_specs(block_rows),
+        out_specs=pl.BlockSpec((1, group, 4), lambda g, r: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_groups, group, 4), jnp.float32),
         interpret=interpret,
     )(win2d, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
       vals2d.astype(jnp.float32), sid2d.astype(jnp.float32), valid2d)
 
-    cnt = jnp.sum(partial[:, :, 0], axis=0)
-    s = jnp.sum(partial[:, :, 1], axis=0)
-    mn = jnp.min(partial[:, :, 2], axis=0)
-    mx = jnp.max(partial[:, :, 3], axis=0)
-    return jnp.stack([cnt, s, mn, mx], axis=-1)
+    return out.reshape(n_pad, 4)[:n_seg]
 
 
-def _make_segment_window_bin_agg_kernel(n_seg: int, bx: int, by: int):
+def _make_segment_window_bin_agg_kernel(group: int, bx: int, by: int):
     k = bx * by
 
     def kernel(win_ref, x_ref, y_ref, v_ref, sid_ref, valid_ref, out_ref):
+        g = pl.program_id(0)
+
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            _acc_init(out_ref)
+
         x0 = win_ref[0, 0]
         y0 = win_ref[0, 1]
         x1 = win_ref[0, 2]
@@ -210,25 +258,21 @@ def _make_segment_window_bin_agg_kernel(n_seg: int, bx: int, by: int):
         cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32), 0, bx - 1)
         cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32), 0, by - 1)
         cid = cy * bx + cx
-        for s in range(n_seg):  # static unroll over segments…
-            ms = inw & (sid == s)
-            for c in range(k):  # …and window bins: S·K masked reductions
-                m = ms & (cid == c)
-                out_ref[0, s * k + c, 0] = jnp.sum(m.astype(jnp.float32))
-                out_ref[0, s * k + c, 1] = jnp.sum(jnp.where(m, vs, 0.0))
-                out_ref[0, s * k + c, 2] = jnp.min(jnp.where(m, vs, jnp.inf))
-                out_ref[0, s * k + c, 3] = jnp.max(
-                    jnp.where(m, vs, -jnp.inf))
+        for t in range(group):  # static unroll over the group's segments…
+            s_glob = (g * group + t).astype(jnp.float32)
+            ms = inw & (sid == s_glob)
+            for c in range(k):  # …and window bins: group·K masked reductions
+                _acc_cell(out_ref, t * k + c, ms & (cid == c), vs)
     return kernel
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n_seg", "bx", "by", "block_rows",
-                                    "interpret"))
+                                    "seg_group", "interpret"))
 def segment_window_bin_agg_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
                                   window, *, n_seg, bx, by,
                                   block_rows=DEFAULT_BLOCK_ROWS,
-                                  interpret=True):
+                                  seg_group=None, interpret=True):
     """Per-segment, per-window-bin aggregation — the heatmap primitive.
 
     One invocation gives, for every segment (= tile) of a refinement
@@ -240,52 +284,50 @@ def segment_window_bin_agg_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
     """
     k = bx * by
     assert n_seg <= MAX_SEGMENTS, n_seg
-    assert n_seg * k <= MAX_UNROLL, (n_seg, bx, by)
     rows = xs2d.shape[0]
     assert rows % block_rows == 0, (rows, block_rows)
-    grid = rows // block_rows
+    group, n_groups, n_pad = plan_cell_groups(n_seg, k,
+                                              block_rows=block_rows,
+                                              group=seg_group)
     win2d = window.reshape(1, 4).astype(jnp.float32)
     valid2d = valid2d.astype(jnp.int8)
 
-    partial = pl.pallas_call(
-        _make_segment_window_bin_agg_kernel(n_seg, bx, by),
-        grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((1, 4), lambda i: (0, 0)),           # window (broadcast)
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, n_seg * k, 4), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((grid, n_seg * k, 4), jnp.float32),
+    out = pl.pallas_call(
+        _make_segment_window_bin_agg_kernel(group, bx, by),
+        grid=(n_groups, rows // block_rows),
+        in_specs=[pl.BlockSpec((1, 4), lambda g, r: (0, 0))]  # window
+        + _plane_specs(block_rows),
+        out_specs=pl.BlockSpec((1, group * k, 4), lambda g, r: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_groups, group * k, 4),
+                                       jnp.float32),
         interpret=interpret,
     )(win2d, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
       vals2d.astype(jnp.float32), sid2d.astype(jnp.float32), valid2d)
 
-    cnt = jnp.sum(partial[:, :, 0], axis=0)
-    s = jnp.sum(partial[:, :, 1], axis=0)
-    mn = jnp.min(partial[:, :, 2], axis=0)
-    mx = jnp.max(partial[:, :, 3], axis=0)
-    return jnp.stack([cnt, s, mn, mx], axis=-1).reshape(n_seg, k, 4)
+    return out.reshape(n_pad, k, 4)[:n_seg]
 
 
-def _make_segment_window_bin_agg_multi_kernel(n_seg: int, bx: int, by: int):
+def _make_segment_window_bin_agg_multi_kernel(group: int, bx: int, by: int):
     k = bx * by
 
     def kernel(win_ref, x_ref, y_ref, v_ref, sid_ref, valid_ref, out_ref):
+        g = pl.program_id(0)
+
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            _acc_init(out_ref)
+
         xs = x_ref[...]
         ys = y_ref[...]
         vs = v_ref[...]
         sid = sid_ref[...]
         valid = valid_ref[...] != 0
-        for s in range(n_seg):  # static unroll over segments: each has
+        for t in range(group):  # static unroll over segments: each has
             # its OWN window AND the bx×by grid laid over it
-            x0 = win_ref[s, 0]
-            y0 = win_ref[s, 1]
-            x1 = win_ref[s, 2]
-            y1 = win_ref[s, 3]
+            x0 = win_ref[t, 0]
+            y0 = win_ref[t, 1]
+            x1 = win_ref[t, 2]
+            y1 = win_ref[t, 3]
             inw = (xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1) & valid
             cw = jnp.maximum((x1 - x0) / bx, 1e-30)
             ch = jnp.maximum((y1 - y0) / by, 1e-30)
@@ -294,24 +336,20 @@ def _make_segment_window_bin_agg_multi_kernel(n_seg: int, bx: int, by: int):
             cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32),
                           0, by - 1)
             cid = cy * bx + cx
-            ms = inw & (sid == s)
-            for c in range(k):  # …and window bins: S·K masked reductions
-                m = ms & (cid == c)
-                out_ref[0, s * k + c, 0] = jnp.sum(m.astype(jnp.float32))
-                out_ref[0, s * k + c, 1] = jnp.sum(jnp.where(m, vs, 0.0))
-                out_ref[0, s * k + c, 2] = jnp.min(jnp.where(m, vs, jnp.inf))
-                out_ref[0, s * k + c, 3] = jnp.max(
-                    jnp.where(m, vs, -jnp.inf))
+            s_glob = (g * group + t).astype(jnp.float32)
+            ms = inw & (sid == s_glob)
+            for c in range(k):  # …and window bins: group·K masked reductions
+                _acc_cell(out_ref, t * k + c, ms & (cid == c), vs)
     return kernel
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n_seg", "bx", "by", "block_rows",
-                                    "interpret"))
+                                    "seg_group", "interpret"))
 def segment_window_bin_agg_multi_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
                                         windows, *, n_seg, bx, by,
                                         block_rows=DEFAULT_BLOCK_ROWS,
-                                        interpret=True):
+                                        seg_group=None, interpret=True):
     """Per-segment, per-bin aggregation with PER-SEGMENT windows.
 
     The multi-session heatmap serving primitive: segment s is binned by
@@ -323,76 +361,70 @@ def segment_window_bin_agg_multi_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
     """
     k = bx * by
     assert n_seg <= MAX_SEGMENTS, n_seg
-    assert n_seg * k <= MAX_UNROLL, (n_seg, bx, by)
     rows = xs2d.shape[0]
     assert rows % block_rows == 0, (rows, block_rows)
-    grid = rows // block_rows
-    win2d = windows.reshape(n_seg, 4).astype(jnp.float32)
+    group, n_groups, n_pad = plan_cell_groups(n_seg, k,
+                                              block_rows=block_rows,
+                                              group=seg_group)
+    win2d = _pad_rows(windows.reshape(n_seg, 4).astype(jnp.float32), n_pad)
     valid2d = valid2d.astype(jnp.int8)
 
-    partial = pl.pallas_call(
-        _make_segment_window_bin_agg_multi_kernel(n_seg, bx, by),
-        grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((n_seg, 4), lambda i: (0, 0)),       # windows (broadcast)
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, n_seg * k, 4), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((grid, n_seg * k, 4), jnp.float32),
+    out = pl.pallas_call(
+        _make_segment_window_bin_agg_multi_kernel(group, bx, by),
+        grid=(n_groups, rows // block_rows),
+        in_specs=[pl.BlockSpec((group, 4), lambda g, r: (g, 0))]  # windows
+        + _plane_specs(block_rows),
+        out_specs=pl.BlockSpec((1, group * k, 4), lambda g, r: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_groups, group * k, 4),
+                                       jnp.float32),
         interpret=interpret,
     )(win2d, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
       vals2d.astype(jnp.float32), sid2d.astype(jnp.float32), valid2d)
 
-    cnt = jnp.sum(partial[:, :, 0], axis=0)
-    s = jnp.sum(partial[:, :, 1], axis=0)
-    mn = jnp.min(partial[:, :, 2], axis=0)
-    mx = jnp.max(partial[:, :, 3], axis=0)
-    return jnp.stack([cnt, s, mn, mx], axis=-1).reshape(n_seg, k, 4)
+    return out.reshape(n_pad, k, 4)[:n_seg]
 
 
-def _make_segment_bin_agg_edges_kernel(n_seg: int, gx: int, gy: int):
+def _make_segment_bin_agg_edges_kernel(group: int, gx: int, gy: int):
     k = gx * gy
 
     def kernel(xe_ref, ye_ref, x_ref, y_ref, v_ref, sid_ref, valid_ref,
                out_ref):
+        g = pl.program_id(0)
+
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            _acc_init(out_ref)
+
         xs = x_ref[...]
         ys = y_ref[...]
         vs = v_ref[...]
         sid = sid_ref[...]
         valid = valid_ref[...] != 0
-        for s in range(n_seg):  # static unroll over segments…
+        for t in range(group):  # static unroll over segments…
             # ownership under explicit edges: child i owns
             # [edge_i, edge_{i+1}); outer overflow clamps into the
             # boundary cells — same rule as geometry.edge_cell_ids
             cx = jnp.zeros_like(xs, jnp.int32)
             for i in range(1, gx):
-                cx = cx + (xs >= xe_ref[s, i]).astype(jnp.int32)
+                cx = cx + (xs >= xe_ref[t, i]).astype(jnp.int32)
             cy = jnp.zeros_like(ys, jnp.int32)
             for i in range(1, gy):
-                cy = cy + (ys >= ye_ref[s, i]).astype(jnp.int32)
+                cy = cy + (ys >= ye_ref[t, i]).astype(jnp.int32)
             cid = cy * gx + cx
-            ms = valid & (sid == s)
-            for c in range(k):  # …and cells: S·K masked reductions
-                m = ms & (cid == c)
-                out_ref[0, s * k + c, 0] = jnp.sum(m.astype(jnp.float32))
-                out_ref[0, s * k + c, 1] = jnp.sum(jnp.where(m, vs, 0.0))
-                out_ref[0, s * k + c, 2] = jnp.min(jnp.where(m, vs, jnp.inf))
-                out_ref[0, s * k + c, 3] = jnp.max(
-                    jnp.where(m, vs, -jnp.inf))
+            s_glob = (g * group + t).astype(jnp.float32)
+            ms = valid & (sid == s_glob)
+            for c in range(k):  # …and cells: group·K masked reductions
+                _acc_cell(out_ref, t * k + c, ms & (cid == c), vs)
     return kernel
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n_seg", "gx", "gy", "block_rows",
-                                    "interpret"))
+                                    "seg_group", "interpret"))
 def segment_bin_agg_edges_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
                                  x_edges, y_edges, *, n_seg, gx, gy,
                                  block_rows=DEFAULT_BLOCK_ROWS,
-                                 interpret=True):
+                                 seg_group=None, interpret=True):
     """Per-segment, per-cell aggregation along explicit split edges.
 
     Like :func:`segment_bin_agg_pallas`, but segment s is cut along its
@@ -402,53 +434,54 @@ def segment_bin_agg_edges_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
     """
     k = gx * gy
     assert n_seg <= MAX_SEGMENTS, n_seg
-    assert n_seg * k <= MAX_UNROLL, (n_seg, gx, gy)
     rows = xs2d.shape[0]
     assert rows % block_rows == 0, (rows, block_rows)
-    grid = rows // block_rows
-    xe2d = x_edges.reshape(n_seg, gx + 1).astype(jnp.float32)
-    ye2d = y_edges.reshape(n_seg, gy + 1).astype(jnp.float32)
+    group, n_groups, n_pad = plan_cell_groups(n_seg, k,
+                                              block_rows=block_rows,
+                                              group=seg_group)
+    xe2d = _pad_rows(x_edges.reshape(n_seg, gx + 1).astype(jnp.float32),
+                     n_pad)
+    ye2d = _pad_rows(y_edges.reshape(n_seg, gy + 1).astype(jnp.float32),
+                     n_pad)
     valid2d = valid2d.astype(jnp.int8)
 
-    partial = pl.pallas_call(
-        _make_segment_bin_agg_edges_kernel(n_seg, gx, gy),
-        grid=(grid,),
+    out = pl.pallas_call(
+        _make_segment_bin_agg_edges_kernel(group, gx, gy),
+        grid=(n_groups, rows // block_rows),
         in_specs=[
-            pl.BlockSpec((n_seg, gx + 1), lambda i: (0, 0)),  # x edges (broadcast)
-            pl.BlockSpec((n_seg, gy + 1), lambda i: (0, 0)),  # y edges (broadcast)
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, n_seg * k, 4), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((grid, n_seg * k, 4), jnp.float32),
+            pl.BlockSpec((group, gx + 1), lambda g, r: (g, 0)),  # x edges
+            pl.BlockSpec((group, gy + 1), lambda g, r: (g, 0)),  # y edges
+        ] + _plane_specs(block_rows),
+        out_specs=pl.BlockSpec((1, group * k, 4), lambda g, r: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_groups, group * k, 4),
+                                       jnp.float32),
         interpret=interpret,
     )(xe2d, ye2d, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
       vals2d.astype(jnp.float32), sid2d.astype(jnp.float32), valid2d)
 
-    cnt = jnp.sum(partial[:, :, 0], axis=0)
-    s = jnp.sum(partial[:, :, 1], axis=0)
-    mn = jnp.min(partial[:, :, 2], axis=0)
-    mx = jnp.max(partial[:, :, 3], axis=0)
-    return jnp.stack([cnt, s, mn, mx], axis=-1).reshape(n_seg, k, 4)
+    return out.reshape(n_pad, k, 4)[:n_seg]
 
 
-def _make_segment_bin_agg_kernel(n_seg: int, gx: int, gy: int):
+def _make_segment_bin_agg_kernel(group: int, gx: int, gy: int):
     k = gx * gy
 
     def kernel(bbox_ref, x_ref, y_ref, v_ref, sid_ref, valid_ref, out_ref):
+        g = pl.program_id(0)
+
+        @pl.when(pl.program_id(1) == 0)
+        def _init():
+            _acc_init(out_ref)
+
         xs = x_ref[...]
         ys = y_ref[...]
         vs = v_ref[...]
         sid = sid_ref[...]
         valid = valid_ref[...] != 0
-        for s in range(n_seg):  # static unroll over segments…
-            x0 = bbox_ref[s, 0]
-            y0 = bbox_ref[s, 1]
-            x1 = bbox_ref[s, 2]
-            y1 = bbox_ref[s, 3]
+        for t in range(group):  # static unroll over segments…
+            x0 = bbox_ref[t, 0]
+            y0 = bbox_ref[t, 1]
+            x1 = bbox_ref[t, 2]
+            y1 = bbox_ref[t, 3]
             # pure clip-binning against segment s's own bbox (ownership
             # rule — see kernels/bin_agg.py)
             cw = jnp.maximum((x1 - x0) / gx, 1e-30)
@@ -458,23 +491,19 @@ def _make_segment_bin_agg_kernel(n_seg: int, gx: int, gy: int):
             cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32),
                           0, gy - 1)
             cid = cy * gx + cx
-            ms = valid & (sid == s)
-            for c in range(k):  # …and cells: S·K masked reductions
-                m = ms & (cid == c)
-                out_ref[0, s * k + c, 0] = jnp.sum(m.astype(jnp.float32))
-                out_ref[0, s * k + c, 1] = jnp.sum(jnp.where(m, vs, 0.0))
-                out_ref[0, s * k + c, 2] = jnp.min(jnp.where(m, vs, jnp.inf))
-                out_ref[0, s * k + c, 3] = jnp.max(
-                    jnp.where(m, vs, -jnp.inf))
+            s_glob = (g * group + t).astype(jnp.float32)
+            ms = valid & (sid == s_glob)
+            for c in range(k):  # …and cells: group·K masked reductions
+                _acc_cell(out_ref, t * k + c, ms & (cid == c), vs)
     return kernel
 
 
 @functools.partial(jax.jit,
                    static_argnames=("n_seg", "gx", "gy", "block_rows",
-                                    "interpret"))
+                                    "seg_group", "interpret"))
 def segment_bin_agg_pallas(xs2d, ys2d, vals2d, sid2d, valid2d, bboxes, *,
                            n_seg, gx, gy, block_rows=DEFAULT_BLOCK_ROWS,
-                           interpret=True):
+                           seg_group=None, interpret=True):
     """Per-segment, per-cell aggregation: segment s split by its bboxes[s].
 
     Args mirror :func:`segment_window_agg_pallas`; ``bboxes`` is float32
@@ -483,32 +512,25 @@ def segment_bin_agg_pallas(xs2d, ys2d, vals2d, sid2d, valid2d, bboxes, *,
     """
     k = gx * gy
     assert n_seg <= MAX_SEGMENTS, n_seg
-    assert n_seg * k <= MAX_UNROLL, (n_seg, gx, gy)
     rows = xs2d.shape[0]
     assert rows % block_rows == 0, (rows, block_rows)
-    grid = rows // block_rows
-    bboxes2d = bboxes.reshape(n_seg, 4).astype(jnp.float32)
+    group, n_groups, n_pad = plan_cell_groups(n_seg, k,
+                                              block_rows=block_rows,
+                                              group=seg_group)
+    bboxes2d = _pad_rows(bboxes.reshape(n_seg, 4).astype(jnp.float32),
+                         n_pad)
     valid2d = valid2d.astype(jnp.int8)
 
-    partial = pl.pallas_call(
-        _make_segment_bin_agg_kernel(n_seg, gx, gy),
-        grid=(grid,),
-        in_specs=[
-            pl.BlockSpec((n_seg, 4), lambda i: (0, 0)),       # bboxes (broadcast)
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, n_seg * k, 4), lambda i: (i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((grid, n_seg * k, 4), jnp.float32),
+    out = pl.pallas_call(
+        _make_segment_bin_agg_kernel(group, gx, gy),
+        grid=(n_groups, rows // block_rows),
+        in_specs=[pl.BlockSpec((group, 4), lambda g, r: (g, 0))]  # bboxes
+        + _plane_specs(block_rows),
+        out_specs=pl.BlockSpec((1, group * k, 4), lambda g, r: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_groups, group * k, 4),
+                                       jnp.float32),
         interpret=interpret,
     )(bboxes2d, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
       vals2d.astype(jnp.float32), sid2d.astype(jnp.float32), valid2d)
 
-    cnt = jnp.sum(partial[:, :, 0], axis=0)
-    s = jnp.sum(partial[:, :, 1], axis=0)
-    mn = jnp.min(partial[:, :, 2], axis=0)
-    mx = jnp.max(partial[:, :, 3], axis=0)
-    return jnp.stack([cnt, s, mn, mx], axis=-1).reshape(n_seg, k, 4)
+    return out.reshape(n_pad, k, 4)[:n_seg]

@@ -572,3 +572,76 @@ def test_compressed_psum_multidev():
         assert np.abs(got - true_mean).max() <= scale + 1e-5
         print("COMPRESS-8DEV-OK")
     """))
+
+
+def test_distributed_fused_vs_composed_bit_for_bit():
+    """The fused classify→scatter→select megakernel path (fused=True,
+    the default) against the historical composed chain (fused=False),
+    on the 8-device mesh: every output of the scalar-query AND heatmap
+    session steps must be bit-for-bit identical — on the fresh state,
+    and again after a refine epoch has cracked the sharded cell ids in
+    place. This is the acceptance contract that let the fused path
+    replace the chain as the default."""
+    print(run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.core.distributed import (
+            DistributedAQPEngine, DistConfig, _empty_cache,
+            make_init_state, make_refine_epoch, make_session_heatmap_step,
+            make_session_query_step)
+        from repro.data import make_synthetic_dataset
+        from repro.data.synthetic import exploration_path
+
+        BX, BY = 4, 3
+        NB = BX * BY
+        mesh = jax.make_mesh((8,), ("data",))
+        ds = make_synthetic_dataset(n=64_000, seed=5)
+        cfg = DistConfig(grid=(16, 16), capacity=1024,
+                         min_split_count=128)
+        eng = DistributedAQPEngine(ds, mesh, cfg)   # device staging only
+        xs, ys, vals = eng.xs, eng.ys, eng.vals["a0"]
+        wins = exploration_path(ds, n_queries=2, target_objects=9000)
+
+        def assert_same(a, b, ctx):
+            assert sorted(a) == sorted(b), (ctx, sorted(a), sorted(b))
+            for k in a:
+                np.testing.assert_array_equal(
+                    np.asarray(a[k]), np.asarray(b[k]),
+                    err_msg=f"{ctx}:{k}")
+
+        q_f = make_session_query_step(mesh, cfg, fused=True)
+        q_c = make_session_query_step(mesh, cfg, fused=False)
+        h_f = make_session_heatmap_step(mesh, cfg, (BX, BY), "sum",
+                                        with_policy=False, fused=True)
+        h_c = make_session_heatmap_step(mesh, cfg, (BX, BY), "sum",
+                                        with_policy=False, fused=False)
+        epoch = make_refine_epoch(mesh, cfg)
+
+        init = make_init_state(mesh, cfg)
+        st = init(xs, ys, vals, eng.domain)
+        phi = jnp.float32(0.05)
+        for i, w in enumerate(wins):
+            win = jnp.asarray(w, jnp.float32)
+            out_f = q_f(st, xs, ys, vals, win, phi)
+            out_c = q_c(st, xs, ys, vals, win, phi)
+            assert_same(out_f, out_c, f"query[{i}]")
+            # crack the state on the tiles the step just read, then the
+            # next loop iteration re-checks parity on the refined state
+            st, _ = epoch(st, xs, ys, vals, win, out_f["sel"])
+
+        # heatmap step: fresh state, then the epoch-refined one; the
+        # grouped exact-cache (a pytree) must also match leaf-for-leaf
+        st2 = init(xs, ys, vals, eng.domain)
+        for i, state in enumerate((st2, st)):
+            cache = _empty_cache(cfg.capacity, NB)
+            args = (xs, ys, vals, jnp.asarray(wins[0], jnp.float32),
+                    phi, jnp.zeros((NB,), jnp.float32), jnp.float32(0.0))
+            out_f, cache_f = h_f(state, cache, *args)
+            out_c, cache_c = h_c(state, cache, *args)
+            assert_same(out_f, out_c, f"heatmap[{i}]")
+            for lf, lc in zip(jax.tree_util.tree_leaves(cache_f),
+                              jax.tree_util.tree_leaves(cache_c)):
+                np.testing.assert_array_equal(np.asarray(lf),
+                                              np.asarray(lc))
+        print("DIST-FUSED-PARITY-OK")
+    """))

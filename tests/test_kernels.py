@@ -413,3 +413,120 @@ def test_segment_window_bin_agg_multi_backends_agree(lens, grid):
             xs[sl], ys[sl], vs[sl], [0, lens[s]], wins[s], bx=bx, by=by,
             backend="np"))[0]
         np.testing.assert_array_equal(a[s], solo)
+
+
+def _seg_bounds_vminmax(lens, rng_seed=23):
+    """Segments plus per-segment sound value intervals (fold order)."""
+    xs, ys, vs, bounds = _segments(lens)
+    rng = np.random.default_rng(rng_seed)
+    n_seg = len(lens)
+    vmin_s = rng.uniform(-40, -10, n_seg).astype(np.float32)
+    vmax_s = vmin_s + rng.uniform(5, 60, n_seg).astype(np.float32)
+    return xs, ys, vs, bounds, vmin_s, vmax_s
+
+
+@pytest.mark.parametrize("lens", [[1, 300], [0, 37, 500, 128, 3],
+                                  [1201, 0, 1799, 3001]])
+@pytest.mark.parametrize("grid", [(1, 1), (2, 2), (4, 3)])
+def test_fused_select_backends_agree(lens, grid):
+    """Fused classify→scatter→select megakernel: three-backend parity on
+    both outputs. lens includes odd counts (padded-tail rows of the 2-D
+    grid), empty segments, and a (1,1) single-bin grid (the scalar-query
+    route through nb=1)."""
+    bx, by = grid
+    xs, ys, vs, bounds, vmin_s, vmax_s = _seg_bounds_vminmax(lens)
+    win = np.array([15, 25, 80, 75], np.float32)
+    a_agg, a_w = ops.segment_window_bin_select(
+        xs, ys, vs, bounds, win, vmin_s, vmax_s, bx=bx, by=by,
+        backend="np")
+    b_agg, b_w = ops.segment_window_bin_select(
+        xs, ys, vs, bounds, win, vmin_s, vmax_s, bx=bx, by=by,
+        backend="jnp")
+    c_agg, c_w = ops.segment_window_bin_select(
+        xs, ys, vs, bounds, win, vmin_s, vmax_s, bx=bx, by=by,
+        backend="pallas")
+    a_agg, b_agg, c_agg = (np.asarray(o) for o in (a_agg, b_agg, c_agg))
+    a_w, b_w, c_w = (np.asarray(o) for o in (a_w, b_w, c_w))
+    np.testing.assert_allclose(a_agg, b_agg, rtol=1e-4, atol=2e-3)
+    np.testing.assert_allclose(b_agg, c_agg, rtol=1e-5, atol=2e-3)
+    np.testing.assert_array_equal(a_agg[:, :, 0], b_agg[:, :, 0])
+    np.testing.assert_array_equal(b_agg[:, :, 0], c_agg[:, :, 0])
+    # the np fused agg IS the composed np grouped kernel, bit-for-bit —
+    # fusion may not move a single ulp of the established mirror
+    composed = np.asarray(ops.segment_window_bin_agg(
+        xs, ys, vs, bounds, win, bx=bx, by=by, backend="np"))
+    np.testing.assert_array_equal(a_agg, composed)
+    # suffix widths: shape (S+1, nb), row S exactly zero on EVERY
+    # backend (the "all segments folded" row — φ=0 must be reachable)
+    n_seg, nb = len(lens), bx * by
+    for w in (a_w, b_w, c_w):
+        assert w.shape == (n_seg + 1, nb)
+        np.testing.assert_array_equal(w[-1], np.zeros(nb, w.dtype))
+        assert (np.diff(w[::-1], axis=0) >= 0).all()  # monotone fold
+    np.testing.assert_allclose(a_w, b_w, rtol=1e-4, atol=2e-3)
+    np.testing.assert_allclose(b_w, c_w, rtol=1e-5, atol=2e-3)
+    # f64 oracle for the np suffix widths: reversed cumsum of cnt·Δv
+    dv = (vmax_s - vmin_s).astype(np.float64)
+    per = composed[:, :, 0] * dv[:, None]
+    want = np.concatenate(
+        [np.cumsum(per[::-1], axis=0)[::-1], np.zeros((1, nb))])
+    np.testing.assert_array_equal(a_w, want)
+
+
+@pytest.mark.parametrize("lens", [[0, 37, 500, 128, 3], [600] * 5])
+def test_fused_select_all_negative_values(lens):
+    """All-negative value plane: a zero-initialized accumulator would
+    corrupt max; extrema must stay exact across the fused backends."""
+    bx = by = 2
+    xs, ys, vs, bounds, vmin_s, vmax_s = _seg_bounds_vminmax(lens)
+    vs = -np.abs(vs) - 1.0
+    win = np.array([15, 25, 80, 75], np.float32)
+    outs = [ops.segment_window_bin_select(
+        xs, ys, vs, bounds, win, vmin_s, vmax_s, bx=bx, by=by,
+        backend=bk) for bk in ("np", "jnp", "pallas")]
+    a = np.asarray(outs[0][0])
+    for agg, _ in outs[1:]:
+        agg = np.asarray(agg)
+        np.testing.assert_array_equal(a[:, :, 0], agg[:, :, 0])
+        np.testing.assert_array_equal(a[:, :, 2].astype(np.float32),
+                                      agg[:, :, 2])
+        np.testing.assert_array_equal(a[:, :, 3].astype(np.float32),
+                                      agg[:, :, 3])
+    assert (a[a[:, :, 0] > 0, 3] < 0).all()  # maxima stay negative
+
+
+def test_fused_select_empty_window():
+    """A window covering no points: zero counts, ±inf extrema, and the
+    suffix widths still fold to exactly zero everywhere (cnt=0 ⇒ w=0)."""
+    xs, ys, vs, bounds, vmin_s, vmax_s = _seg_bounds_vminmax(
+        [64, 0, 129])
+    win = np.array([200, 200, 300, 300], np.float32)  # off the domain
+    for bk in ("np", "jnp", "pallas"):
+        agg, w = ops.segment_window_bin_select(
+            xs, ys, vs, bounds, win, vmin_s, vmax_s, bx=2, by=2,
+            backend=bk)
+        agg, w = np.asarray(agg), np.asarray(w)
+        np.testing.assert_array_equal(agg[:, :, 0],
+                                      np.zeros_like(agg[:, :, 0]))
+        assert (agg[:, :, 2] > 0).all() and np.isinf(agg[:, :, 2]).all()
+        assert (agg[:, :, 3] < 0).all() and np.isinf(agg[:, :, 3]).all()
+        np.testing.assert_array_equal(w, np.zeros_like(w))
+
+
+@pytest.mark.parametrize("seg_group", [1, 2, 3])
+def test_fused_select_forced_multi_group(seg_group):
+    """The 2-D grid's outer (cell-group) axis: forcing group sizes that
+    split 5 segments across 2–5 programs must be bit-identical to the
+    planner's own choice — accumulation order within a (t, c) cell is
+    row-block order either way."""
+    lens = [301, 0, 512, 77, 1000]
+    xs, ys, vs, bounds, vmin_s, vmax_s = _seg_bounds_vminmax(lens)
+    win = np.array([10, 10, 90, 90], np.float32)
+    base_agg, base_w = ops.segment_window_bin_select(
+        xs, ys, vs, bounds, win, vmin_s, vmax_s, bx=3, by=2,
+        backend="pallas")
+    agg, w = ops.segment_window_bin_select(
+        xs, ys, vs, bounds, win, vmin_s, vmax_s, bx=3, by=2,
+        backend="pallas", seg_group=seg_group)
+    np.testing.assert_array_equal(np.asarray(base_agg), np.asarray(agg))
+    np.testing.assert_array_equal(np.asarray(base_w), np.asarray(w))
