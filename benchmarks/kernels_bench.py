@@ -44,6 +44,13 @@ from .common import emit
 # (0.89 GB/s measured device-staged min-of-reps on this container)
 MIN_GROUPED_JNP_GB_S = 0.80
 
+# the fused jnp SEGMENT oracle's floor at the 16-cell (4 seg × 2×2)
+# bench shape: the flat broadcast path measured 0.088 GB/s; the
+# segment_bin_agg4 keyed rewrite (one-hot contraction for count+sum,
+# class-stream sweeps only for min/max) measured 0.17 GB/s min-of-reps
+# on this container — floor set with ~20% lane-noise headroom
+MIN_FUSED_SELECT_JNP_GB_S = 0.14
+
 
 def _sync(out):
     """Materialize a result (or tuple of results) on host."""
@@ -123,8 +130,13 @@ def main():
 
     t = _time(ops.segment_window_bin_select, xs, ys, vs, bounds, win,
               vmin_s, vmax_s, bx=2, by=2, backend="jnp")
-    d, _ = _bw_derived(nb4, t, "jnp")
+    d, r = _bw_derived(nb4, t, "jnp")
     emit(f"fused_select_jnp_{_klabel(n)}_4seg_2x2", t * 1e6, d)
+    if common.SMOKE:
+        assert r["achieved_GB_s"] >= MIN_FUSED_SELECT_JNP_GB_S, (
+            f"fused jnp segment oracle regressed: "
+            f"{r['achieved_GB_s']:.3f} GB/s "
+            f"< {MIN_FUSED_SELECT_JNP_GB_S} floor on the smoke shape")
 
     n2 = 16_384 if common.SMOKE else 65_536
     b2 = np.linspace(0, n2, n_seg + 1).astype(np.int64)

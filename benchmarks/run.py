@@ -7,10 +7,14 @@ table (§Roofline) if dry-run artifacts exist under experiments/dryrun.
     PYTHONPATH=src python -m benchmarks.run --smoke    # tiny-n CI smoke
 
 ``--smoke`` runs every benchmark at toy size (120 K rows, 12-query
-paths) so CI exercises B1–B8 end-to-end each push — the numbers are
+paths) so CI exercises B1–B9 end-to-end each push — the numbers are
 meaningless, the code paths are not. B7 (serving_concurrency) carries
 hard acceptance gates: φ-containment on every served answer and
 bit-for-bit parity of a micro-batched tick vs the sequential reference.
+B9 (predictive_exploration) gates the predictive pre-cracking claim:
+at equal total I/O, the predicted arm's p99 query-time reads must beat
+the reactive arm's on the linear-pan script, with φ=0 answers
+bit-identical.
 """
 from __future__ import annotations
 
@@ -30,7 +34,8 @@ def main(smoke: bool = False) -> None:
     print("name,us_per_call,derived")
     from . import (accuracy_sweep, adaptation_cost, fig2_exploration,
                    heatmap_exploration, kernels_bench, objects_read,
-                   serving_concurrency, streaming_exploration)
+                   predictive_exploration, serving_concurrency,
+                   streaming_exploration)
     os.makedirs("experiments", exist_ok=True)
     fig2_exploration.main(save_csv="experiments/fig2.csv")
     objects_read.main()
@@ -40,6 +45,7 @@ def main(smoke: bool = False) -> None:
     heatmap_exploration.main()
     serving_concurrency.main()
     streaming_exploration.main()
+    predictive_exploration.main()
 
     # persist the full sweep: CI uploads experiments/BENCH_*.json as a
     # workflow artifact so regressions are diffable across pushes

@@ -5,6 +5,8 @@ from .bounds import (AccuracyPolicy, GroupedAccumulator, GroupedPendingTile,
                      QueryResult)
 from .engine import AQPEngine, EngineTrace
 from .index import AdaptStats, ChunkIndexSet, EpochStage, IndexConfig, TileIndex
+from .predict import (TrajectoryStep, ViewportPredictor, prefetch_crack,
+                      resolve_learned_salience)
 from .query import (evaluate, evaluate_heatmap, evaluate_heatmap_oracle,
                     evaluate_oracle)
 from .refine import (HeatmapQueryAdapter, RefinementDriver,
@@ -19,6 +21,8 @@ __all__ = [
     "QueryResult", "QueryAccumulator", "PendingTile",
     "HeatmapResult", "GroupedAccumulator", "GroupedPendingTile",
     "RefinementDriver", "ScalarQueryAdapter", "HeatmapQueryAdapter",
+    "ViewportPredictor", "TrajectoryStep", "prefetch_crack",
+    "resolve_learned_salience",
     "evaluate", "evaluate_oracle",
     "evaluate_heatmap", "evaluate_heatmap_oracle",
 ]

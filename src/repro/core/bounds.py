@@ -112,10 +112,12 @@ class AccuracyPolicy:
       ``(by, bx)``; broadcastable scalar allowed). ``w_b > 1`` loosens a
       bin, ``w_b < 1`` tightens it, ``np.inf`` means "don't care" (the
       bin never blocks refinement and never attracts effort).
-    - ``salience`` — rendered-pixel importance in ``(0, 1]``: either the
-      string ``"center"`` (a viewport-center-weighted falloff — the bins
-      the eye fixates get the tight constraint, the periphery relaxes
-      toward ``φ/salience_floor``) or a caller-supplied per-bin mask of
+    - ``salience`` — rendered-pixel importance in ``(0, 1]``: the string
+      ``"center"`` (a viewport-center-weighted falloff — the bins the
+      eye fixates get the tight constraint, the periphery relaxes
+      toward ``φ/salience_floor``), the string ``"learned"`` (resolved
+      by the engines into the session's per-bin dwell histogram — see
+      :mod:`repro.core.predict`), or a caller-supplied per-bin mask of
       the same shapes as ``weights``. φ_b is divided by salience, so
       ``s_b = 1`` keeps φ and ``s_b → 0⁺`` loosens without bound.
     - ``eps_abs`` — absolute deviation floor: bin b's budget is
@@ -139,9 +141,10 @@ class AccuracyPolicy:
         if not 0.0 < self.salience_floor <= 1.0:
             raise ValueError("salience_floor must be in (0, 1], got "
                              f"{self.salience_floor}")
-        if isinstance(self.salience, str) and self.salience != "center":
-            raise ValueError("salience must be 'center' or a per-bin "
-                             f"array, got {self.salience!r}")
+        if isinstance(self.salience, str) and self.salience not in (
+                "center", "learned"):
+            raise ValueError("salience must be 'center', 'learned', or a "
+                             f"per-bin array, got {self.salience!r}")
 
     def is_uniform(self) -> bool:
         """True when the policy cannot change any bin's budget relative
@@ -169,6 +172,16 @@ class AccuracyPolicy:
         bx, by = bins
         if self.salience is None:
             return np.ones(bx * by)
+        if isinstance(self.salience, str) and self.salience == "learned":
+            # "learned" is a marker the front-ends materialize from the
+            # session's dwell histogram BEFORE evaluation (see
+            # repro.core.predict.resolve_learned_salience); reaching the
+            # accumulator unresolved means the query bypassed them
+            raise ValueError(
+                "salience='learned' must be resolved to a per-bin map "
+                "before evaluation — route the query through AQPEngine/"
+                "ServingEngine, or call "
+                "repro.core.predict.resolve_learned_salience yourself")
         if isinstance(self.salience, str):  # "center" (validated above)
             cx = (np.arange(bx) + 0.5) / bx - 0.5
             cy = (np.arange(by) + 0.5) / by - 0.5

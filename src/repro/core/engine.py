@@ -66,14 +66,21 @@ from ..data.rawfile import RawDataset
 from . import query as query_mod
 from .bounds import AccuracyPolicy, HeatmapResult, QueryResult
 from .index import ChunkIndexSet, IndexConfig, TileIndex
+from .predict import (TrajectoryStep, ViewportPredictor, prefetch_crack,
+                      resolve_learned_salience)
 
 
 @dataclasses.dataclass
 class EngineTrace:
-    """Per-query instrumentation (scalar and heatmap results alike)."""
+    """Per-query instrumentation (scalar and heatmap results alike),
+    plus the session's viewport trajectory (one :class:`~repro.core
+    .predict.TrajectoryStep` per query) and its prefetch reports."""
 
     results: List[Union[QueryResult, HeatmapResult]] = dataclasses.field(
         default_factory=list)
+    trajectory: List[TrajectoryStep] = dataclasses.field(
+        default_factory=list)
+    prefetches: List[dict] = dataclasses.field(default_factory=list)
 
     def totals(self):
         """Session totals, plus a per-query-type (scalar vs heatmap)
@@ -103,6 +110,8 @@ class EngineTrace:
             out[f"{kind}_time_s"] = sum(r.eval_time_s for r in rs)
             out[f"{kind}_speculative_rows"] = sum(r.speculative_rows
                                                   for r in rs)
+        out["prefetches"] = len(self.prefetches)
+        out["prefetch_rows"] = sum(p["rows_read"] for p in self.prefetches)
         return out
 
 
@@ -125,12 +134,30 @@ class AQPEngine:
             self.index = TileIndex(dataset, config)
         self.alpha = alpha
         self.trace = EngineTrace()
+        # session trajectory → next-viewport prediction (prefetch()) and
+        # learned salience (policy salience="learned")
+        self.predictor = ViewportPredictor()
+        self._last_attr: Optional[str] = None
+        self._last_bins: Tuple[int, int] = (8, 8)
+
+    def _observe(self, window, bins, attr: str, dwell_s: float) -> None:
+        """Record one served viewport on the trajectory (trace + the
+        predictor's online model/hit-rate update)."""
+        self.trace.trajectory.append(TrajectoryStep(
+            tuple(float(v) for v in window),
+            None if bins is None else (int(bins[0]), int(bins[1])),
+            float(dwell_s)))
+        self.predictor.observe(window, bins=bins, dwell_s=dwell_s)
+        self._last_attr = attr
+        if bins is not None:
+            self._last_bins = (int(bins[0]), int(bins[1]))
 
     def query(self, window: Tuple[float, float, float, float], agg: str,
               attr: str, phi: float = 0.0,
               alpha: Optional[float] = None,
               batch_k: Optional[int] = None,
-              sequential: bool = False) -> QueryResult:
+              sequential: bool = False,
+              dwell_s: float = 1.0) -> QueryResult:
         """Evaluate one window-aggregate query.
 
         phi: relative accuracy constraint (0 ⇒ exact answering).
@@ -139,11 +166,14 @@ class AQPEngine:
           ``IndexConfig.batch_k``.
         sequential: use the per-tile reference refinement path (one read +
           one kernel per tile) instead of the batched pipeline.
+        dwell_s: how long the user dwelled on this viewport — weights the
+          learned-salience histogram (default 1 ⇒ uniform dwell).
         """
         r = query_mod.evaluate(self.index, window, agg, attr, phi=phi,
                                alpha=self.alpha if alpha is None else alpha,
                                batch_k=batch_k, sequential=sequential)
         self.trace.results.append(r)
+        self._observe(window, None, attr, dwell_s)
         return r
 
     def heatmap(self, window: Tuple[float, float, float, float], agg: str,
@@ -151,7 +181,8 @@ class AQPEngine:
                 phi: float = 0.0, alpha: Optional[float] = None,
                 policy: Optional[AccuracyPolicy] = None,
                 batch_k: Optional[int] = None,
-                sequential: bool = False) -> HeatmapResult:
+                sequential: bool = False,
+                dwell_s: float = 1.0) -> HeatmapResult:
         """Evaluate one φ-constrained heatmap (group-by) query.
 
         bins: (bx, by) grid laid over the window; bin id = by_row*bx +
@@ -163,18 +194,56 @@ class AQPEngine:
           salience, plus an absolute-error floor ε_abs so near-zero bins
           can't force exactness. Each bin then stops at its OWN budget
           ``max(φ_b·|value_b|, ε_abs)`` and the result carries
-          ``phi_b``/``bin_met``.
+          ``phi_b``/``bin_met``. ``salience="learned"`` is resolved here
+          into the session's dwell histogram over PAST viewports (see
+          :mod:`repro.core.predict`).
         batch_k / sequential: as in :meth:`query`.
+        dwell_s: as in :meth:`query`.
         """
+        policy = resolve_learned_salience(policy, self.predictor, window,
+                                          bins)
         r = query_mod.evaluate_heatmap(
             self.index, window, agg, attr, bins=bins, phi=phi,
             alpha=self.alpha if alpha is None else alpha, policy=policy,
             batch_k=batch_k, sequential=sequential)
         self.trace.results.append(r)
+        self._observe(window, bins, attr, dwell_s)
         return r
 
+    def prefetch(self, budget_rows: int, attr: Optional[str] = None,
+                 bins: Optional[Tuple[int, int]] = None,
+                 alpha: Optional[float] = None) -> dict:
+        """Crack the PREDICTED next viewport under a hard row budget.
+
+        Uses the session trajectory's next-viewport prediction (linear
+        extrapolation vs online model, by rolling hit-rate) and
+        pre-cracks it through the heatmap refinement machinery — at most
+        ``budget_rows`` rows are read, the per-part session bin-grid
+        memory is warmed for the predicted viewport, and answers of any
+        later query are provably unchanged (splits/enrichments are
+        answer-neutral; zero speculative rows). ``attr``/``bins``
+        default to the last queried ones. Returns a report dict (also
+        appended to ``trace.prefetches``); ``predicted=None`` means the
+        trajectory is too short to extrapolate and nothing was read.
+        """
+        attr = self._last_attr if attr is None else attr
+        bins = self._last_bins if bins is None else bins
+        pred = self.predictor.predict()
+        if pred is None or attr is None:
+            rec = {"predicted": None, "source": None, "rows_read": 0,
+                   "read_calls": 0, "tiles_cracked": 0}
+        else:
+            rec = prefetch_crack(
+                self.index, pred, attr, bins, budget_rows,
+                alpha=self.alpha if alpha is None else alpha)
+            rec["predicted"] = rec.pop("window")
+            rec["source"] = self.predictor.source
+        self.trace.prefetches.append(rec)
+        return rec
+
     def serve(self, *, mode: str = "batched",
-              crack_budget: Optional[int] = None):
+              crack_budget: Optional[int] = None,
+              prefetch_rows: Optional[int] = None):
         """Lift this engine into a concurrent multi-session server.
 
         Returns a :class:`~repro.core.serving.ServingEngine` wrapping
@@ -191,12 +260,18 @@ class AQPEngine:
           reference path — same answers and same published index,
           bit-for-bit).
         crack_budget: max queries per tick allowed to stage index
-          mutations; later arrivals skip cracking and still answer
-          within φ from pending-interval bounds (None ⇒ unlimited).
+          mutations, granted round-robin across sessions; non-granted
+          queries skip cracking and still answer within φ from
+          pending-interval bounds (None ⇒ unlimited).
+        prefetch_rows: per-session row budget for predictive
+          pre-cracking between ticks (None ⇒ off) — leftover
+          crack-budget slots are spent cracking each session's PREDICTED
+          next viewport, staged through the same epoch publication.
         """
         from .serving import ServingEngine  # circular at module scope
         return ServingEngine(self, alpha=self.alpha, mode=mode,
-                             crack_budget=crack_budget)
+                             crack_budget=crack_budget,
+                             prefetch_rows=prefetch_rows)
 
     def oracle(self, window, agg: str, attr: str) -> float:
         return query_mod.evaluate_oracle(self.index, window, agg, attr)

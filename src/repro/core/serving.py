@@ -44,11 +44,25 @@ per round even when many same-tick queries touch the same storage.
   bound already meets φ answers with ZERO reads and no staged
   mutation (the pure metadata fast path). Under index-mutation
   contention (``crack_budget`` queries per tick already staging),
-  later queries still read and fold until φ is met but SKIP cracking
-  entirely — their answers remain φ-contained because staged applies
-  never feed back into a running query's folds. The budget is keyed on
-  arrival order, so both serving modes skip the same queries and the
-  published evolution stays identical.
+  non-granted queries still read and fold until φ is met but SKIP
+  cracking entirely — their answers remain φ-contained because staged
+  applies never feed back into a running query's folds. Budget slots
+  are granted round-robin ACROSS SESSIONS (sessions in first-arrival
+  order, each session's own tickets in arrival order), so a chatty
+  session can't starve the others' refinement every tick; the grant
+  set is a pure function of the tick's ticket list, so both serving
+  modes skip the same queries and the published evolution stays
+  identical.
+
+- **Predictive pre-cracking** (``prefetch_rows``): each session's
+  trajectory feeds a :class:`~repro.core.predict.ViewportPredictor`;
+  after the tick's queries are served, leftover crack-budget slots are
+  spent cracking each active session's PREDICTED next viewport under a
+  per-session row budget. Prefetch refinement is staged through the
+  same :class:`~repro.core.index.EpochStage` with owners ordered past
+  every query, so publication stays atomic, the published evolution
+  stays mode-identical, and served answers are bit-for-bit untouched
+  (prefetch reads are never folded into any ticket's accumulator).
 
 Cross-mode parity contract (asserted in tests/test_serving.py and
 benchmarks/serving_concurrency.py): ``value/lo/hi/bound/exact``,
@@ -75,6 +89,8 @@ from . import query as query_mod
 from .bounds import AccuracyPolicy, HeatmapResult, QueryResult
 from .engine import AQPEngine, EngineTrace
 from .index import ChunkIndexSet, EpochStage, _chunk_overlaps
+from .predict import (TrajectoryStep, ViewportPredictor, prefetch_crack,
+                      resolve_learned_salience)
 from .refine import HeatmapQueryAdapter, ScalarQueryAdapter, met
 
 
@@ -112,6 +128,7 @@ class Ticket:
     bins: Optional[Tuple[int, int]] = None
     policy: Optional[AccuracyPolicy] = None
     batch_k: Optional[int] = None
+    dwell_s: float = 1.0
     result: Optional[Union[QueryResult, HeatmapResult]] = None
 
     @property
@@ -121,7 +138,10 @@ class Ticket:
 
 class Session:
     """A client handle on the shared engine: submits tickets, owns a
-    private :class:`EngineTrace`. Closing drops its queued tickets."""
+    private :class:`EngineTrace` and its own
+    :class:`~repro.core.predict.ViewportPredictor` (trajectory recorded
+    at submit time — deterministic and mode-independent). Closing drops
+    its queued tickets."""
 
     def __init__(self, engine: "ServingEngine", sid: int,
                  name: Optional[str] = None):
@@ -129,28 +149,33 @@ class Session:
         self.sid = sid
         self.name = name or f"session-{sid}"
         self.trace = EngineTrace()
+        self.predictor = ViewportPredictor()
+        self._last_attr: Optional[str] = None
+        self._last_bins: Tuple[int, int] = (8, 8)
         self.closed = False
 
     def query(self, window, agg: str, attr: str, phi: float = 0.0,
               alpha: float = 1.0,
-              batch_k: Optional[int] = None) -> Ticket:
+              batch_k: Optional[int] = None,
+              dwell_s: float = 1.0) -> Ticket:
         return self.engine._submit(Ticket(
             session=self, kind="query", window=tuple(window), agg=agg,
             attr=attr, phi=float(phi), alpha=float(alpha),
-            batch_k=batch_k))
+            batch_k=batch_k, dwell_s=float(dwell_s)))
 
     def heatmap(self, window, agg: str, attr: str,
                 bins: Tuple[int, int] = (8, 8), phi: float = 0.0,
                 alpha: float = 1.0,
                 policy: Optional[AccuracyPolicy] = None,
-                batch_k: Optional[int] = None) -> Ticket:
+                batch_k: Optional[int] = None,
+                dwell_s: float = 1.0) -> Ticket:
         assert np.isfinite(np.asarray(window, np.float64)).all(), \
             "heatmap windows must be finite rectangles"
         return self.engine._submit(Ticket(
             session=self, kind="heatmap", window=tuple(window), agg=agg,
             attr=attr, phi=float(phi), alpha=float(alpha),
             bins=(int(bins[0]), int(bins[1])), policy=policy,
-            batch_k=batch_k))
+            batch_k=batch_k, dwell_s=float(dwell_s)))
 
     def close(self) -> None:
         self.closed = True
@@ -304,12 +329,16 @@ class ServingEngine:
     engine is built. ``mode`` picks the default tick execution:
     ``"batched"`` (micro-batched reads/kernels) or ``"sequential"``
     (the per-query reference). ``crack_budget`` caps how many queries
-    per tick may stage index mutation (by arrival order; ``None`` ⇒
-    unlimited) — the skip-under-contention knob."""
+    per tick may stage index mutation (granted round-robin across
+    sessions; ``None`` ⇒ unlimited) — the skip-under-contention knob.
+    ``prefetch_rows`` (``None`` ⇒ off) is the per-session row budget
+    for predictive pre-cracking: leftover crack-budget slots are spent
+    between ticks cracking each session's predicted next viewport."""
 
     def __init__(self, engine, config=None, alpha: float = 1.0, *,
                  mode: str = "batched",
-                 crack_budget: Optional[int] = None):
+                 crack_budget: Optional[int] = None,
+                 prefetch_rows: Optional[int] = None):
         if not isinstance(engine, AQPEngine):
             engine = AQPEngine(engine, config, alpha=alpha)
         self.engine = engine
@@ -318,9 +347,12 @@ class ServingEngine:
             raise ValueError(f"unknown serving mode {mode!r}")
         self.mode = mode
         self.crack_budget = crack_budget
+        self.prefetch_rows = prefetch_rows
         self.epoch = 0
         self.last_publish: Dict[str, int] = {"rounds_published": 0,
                                              "splits_masked": 0}
+        self.last_grants: List[bool] = []
+        self.last_prefetch: List[dict] = []
         self._sessions: Dict[int, Session] = {}
         self._next_sid = 0
         self._queue: List[Ticket] = []
@@ -339,6 +371,21 @@ class ServingEngine:
     def _submit(self, ticket: Ticket) -> Ticket:
         if ticket.session.closed:
             raise RuntimeError(f"{ticket.session.name} is closed")
+        s = ticket.session
+        # learned salience is materialized from the trajectory BEFORE
+        # this viewport is observed (salience = where PAST queries
+        # dwelled), at submit time so both tick modes — and any tick
+        # batching — see the identical resolved policy
+        if ticket.kind == "heatmap":
+            ticket.policy = resolve_learned_salience(
+                ticket.policy, s.predictor, ticket.window, ticket.bins)
+        s.trace.trajectory.append(TrajectoryStep(
+            ticket.window, ticket.bins, ticket.dwell_s))
+        s.predictor.observe(ticket.window, bins=ticket.bins,
+                            dwell_s=ticket.dwell_s)
+        s._last_attr = ticket.attr
+        if ticket.bins is not None:
+            s._last_bins = ticket.bins
         self._queue.append(ticket)
         return ticket
 
@@ -346,8 +393,43 @@ class ServingEngine:
     def n_queued(self) -> int:
         return len(self._queue)
 
-    def _may_crack(self, arrival: int) -> bool:
-        return self.crack_budget is None or arrival < self.crack_budget
+    def _crack_grants(self, tickets) -> List[bool]:
+        """Which tickets may stage index mutation this tick.
+
+        ``crack_budget`` slots are granted round-robin across sessions:
+        sessions in first-arrival order, each session's own tickets in
+        arrival order — round r grants every session its (r+1)-th
+        ticket before any session gets its (r+2)-th. A pure function of
+        the ticket list, so both tick modes grant identically and the
+        published evolution stays mode-independent."""
+        n = len(tickets)
+        if self.crack_budget is None:
+            return [True] * n
+        per: Dict[int, List[int]] = {}
+        sess_order: List[int] = []
+        for i, tk in enumerate(tickets):
+            sid = tk.session.sid
+            if sid not in per:
+                per[sid] = []
+                sess_order.append(sid)
+            per[sid].append(i)
+        grants = [False] * n
+        left = int(self.crack_budget)
+        r = 0
+        while left > 0:
+            any_row = False
+            for sid in sess_order:
+                q = per[sid]
+                if r < len(q):
+                    any_row = True
+                    grants[q[r]] = True
+                    left -= 1
+                    if left <= 0:
+                        break
+            if not any_row:
+                break
+            r += 1
+        return grants
 
     # ------------------------- ticks --------------------------------- #
     def tick(self, *, mode: Optional[str] = None):
@@ -359,25 +441,70 @@ class ServingEngine:
         if not tickets:
             return []
         stage = EpochStage()
+        grants = self._crack_grants(tickets)
+        self.last_grants = grants
         t0 = time.perf_counter()
         if mode == "sequential":
-            self._tick_sequential(tickets, stage)
+            self._tick_sequential(tickets, stage, grants)
         elif mode == "batched":
-            self._tick_batched(tickets, stage, t0)
+            self._tick_batched(tickets, stage, grants, t0)
         else:
             raise ValueError(f"unknown serving mode {mode!r}")
+        self.last_prefetch = self._prefetch_predicted(tickets, stage,
+                                                      grants)
         self.last_publish = stage.publish()
         self.epoch += 1
         for tk in tickets:
             tk.session.trace.results.append(tk.result)
         return [tk.result for tk in tickets]
 
-    def _tick_sequential(self, tickets, stage) -> None:
+    def _prefetch_predicted(self, tickets, stage, grants) -> List[dict]:
+        """Spend leftover crack-budget slots cracking each active
+        session's PREDICTED next viewport (per-session ``prefetch_rows``
+        row budget), staged with owners ordered past every query so
+        publication order — hence the published evolution — is
+        mode-independent and served answers stay bit-for-bit untouched.
+        Every input (tickets, predictor states) is identical across
+        modes, so this runs identically in both."""
+        if self.prefetch_rows is None:
+            return []
+        leftover = (None if self.crack_budget is None
+                    else int(self.crack_budget) - sum(grants))
+        sessions, seen = [], set()
+        for tk in tickets:
+            if tk.session.sid not in seen:
+                seen.add(tk.session.sid)
+                sessions.append(tk.session)
+        out: List[dict] = []
+        owner = len(tickets)
+        for s in sessions:
+            if leftover is not None and leftover <= 0:
+                break
+            if s._last_attr is None:
+                continue
+            pred = s.predictor.predict()
+            if pred is None:
+                continue
+            rec = prefetch_crack(
+                self.index, pred, s._last_attr, s._last_bins,
+                self.prefetch_rows, alpha=self.engine.alpha,
+                stage=stage, owner=owner)
+            owner += 1
+            rec["predicted"] = rec.pop("window")
+            rec["source"] = s.predictor.source
+            rec["session"] = s.name
+            s.trace.prefetches.append(rec)
+            out.append(rec)
+            if leftover is not None:
+                leftover -= 1
+        return out
+
+    def _tick_sequential(self, tickets, stage, grants) -> None:
         """Reference execution: one private driver per ticket, arrival
         order, against the same frozen epoch (applies staged)."""
         for i, tk in enumerate(tickets):
             stage.set_owner(i)
-            st = stage if self._may_crack(i) else _NULL_STAGE
+            st = stage if grants[i] else _NULL_STAGE
             if tk.kind == "query":
                 tk.result = query_mod.evaluate(
                     self.index, tk.window, tk.agg, tk.attr, phi=tk.phi,
@@ -388,9 +515,9 @@ class ServingEngine:
                     phi=tk.phi, alpha=tk.alpha, policy=tk.policy,
                     batch_k=tk.batch_k, stage=st)
 
-    def _tick_batched(self, tickets, stage, t0: float) -> None:
+    def _tick_batched(self, tickets, stage, grants, t0: float) -> None:
         """Micro-batched execution: lock-step rounds, fused reads."""
-        runs = [_QueryRun(i, tk, self.index, stage, self._may_crack(i))
+        runs = [_QueryRun(i, tk, self.index, stage, grants[i])
                 for i, tk in enumerate(tickets)]
         now = time.perf_counter()
         for qr in runs:

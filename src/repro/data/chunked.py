@@ -57,6 +57,16 @@ class ChunkedDataset:
     construction) work unchanged. Accounted reads never go through the
     aggregate surface — the index layer reads each chunk's own
     ``RawDataset`` directly.
+
+    **Per-call storage override:** ``ingest(..., storage=...)`` may give
+    an individual chunk a different storage mode than the dataset
+    default — chunks are independent ``RawDataset``s, so mixed modes are
+    fine. The one constraint: ``storage="mmap"`` needs a directory to
+    put the chunk's column files in. It comes from the per-call
+    ``mmap_dir=`` argument if given, else the dataset-level ``mmap_dir``
+    from the constructor; if neither is set, ``ingest`` raises
+    ``ValueError`` (it used to crash with a ``TypeError`` from
+    ``os.path.join(None, ...)``).
     """
 
     def __init__(self, storage: str = "array",
@@ -77,17 +87,30 @@ class ChunkedDataset:
 
     def ingest(self, x: np.ndarray, y: np.ndarray,
                columns: Dict[str, np.ndarray],
-               *, storage: Optional[str] = None) -> int:
-        """Append a new chunk; returns its chunk id."""
+               *, storage: Optional[str] = None,
+               mmap_dir: Optional[str] = None) -> int:
+        """Append a new chunk; returns its chunk id.
+
+        ``storage`` overrides the dataset default for THIS chunk only;
+        ``storage="mmap"`` resolves its directory from the per-call
+        ``mmap_dir`` first, then the constructor's — a clear
+        ``ValueError`` if neither is set (see class docstring).
+        """
         if len(x) == 0:
             raise ValueError("cannot ingest an empty chunk")
         storage = self.storage if storage is None else storage
-        mmap_dir = None
+        if storage not in ("array", "csv", "mmap"):
+            raise ValueError(f"unknown storage mode {storage!r}")
+        chunk_dir = None
         if storage == "mmap":
+            base = mmap_dir if mmap_dir is not None else self._mmap_dir
+            if base is None:
+                raise ValueError(
+                    "storage='mmap' needs a directory: pass mmap_dir= to "
+                    "ingest() or construct the ChunkedDataset with one")
             import os
-            mmap_dir = os.path.join(self._mmap_dir,
-                                    f"chunk_{self._next_id:05d}")
-        ds = RawDataset(x, y, columns, mmap_dir=mmap_dir, storage=storage)
+            chunk_dir = os.path.join(base, f"chunk_{self._next_id:05d}")
+        ds = RawDataset(x, y, columns, mmap_dir=chunk_dir, storage=storage)
         return self.ingest_dataset(ds)
 
     def ingest_dataset(self, ds: RawDataset) -> int:

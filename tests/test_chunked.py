@@ -299,3 +299,35 @@ def test_session_bin_memory_answers_repeat_heatmap_without_io():
     assert repeat_off.objects_read > 0
     np.testing.assert_allclose(repeat_off.values, second.values,
                                rtol=1e-12)
+
+
+# --------------------------------------------------------------------- #
+# satellite: ingest per-call storage override (mmap without a directory)
+# --------------------------------------------------------------------- #
+def test_ingest_mmap_override_without_dir_raises_value_error(tmp_path):
+    """Regression: ``ingest(..., storage="mmap")`` on an array-mode
+    dataset (``_mmap_dir=None``) used to crash with a ``TypeError``
+    from ``os.path.join(None, ...)``; it must raise a clear
+    ``ValueError`` instead — and work when a per-call ``mmap_dir``
+    supplies the directory."""
+    cds, chunks = streaming_dataset(storage="array", ingest=1)
+    x, y, cols = chunks[1]
+    with pytest.raises(ValueError, match="mmap_dir"):
+        cds.ingest(x, y, cols, storage="mmap")
+    assert cds.n_chunks == 1            # the failed ingest left no chunk
+
+    # per-call directory resolves the override; the chunk is really
+    # mmap-backed and readable through the normal engine path
+    cid = cds.ingest(x, y, cols, storage="mmap",
+                     mmap_dir=str(tmp_path))
+    assert cds.chunk(cid).data.storage == "mmap"
+    assert cds.n_chunks == 2
+    eng = AQPEngine(cds, cfg())
+    w = (260.0, 100.0, 480.0, 700.0)    # inside chunk 1's x-slab
+    r = eng.query(w, "mean", "a0", phi=0.0)
+    truth = eng.oracle(w, "mean", "a0")
+    np.testing.assert_allclose(r.value, truth, rtol=1e-5, atol=1e-3)
+
+    # unknown per-call mode is rejected up front
+    with pytest.raises(ValueError, match="unknown storage"):
+        cds.ingest(x, y, cols, storage="parquet")

@@ -26,14 +26,15 @@ def _dataset(n=60_000, seed=0):
 
 
 def _server(seed=0, *, chunked=False, mode="batched", crack_budget=None,
-            n=60_000):
+            n=60_000, prefetch_rows=None):
     ds = _dataset(n, seed)
     if chunked:
         ds = ChunkedDataset.from_dataset(ds)
     cfg = IndexConfig(grid0=(8, 8), min_split_count=256,
                       init_metadata_attrs=("a0",))
     return ServingEngine(AQPEngine(ds, cfg), mode=mode,
-                         crack_budget=crack_budget)
+                         crack_budget=crack_budget,
+                         prefetch_rows=prefetch_rows)
 
 
 # a deterministic two-session interleaving: per tick, each session's
@@ -313,3 +314,105 @@ def test_engine_serve_shares_index():
     r = eng.query((200, 200, 800, 800), "mean", "a0", phi=0.01)
     assert r.exact or r.bound <= 0.01 + 1e-12
     assert r.objects_read < t.result.objects_read
+
+
+# --------------------------------------------------------------------- #
+# satellite: per-session round-robin crack budget (starvation fix)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("mode", ["batched", "sequential"])
+def test_crack_budget_round_robin_no_starvation(mode):
+    """Regression: the crack budget used to be keyed on ARRIVAL order,
+    so a chatty session's earlier arrivals consumed every slot and a
+    quieter session never got to refine its region. Slots are now
+    granted round-robin across sessions — with budget 2 and a session
+    submitting 3 tickets before another's 1, the quiet session's
+    ticket takes the second slot."""
+    sv = _server(mode=mode, crack_budget=2)
+    chatty = sv.open_session("chatty")
+    quiet = sv.open_session("quiet")
+    wb = (600.0, 600.0, 900.0, 900.0)
+    for d in (0.0, 15.0, 30.0):
+        chatty.query((100 + d, 100 + d, 400 + d, 400 + d), "mean", "a0",
+                     phi=PHI)
+    # φ tight enough that metadata alone can't answer: quiet MUST read
+    # — and with its grant, its refinement publishes
+    t_quiet = quiet.query(wb, "mean", "a0", phi=0.005)
+    sv.tick()
+    # arrival order is chatty,chatty,chatty,quiet; the old arrival-
+    # keyed budget granted chatty's first TWO tickets and starved quiet
+    assert sv.last_grants == [True, False, False, True]
+    assert t_quiet.result.objects_read > 0
+
+    # the grant is real: quiet's published refinement makes the repeat
+    # of its own query strictly cheaper next tick (disjoint windows, so
+    # only quiet's own cracks can explain the drop)
+    t_again = quiet.query(wb, "mean", "a0", phi=0.005)
+    sv.tick()
+    assert t_again.result.objects_read < t_quiet.result.objects_read
+
+
+# --------------------------------------------------------------------- #
+# tentpole: per-session predictive pre-cracking between ticks
+# --------------------------------------------------------------------- #
+def _pan_script(server, n_ticks=4, phi=PHI):
+    a = server.open_session("A")
+    b = server.open_session("B")
+    out = []
+    for i in range(n_ticks):
+        wa = (100 + 40 * i, 100 + 30 * i, 380 + 40 * i, 380 + 30 * i)
+        wb = (500 - 20 * i, 500 + 10 * i, 800 - 20 * i, 800 + 10 * i)
+        a.heatmap(wa, "mean", "a0", bins=(4, 4), phi=phi)
+        b.heatmap(wb, "mean", "a0", bins=(4, 4), phi=phi)
+        out.extend(server.tick())
+    return out
+
+
+@pytest.mark.parametrize("chunked", [False, True])
+def test_prefetch_keeps_batched_sequential_parity(chunked):
+    """Predictive pre-cracking is staged through the same epoch with
+    owners past every query, and its inputs (tickets + submit-time
+    predictor states) are mode-independent — so the cross-mode parity
+    contract survives with prefetching on."""
+    sa = _server(chunked=chunked, mode="batched", crack_budget=8,
+                 prefetch_rows=3_000)
+    sb = _server(chunked=chunked, mode="sequential", crack_budget=8,
+                 prefetch_rows=3_000)
+    ra = _pan_script(sa)
+    rb = _pan_script(sb)
+    for x, y in zip(ra, rb):
+        _assert_answers_equal(x, y)
+    _assert_fingerprint_equal(_fingerprint(sa.index),
+                              _fingerprint(sb.index))
+    assert sa.last_publish == sb.last_publish
+    # prefetching actually happened and was attributed per session
+    assert [p["session"] for p in sa.last_prefetch] == ["A", "B"]
+    assert sa.last_prefetch == sb.last_prefetch
+
+
+def test_prefetch_never_alters_served_answers():
+    """φ=0 served answers are bit-identical with and without predictive
+    pre-cracking (splits/enrichments are answer-neutral), and prefetch
+    only ever runs between ticks (leftover budget)."""
+    s_on = _server(mode="batched", prefetch_rows=4_000)
+    s_off = _server(mode="batched", prefetch_rows=None)
+    r_on = _pan_script(s_on, phi=0.0)
+    r_off = _pan_script(s_off, phi=0.0)
+    assert any(p["rows_read"] > 0 for p in s_on.last_prefetch)
+    for x, y in zip(r_on, r_off):
+        np.testing.assert_array_equal(x.values, y.values)
+        np.testing.assert_array_equal(x.lo, y.lo)
+        np.testing.assert_array_equal(x.hi, y.hi)
+        assert x.exact and y.exact
+    # the prefetched server answered the SAME exact answers with fewer
+    # query-time reads on the extrapolable pan
+    read_on = sum(r.objects_read for r in r_on)
+    read_off = sum(r.objects_read for r in r_off)
+    assert read_on < read_off
+
+
+def test_prefetch_consumes_only_leftover_budget():
+    """With the whole crack budget spent on queries there is nothing
+    left over — no prefetch runs, however chatty the sessions."""
+    sv = _server(mode="batched", crack_budget=2, prefetch_rows=4_000)
+    _pan_script(sv)
+    assert sv.last_prefetch == []
