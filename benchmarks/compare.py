@@ -4,13 +4,14 @@
         experiments/BENCH_baseline.json experiments/BENCH_smoke.json
 
 Reads two BENCH_*.json artifacts (benchmarks/run.py format), extracts
-every row carrying a ``GB_s=<float>`` term in its derived field, and
-exits non-zero if any row present in BOTH files dropped by more than
-``TOLERANCE`` (30%) against the baseline. The wide tolerance absorbs
-container noise (timing is already min-of-reps); what it catches is the
-class of regression that motivated the gate — an accidental revert of a
-bandwidth-engineered kernel path (e.g. the grouped jnp scatter_agg4
-rewrite is worth 2×, far outside 30%).
+every row carrying a ``GB_s=<float>`` or ``rows_per_s=<float>`` term in
+its derived field, and exits non-zero if any row present in BOTH files
+dropped by more than ``TOLERANCE`` (30%) against the baseline. The wide
+tolerance absorbs container noise (timing is already min-of-reps); what
+it catches is the class of regression that motivated the gate — an
+accidental revert of a bandwidth-engineered kernel path (e.g. the
+grouped jnp scatter_agg4 rewrite is worth 2×, far outside 30%), or a
+serving-tick change that tanks B7 throughput.
 
 Rows only in one file are reported but never fail the gate, so adding
 or renaming benches doesn't require a lockstep baseline update; refresh
@@ -26,39 +27,46 @@ import sys
 
 TOLERANCE = 0.30
 
-_GBS = re.compile(r"(?:^|;)GB_s=([0-9.eE+-]+)")
+# gated throughput metrics: bandwidth rows (kernels) and serving
+# row-throughput (B7) — higher is better for both
+_METRICS = (("GB_s", re.compile(r"(?:^|;)GB_s=([0-9.eE+-]+)")),
+            ("rows_per_s", re.compile(r"(?:^|;)rows_per_s=([0-9.eE+-]+)")))
 
 
-def load_gbs(path: str) -> dict:
+def load_metrics(path: str) -> dict:
+    """``{(row_name, metric): value}`` for every gated metric present."""
     with open(path) as f:
         data = json.load(f)
     out = {}
     for row in data["rows"]:
-        m = _GBS.search(row.get("derived", ""))
-        if m:
-            out[row["name"]] = float(m.group(1))
+        for metric, rx in _METRICS:
+            m = rx.search(row.get("derived", ""))
+            if m:
+                out[(row["name"], metric)] = float(m.group(1))
     return out
 
 
 def compare(baseline_path: str, current_path: str) -> int:
-    base = load_gbs(baseline_path)
-    cur = load_gbs(current_path)
+    base = load_metrics(baseline_path)
+    cur = load_metrics(current_path)
     failures = []
-    for name in sorted(base):
-        if name not in cur:
-            print(f"# {name}: only in baseline (skipped)")
+    for key in sorted(base):
+        name, metric = key
+        if key not in cur:
+            print(f"# {name} [{metric}]: only in baseline (skipped)")
             continue
-        b, c = base[name], cur[name]
+        b, c = base[key], cur[key]
         drop = (b - c) / b if b > 0 else 0.0
         status = "FAIL" if drop > TOLERANCE else "ok"
-        print(f"{name}: baseline={b:.2f} GB/s current={c:.2f} GB/s "
-              f"({-drop:+.1%}) {status}")
+        print(f"{name}: baseline={b:.6g} {metric} current={c:.6g} "
+              f"{metric} ({-drop:+.1%}) {status}")
         if status == "FAIL":
-            failures.append(name)
-    for name in sorted(set(cur) - set(base)):
-        print(f"# {name}: new row, {cur[name]:.2f} GB/s (not gated)")
+            failures.append(f"{name}[{metric}]")
+    for name, metric in sorted(set(cur) - set(base)):
+        print(f"# {name}: new row, {cur[(name, metric)]:.6g} {metric} "
+              f"(not gated)")
     if failures:
-        print(f"# {len(failures)} bandwidth row(s) regressed more than "
+        print(f"# {len(failures)} throughput row(s) regressed more than "
               f"{TOLERANCE:.0%}: {', '.join(failures)}")
         return 1
     print(f"# bench-compare ok ({len(base)} baseline rows)")

@@ -8,10 +8,15 @@ exploration frontends actually see). Every tick, each live session
 submits one φ-constrained mean query (every 4th submission a 4×4
 heatmap); the :class:`~repro.core.serving.ServingEngine` micro-batches
 the tick into fused gathered reads + packed multi-window kernel passes
-and publishes staged cracking atomically at tick end.
+— the heatmap rounds are ONE ``segment_window_bin_select_multi``
+dispatch per part (table + per-query suffix widths, contract-params
+binning on the part's device backend) — and publishes staged cracking
+atomically at tick end.
 
 Reported per N: p50/p99 per-query latency (``eval_time_s``), aggregate
-served rows/s, queries/s, reads and publish/mask counters.
+served rows/s, queries/s, reads and publish/mask counters. The
+``rows_per_s`` terms are regression-gated by ``benchmarks/compare.py``
+against the committed baseline, same as the kernel ``GB_s`` rows.
 
 Hard acceptance gates (assert, not just report):
 - every answer is φ-contained: ``exact or bound ≤ φ``, and its CI

@@ -752,6 +752,40 @@ class GroupedAccumulator:
         j = int(hit[0]) + 1 if hit.size else len(remaining)
         return max(1, j)
 
+    def round_certain(self, last_residual, phi: float) -> bool:
+        """True when the per-fold stopping checks of the CURRENT round
+        provably cannot fire before its last fold — the whole round may
+        then be folded wholesale (same final state, no per-fold interval
+        recomputation).
+
+        ``last_residual`` is the fused kernel's suffix-width row before
+        the round's last fold (``suffix_w[-2]`` of the round's payload):
+        the per-bin CI width the round still carries entering its
+        weakest interim check. The certainty argument is
+        :meth:`min_folds_needed`'s, run in reverse: after j folds bin
+        b's deviation is at least ``suffix_jb / 2`` and its budget at
+        most ``max(φ_b·v_max_b, ε_abs)`` evaluated at the round-entry
+        interval (intervals only shrink), so if some bin's LAST residual
+        exceeds ``2·φ·v_max_b`` (uniform) / ``2·τ_b`` (policy) then so
+        does every earlier residual (suffix rows are non-increasing) and
+        no interim ``bound ≤ φ`` check can pass. φ = 0 degenerates to
+        ``residual > 0`` on a finite-interval bin (the exact method only
+        stops early on a bound of exactly 0). min/max rounds return
+        False — their deviations don't reduce to pending widths.
+        """
+        if self.agg not in ("sum", "mean"):
+            return False
+        w = np.asarray(last_residual, np.float64)
+        if self.agg == "mean":
+            w = w / np.maximum(self.ex_cnt + self._p_cnt, 1)
+        _, lo, hi, _, _ = self.interval()
+        v_max = np.maximum(np.maximum(np.abs(lo), np.abs(hi)), EPS)
+        if self._phi_b is None:
+            thr = 2.0 * float(phi) * v_max
+        else:
+            thr = 2.0 * self._budgets(v_max)
+        return bool(((w > thr) & np.isfinite(v_max)).any())
+
 
 def _rel_bound_vec(value, lo, hi, occ):
     """Vectorized :func:`_rel_bound` over bins; unoccupied bins are 0."""

@@ -34,6 +34,7 @@ append of all children).
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
@@ -68,10 +69,15 @@ class IndexConfig:
     # host port of the SPMD session's GroupedCache (distributed.py): an
     # exact per-(tile, bin) registry keyed on (window, bins, attr). A
     # repeated heatmap folds previously-read tiles from the registry
-    # with zero raw-file I/O; a viewport change invalidates it
-    # wholesale, a split invalidates the parent's entry by deactivating
-    # the tile. Never changes answers — only cost.
+    # with zero raw-file I/O; a split invalidates the parent's entry by
+    # deactivating the tile. Never changes answers — only cost.
     session_bin_memory: bool = True
+    # registries kept warm at once (LRU by last touch): a predictive
+    # prefetch or an interleaved second viewport no longer cold-starts
+    # the viewport the user still holds — a miss-then-return sequence
+    # answers the return with zero raw-file reads. 1 restores the old
+    # single-slot rotation.
+    bin_memory_slots: int = 4
 
     def max_split_cells(self) -> int:
         """Upper bound on children per split — sizes the packed split
@@ -163,9 +169,12 @@ class TileIndex:
         self.global_minmax: Dict[str, Tuple[float, float]] = {}
 
         # session bin-grid memory (see IndexConfig.session_bin_memory):
-        # single-key registry {tile_id: (cnt_b, sum_b, min_b, max_b)}
+        # an LRU of per-viewport registries {tile_id: (cnt_b, sum_b,
+        # min_b, max_b)}, keyed on (window, bins, attr); _hm_key is the
+        # most recently touched viewport
         self._hm_key = None
-        self._hm_reg: Dict[int, tuple] = {}
+        self._hm_regs: "OrderedDict[tuple, Dict[int, tuple]]" = \
+            OrderedDict()
 
         # --- initialization pass (the "crude" index) ---
         gx, gy = config.grid0
@@ -230,12 +239,14 @@ class TileIndex:
     # ------------------------------------------------------------------ #
     # part iteration / global-id resolution (chunked-forest seam)
     # ------------------------------------------------------------------ #
-    def parts(self, window):
+    def parts(self, window, attr=None, agg=None):
         """Yield ``(gid_base, TileIndex)`` per live part overlapping the
         window. A single TileIndex is its own (only) part with base 0 —
         a ``ChunkIndexSet`` yields one entry per non-pruned chunk. The
         query layer builds accumulators over parts, keying pending tiles
-        by ``gid = base + local_tile_id``."""
+        by ``gid = base + local_tile_id``. ``attr``/``agg`` describe the
+        aggregate being answered so a chunked forest can value-prune
+        (zone maps); a monolithic index has nothing to prune."""
         yield 0, self
 
     def resolve(self, gid: int):
@@ -360,19 +371,29 @@ class TileIndex:
 
     def heatmap_cache(self, window, bins, attr: str):
         """The session bin-grid registry for ``(window, bins, attr)``,
-        or ``None`` when disabled. Keyed on the exact viewport: any key
-        change drops the registry wholesale (the SPMD GroupedCache
-        rule). Entries map an ACTIVE tile id to its exact per-bin
-        in-window contribution ``(cnt_b, sum_b, min_b, max_b)``; a split
-        tile's entry goes stale harmlessly — deactivated tiles are never
-        classification candidates again."""
+        or ``None`` when disabled. Registries live in a small LRU keyed
+        on the exact viewport (``IndexConfig.bin_memory_slots``): a
+        prefetch of a PREDICTED viewport, or a second session's
+        interleaved heatmap, no longer forfeits the warmth of the
+        viewport the user still holds — only falling out of the LRU
+        drops a registry (the single-slot SPMD GroupedCache rule is the
+        ``slots=1`` degenerate case). Entries map an ACTIVE tile id to
+        its exact per-bin in-window contribution ``(cnt_b, sum_b,
+        min_b, max_b)``; a split tile's entry goes stale harmlessly —
+        deactivated tiles are never classification candidates again."""
         if not self.cfg.session_bin_memory:
             return None
         key = (tuple(float(v) for v in window), tuple(bins), attr)
-        if key != self._hm_key:
-            self._hm_key = key
-            self._hm_reg = {}
-        return self._hm_reg
+        reg = self._hm_regs.get(key)
+        if reg is None:
+            reg = {}
+            self._hm_regs[key] = reg
+        else:
+            self._hm_regs.move_to_end(key)
+        while len(self._hm_regs) > max(1, int(self.cfg.bin_memory_slots)):
+            self._hm_regs.popitem(last=False)
+        self._hm_key = key
+        return reg
 
     def _hm_record(self, cache, tile_id: int, contrib) -> None:
         """Register a processed tile's per-bin contribution — only while
@@ -618,15 +639,16 @@ class TileIndex:
         tiles identically to scalar refinement — only the folded
         contribution shape differs).
 
-        Unlike :meth:`read_batch`, the fold contributions are ALWAYS
-        computed with the f64 host mirror, even under a device backend
-        override: per-bin counts must match the axis-index binning rule
-        (``window_bin_ids_np``) bit-for-bit — f32 device binning divides
-        in float32 and can move bin-edge objects across bins, which
-        would break the grouped accumulator's exact count bookkeeping.
-        The device kernels (``segment_window_bin_select`` jnp/pallas)
-        remain the TPU bulk data plane, validated against this mirror in
-        tests/test_kernels.py.
+        Unlike :meth:`read_batch`, the fold contributions here are
+        ALWAYS computed with the f64 host mirror, even under a device
+        backend override: the per-query path is the sequential parity
+        reference, and its sums must keep the f64 accumulation order.
+        (Per-bin COUNTS are no longer the obstacle — the axis-index
+        binning contract of ``ref.window_bin_params`` makes device
+        binning bit-identical to ``window_bin_ids_np``, which is what
+        lets the serving tick's MULTI-window pass
+        (``ops.segment_window_bin_select_multi``) run on the part's
+        device backend without breaking the count cross-check.)
 
         The pass runs the FUSED select mirror
         (``segment_window_bin_select_np``): the grouped table is
@@ -752,15 +774,17 @@ class TileIndex:
 
         # heatmap rounds: register the folded, still-active tiles in the
         # session bin-grid memory (mirrors process_heatmap). Resolved by
-        # KEY at apply time — if the registry rotated to another viewport
-        # since the read (staged applies under concurrent sessions), the
-        # stale registration is dropped rather than corrupting the
-        # current registry.
+        # KEY at apply time — the registration lands in ITS viewport's
+        # registry if that registry is still in the LRU (staged applies
+        # under concurrent sessions may interleave viewports); a key
+        # already evicted drops the stale registration rather than
+        # writing rows into a registry keyed to a different viewport.
         key = payload.get("hm_key")
-        if key is not None and key == self._hm_key:
+        reg = None if key is None else self._hm_regs.get(key)
+        if reg is not None:
             contribs = payload["hm_contribs"]
             for i, t in enumerate(tile_ids):
-                self._hm_record(self._hm_reg, t, contribs[i])
+                self._hm_record(reg, t, contribs[i])
 
     def process_batch(self, tile_ids, window, attr: str, split_flags):
         """Read + fully apply one batch (convenience one-shot wrapper)."""
@@ -1080,15 +1104,69 @@ class ChunkIndexSet:
 
     # -- driver / query surface --------------------------------------
 
-    def parts(self, window):
+    def parts(self, window, attr=None, agg=None):
         """Yield ``(gid_base, TileIndex)`` per live, non-pruned chunk in
         ingest order; pruned chunks are accounted (``pruned_calls``)
-        and cost nothing else."""
+        and cost nothing else.
+
+        Two pruning stages, both zero file I/O:
+
+        1. axis bbox — chunks disjoint from the window (as before);
+        2. value zone map — for ``agg in ("min", "max")`` with a known
+           ``attr``, chunks whose ingest-time value range provably
+           cannot contain the window extremum (see ``_value_pruned``).
+        """
+        cand = []
         for chunk in self.ds.chunks():
             if _chunk_overlaps(chunk.bbox, window):
-                yield chunk.chunk_id * self._stride, self.index_for(chunk)
+                cand.append(chunk)
             else:
                 chunk.stats.pruned_calls += 1
+        drop = self._value_pruned(cand, window, attr, agg)
+        for chunk in cand:
+            if chunk.chunk_id in drop:
+                chunk.stats.pruned_calls += 1
+            else:
+                yield chunk.chunk_id * self._stride, self.index_for(chunk)
+
+    def _occupied(self, chunk, window) -> bool:
+        """Does the chunk have at least one row inside the window?
+        Answered from the chunk index's resident axis values — zero
+        file I/O (``prepare`` has already built overlapping indexes)."""
+        ti = self.index_for(chunk)
+        full, partial = ti.classify(window)
+        if full.size and int(ti.count[full].sum()) > 0:
+            return True
+        if partial.size == 0:
+            return False
+        return int(ti.count_in_window_batch(partial, window).sum()) > 0
+
+    def _value_pruned(self, cand, window, attr, agg):
+        """Chunk ids value-pruned by the ingest-time zone maps.
+
+        Only ``min``/``max`` admit sound whole-chunk value pruning
+        (every row of a chunk still contributes to count/sum/mean, and
+        a heatmap bin may be populated by ONE chunk only, so per-bin
+        extrema cannot use window-level occupancy). Rule for ``min``:
+        any chunk with a row in the window bounds the answer above by
+        its zone-map high, so ``U = min(hi_c over occupied chunks)``
+        and a chunk with ``lo_c > U`` (strict) cannot contain the
+        window minimum — the argmin-hi occupied chunk has
+        ``lo <= hi = U`` and therefore never self-prunes, keeping the
+        answer exact. Symmetric for ``max``."""
+        if agg not in ("min", "max") or attr is None or len(cand) < 2:
+            return set()
+        ranges = [c.val_range.get(attr) for c in cand]
+        if any(r is None for r in ranges):
+            return set()          # zone map unavailable: prune nothing
+        occ = [c for c in cand if self._occupied(c, window)]
+        if not occ:
+            return set()
+        if agg == "min":
+            u = min(c.val_range[attr][1] for c in occ)
+            return {c.chunk_id for c in cand if c.val_range[attr][0] > u}
+        u = max(c.val_range[attr][0] for c in occ)
+        return {c.chunk_id for c in cand if c.val_range[attr][1] < u}
 
     def resolve(self, gid: int):
         """Map a global tile id to ``(TileIndex, local_tile_id)``."""

@@ -69,12 +69,14 @@ def _build_accumulator(index, window, agg: str, attr: str):
     degenerate case of this loop, bit for bit. Chunks pruned on their
     axis bounding box never appear as parts (zero I/O, accounted in
     ``IOStats.pruned_calls``); chunks not yet indexed are materialized
-    by ``prepare`` before the per-query snapshot.
+    by ``prepare`` before the per-query snapshot. ``attr``/``agg`` flow
+    into ``parts`` so a chunked forest can also value-prune min/max
+    queries against its ingest-time zone maps.
     """
     acc = QueryAccumulator(agg)
     full_set = set()
     n_full = n_partial = 0
-    for base, ti in index.parts(window):
+    for base, ti in index.parts(window, attr, agg):
         ti.ensure_attr(attr)
         full_ids, partial_ids = ti.classify(window)
         for t in full_ids:
@@ -162,12 +164,15 @@ def _build_grouped_accumulator(index, window, agg: str,
     contribution with zero file I/O; every other overlapping tile
     becomes pending with per-bin interval ``cnt_b · [vmin, vmax]``.
     Iterates ``index.parts(window)`` like :func:`_build_accumulator` —
-    pending tiles are keyed by global id.
+    pending tiles are keyed by global id. ``agg`` is deliberately NOT
+    passed to ``parts``: per-bin min/max value pruning with window-level
+    occupancy is unsound (a bin may be populated only by the would-be
+    pruned chunk), so heatmaps get bbox pruning only.
     """
     bx, by = bins
     acc = GroupedAccumulator(agg, bx * by)
     n_full = n_partial = 0
-    for base, ti in index.parts(window):
+    for base, ti in index.parts(window, attr):
         ti.ensure_attr(attr)
         full_ids, partial_ids = ti.classify(window)
         full_set = set(int(i) for i in full_ids)

@@ -66,6 +66,27 @@ def met(phi: float, bound: float) -> bool:
     return phi > 0.0 and bound <= phi
 
 
+def round_residual(payload):
+    """The fused select pass's residual-width row before the round's
+    LAST fold, or None when the round carries no suffix widths (scalar
+    rounds, dead runs).
+
+    Heatmap read payloads carry the fused kernel's per-bin suffix
+    widths (``suffix_w``, rows monotone non-increasing); a chunked
+    composite round's widths live per run, and its last interim check
+    is the one before the LAST run's last fold — so row ``[-2]`` of the
+    last run's matrix is THE row
+    :meth:`~repro.core.bounds.GroupedAccumulator.round_certain` needs.
+    """
+    runs = payload.get("runs")
+    if runs is not None:
+        payload = runs[-1][1]
+    sw = payload.get("suffix_w")
+    if sw is None or len(sw) < 2:
+        return None
+    return sw[-2]
+
+
 class ScalarQueryAdapter:
     """Index adapter for scalar window aggregates.
 
@@ -245,15 +266,26 @@ class RefinementDriver:
                 size = min(size * 2, k)
             contribs, payload = self.adapter.read_batch(batch)
             n_used = 0
-            if predictive and all(c is not None for c in contribs):
-                # certainty fast path: min_folds_needed is a CERTAIN
-                # lower bound, so a round sized by it cannot fire the
-                # stopping rule before its last fold — every interim
-                # _met/query_bound of the loop below is provably a
+            wholesale = all(c is not None for c in contribs)
+            if wholesale and not predictive and len(batch) > 1:
+                # the fused select pass's suffix widths extend the
+                # certainty fast path beyond predictive sizing: if the
+                # residual width entering the round's LAST fold already
+                # exceeds some bin's budget, no interim stopping check
+                # can pass (suffix rows are non-increasing) — covers
+                # φ=0 and full-size rounds the sizing argument doesn't.
+                # (Single-tile rounds have no interim check at all.)
+                row = round_residual(payload)
+                wholesale = row is not None and acc.round_certain(row, phi)
+            if wholesale:
+                # certainty fast path: the stopping rule provably cannot
+                # fire before the round's last fold (min_folds_needed is
+                # a CERTAIN lower bound; round_certain is its reverse) —
+                # every interim _met/query_bound of the loop below is a
                 # no-op. Fold the whole batch and re-derive the bound
                 # once. (Any dropped tile falls back to the per-fold
                 # loop: a drop removes width differently from a fold
-                # and the certainty argument no longer covers it.)
+                # and the certainty arguments no longer cover it.)
                 for t, contrib in zip(batch, contribs):
                     acc.fold_exact(t, *contrib)
                 n_used = len(batch)

@@ -83,7 +83,6 @@ from typing import Dict, List, Optional, Tuple, Union
 import numpy as np
 
 from ..kernels import ops
-from ..kernels import ref as ref_mod
 from ..kernels.segment_agg import MAX_SEGMENTS, MAX_UNROLL
 from . import query as query_mod
 from .bounds import AccuracyPolicy, HeatmapResult, QueryResult
@@ -91,7 +90,8 @@ from .engine import AQPEngine, EngineTrace
 from .index import ChunkIndexSet, EpochStage, _chunk_overlaps
 from .predict import (TrajectoryStep, ViewportPredictor, prefetch_crack,
                       resolve_learned_salience)
-from .refine import HeatmapQueryAdapter, ScalarQueryAdapter, met
+from .refine import (HeatmapQueryAdapter, ScalarQueryAdapter, met,
+                     round_residual)
 
 
 class NullStage:
@@ -264,9 +264,25 @@ class _QueryRun:
         return batch
 
     def fold(self, batch, contribs, payload) -> None:
-        """The driver's per-round fold + stage epilogue, verbatim."""
+        """The driver's per-round fold + stage epilogue, verbatim —
+        including its certainty fast paths (predictive sizing, and the
+        fused pass's suffix-width ``round_certain`` witness), which fold
+        a round wholesale exactly when the interim stopping checks
+        provably cannot fire."""
         acc = self.acc
         n_used = 0
+        wholesale = all(c is not None for c in contribs)
+        if wholesale and not self.predictive and len(batch) > 1:
+            row = round_residual(payload)
+            wholesale = (row is not None
+                         and acc.round_certain(row, self.phi))
+        if wholesale:
+            for t, contrib in zip(batch, contribs):
+                acc.fold_exact(t, *contrib)
+            n_used = len(batch)
+            self.processed += len(batch)
+            self.bound = acc.query_bound()
+            contribs = ()                # consumed
         for t, contrib in zip(batch, contribs):
             if met(self.phi, self.bound):
                 self.stop = True
@@ -663,22 +679,47 @@ class ServingEngine:
                      float(agg[s, 3]))
                     if agg[s, 0] else (0, 0.0, np.inf, -np.inf)
                     for s in range(s1 - s0)]
+                pos = 0
+                for it in its:
+                    it["contribs"] = contribs[pos:pos + len(it["local"])]
+                    pos += len(it["local"])
             else:
                 bx, by = fam[1], fam[2]
-                # forced f64 host mirror, like read_batch_heatmap: bin
-                # counts must match the axis-index binning bit-for-bit
-                agg = ref_mod.segment_window_bin_agg_multi_np(
-                    xs[a:b], ys[a:b], vals[a:b], f_bounds, windows,
-                    bx, by)
-                ti.adapt_stats.kernel_calls += 1
+                # ONE fused multi-window select pass under the part's
+                # backend: the per-(segment, bin) table AND every
+                # query's selection-ready suffix widths in a single
+                # dispatch. The "np" mirror keeps the f64 sequential
+                # accumulation order; device backends bin via the
+                # host-precomputed axis-index params
+                # (ref.window_bin_params), so per-bin counts and
+                # extrema stay bit-identical to the host rule — the
+                # grouped accumulator's exact count cross-check holds
+                # on every backend (f32 sums/suffixes are the usual
+                # device-tolerance contract).
+                qbounds = np.concatenate(
+                    [[0], np.cumsum([len(it["local"]) for it in its])]
+                ).astype(np.int64)
+                vmin_s = np.concatenate(
+                    [ti.meta_min[attr][it["local"]] for it in its])
+                vmax_s = np.concatenate(
+                    [ti.meta_max[attr][it["local"]] for it in its])
+                agg, suffix_w = self._heatmap_multi(
+                    ti, xs[a:b], ys[a:b], vals[a:b], f_bounds, windows,
+                    vmin_s, vmax_s, qbounds, bx, by)
                 contribs = [
                     (agg[s, :, 0].astype(np.int64), agg[s, :, 1].copy(),
                      agg[s, :, 2].copy(), agg[s, :, 3].copy())
                     for s in range(s1 - s0)]
-            pos = 0
-            for it in its:
-                it["contribs"] = contribs[pos:pos + len(it["local"])]
-                pos += len(it["local"])
+                zrow = np.zeros((1, bx * by), suffix_w.dtype)
+                for q, it in enumerate(its):
+                    qa, qb_ = int(qbounds[q]), int(qbounds[q + 1])
+                    it["contribs"] = contribs[qa:qb_]
+                    # each item's span + its literal zero terminal row —
+                    # the exact (L+1, nb) matrix read_batch_heatmap's
+                    # payload carries (row L must be exactly 0: the φ=0
+                    # selection may never see a subtraction residue)
+                    it["suffix_w"] = np.concatenate(
+                        [suffix_w[qa:qb_], zrow])
 
         # per-item payloads: slices of the group gather — identical
         # content to what TileIndex.read_batch(_heatmap) would build
@@ -691,6 +732,7 @@ class ServingEngine:
                        "attr": attr}
             tk = it["qr"].tk
             if tk.kind == "heatmap":
+                payload["suffix_w"] = it["suffix_w"]
                 payload["split_edges"] = ti._heatmap_split_edges(
                     it["local"], tk.window, tk.bins)
                 cache = ti.heatmap_cache(tk.window, tk.bins, attr)
@@ -698,6 +740,40 @@ class ServingEngine:
                                      else None)
                 payload["hm_contribs"] = it["contribs"]
             it["payload"] = payload
+
+    def _heatmap_multi(self, ti, xs, ys, vals, bounds, windows, vmin_s,
+                       vmax_s, qbounds, bx, by):
+        """One ``segment_window_bin_select_multi`` pass; device backends
+        are chunked to the packed kernels' static segment limit at
+        QUERY-SPAN boundaries (suffix widths are per-span quantities, so
+        a span must never straddle a chunk; every span is ≤ batch_k ≤
+        MAX_SEGMENTS segments, so span-aligned packing always fits)."""
+        n_seg = len(bounds) - 1
+        if ti._backend == "np" or n_seg <= MAX_SEGMENTS:
+            ti.adapt_stats.kernel_calls += 1
+            agg, suffix_w = ops.segment_window_bin_select_multi(
+                xs, ys, vals, bounds, windows, vmin_s, vmax_s, qbounds,
+                bx=bx, by=by, backend=ti._backend)
+            return np.asarray(agg), np.asarray(suffix_w)
+        qb = np.asarray(qbounds, np.int64)
+        aggs, sufs = [], []
+        s = 0
+        while s < len(qb) - 1:
+            e = s + 1
+            while e < len(qb) - 1 and qb[e + 1] - qb[s] <= MAX_SEGMENTS:
+                e += 1
+            a, b = int(qb[s]), int(qb[e])
+            o0, o1 = int(bounds[a]), int(bounds[b])
+            ti.adapt_stats.kernel_calls += 1
+            agg, suf = ops.segment_window_bin_select_multi(
+                xs[o0:o1], ys[o0:o1], vals[o0:o1],
+                bounds[a:b + 1] - bounds[a], windows[a:b],
+                vmin_s[a:b], vmax_s[a:b], qb[s:e + 1] - qb[s],
+                bx=bx, by=by, backend=ti._backend)
+            aggs.append(np.asarray(agg))
+            sufs.append(np.asarray(suf))
+            s = e
+        return np.concatenate(aggs), np.concatenate(sufs)
 
     def _scalar_multi(self, ti, xs, ys, vals, bounds, windows):
         """One ``segment_window_agg_multi`` pass; device backends are

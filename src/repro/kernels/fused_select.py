@@ -42,6 +42,17 @@ exactly zero) is the residual width after folding the first s tiles —
 the quantity the refinement driver's stopping rule consumes. Computed
 as a reversed cumsum, not total − prefix: the f32/f64 subtraction would
 leave ≈+ε at s = S where the exact-method (φ=0) selection must see 0.
+
+The MULTI-window family (``segment_window_bin_select_multi_*``) is the
+serving tick's variant: one dispatch where segment s is masked and
+binned by its OWN window (one packed pass answers many concurrent
+viewports) and the suffix widths are per-QUERY-SPAN
+(:func:`segmented_suffix`). Its device backends bin through the
+host-precomputed contract params (``ref.window_bin_params`` — f64-
+derived cell sizes rounded to f32, never recomputed in-kernel), which
+is what makes the device counts/extrema bit-identical to the f64 host
+mirror and lets the serving tick leave the host path without breaking
+the batched ≡ sequential guarantee.
 """
 from __future__ import annotations
 
@@ -76,6 +87,26 @@ def window_bin_ids(xs, ys, window, bx: int, by: int):
     ch = jnp.maximum((qy1 - qy0) / by, 1e-30)
     wx = jnp.clip(jnp.floor((xs - qx0) / cw).astype(jnp.int32), 0, bx - 1)
     wy = jnp.clip(jnp.floor((ys - qy0) / ch).astype(jnp.int32), 0, by - 1)
+    return m, wy * bx + wx
+
+
+def window_bin_ids_params(xs, ys, params, bx: int, by: int):
+    """Axis-index binning from host-precomputed contract params — the
+    device side of ``ref.window_bin_params``.
+
+    ``params`` is the per-object (already gathered) ``(..., 6)`` f32
+    row ``(x0, y0, x1, y1, cw, ch)``; the mask and
+    ``clip(floor((x − x0) / cw))`` here are plain IEEE f32 ops, so on
+    float32 coordinates the result is BIT-IDENTICAL to
+    ``ref.window_bin_ids_np`` (see the contract note there: the cell
+    sizes must come from the host's f64 derivation, never recomputed
+    from f32 window coords in-kernel)."""
+    x0, y0 = params[..., 0], params[..., 1]
+    x1, y1 = params[..., 2], params[..., 3]
+    cw, ch = params[..., 4], params[..., 5]
+    m = (xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1)
+    wx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32), 0, bx - 1)
+    wy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32), 0, by - 1)
     return m, wy * bx + wx
 
 
@@ -131,6 +162,26 @@ def suffix_residual(width_sorted, agg: str = "sum"):
     return jnp.concatenate([suf, zrow])
 
 
+def segmented_suffix(w, qend):
+    """Per-query-span inclusive suffix widths over a packed width matrix
+    ``(S[, nb])``: row s is the summed residual width of rows
+    ``s .. end(s)−1`` of s's OWN query span, where ``qend[s]`` is the
+    (exclusive) end row of the span containing s.
+
+    The multi-query epilogue: a serving tick packs several queries'
+    fold-ordered (query, tile) segments into one stream, and each
+    query's stopping rule wants the suffix over ITS segments only.
+    Computed as one global reversed cumsum minus the gathered span-tail
+    (f32 — the device epilogue is allclose to, not bit-equal with, the
+    np mirror's per-span reversed cumsum; consumers append the
+    exactly-zero terminal row themselves, it is never the result of a
+    subtraction)."""
+    suf = jnp.cumsum(w[::-1], axis=0)[::-1]
+    pad = jnp.concatenate(
+        [suf, jnp.zeros((1,) + w.shape[1:], w.dtype)])
+    return suf - pad[qend]
+
+
 # --------------------------------------------------------------------- #
 # f64 host mirror (the RefinementDriver's control plane)
 # --------------------------------------------------------------------- #
@@ -156,6 +207,38 @@ def segment_window_bin_select_np(xs, ys, vals, boundaries, window,
     return agg, suffix_w
 
 
+def segment_window_bin_select_multi_np(xs, ys, vals, boundaries, windows,
+                                       bx: int, by: int, vmin_s, vmax_s,
+                                       qbounds=None):
+    """Multi-window fused host pass: per-segment OWN-window grouped
+    table + per-QUERY-SPAN selection suffix widths.
+
+    The table is ``ref.segment_window_bin_agg_multi_np`` — per segment
+    bit-for-bit the single-window sorted-slice f64 reference.
+    ``qbounds`` (``(n_q+1,)`` segment offsets, default one span) cuts
+    the fold-ordered segments into per-query spans; ``suffix_w`` is
+    ``(S, bx·by)`` f64 where row s is the residual width over rows
+    ``s..end−1`` of s's own span — each span's rows are BIT-FOR-BIT the
+    first L rows a single-query :func:`segment_window_bin_select_np`
+    would produce over the same stream (same f64 reversed cumsum over
+    the same widths; consumers append the literal zero terminal row).
+    Returns ``(agg (S, bx·by, 4) f64, suffix_w (S, bx·by) f64)``."""
+    agg = ref.segment_window_bin_agg_multi_np(xs, ys, vals, boundaries,
+                                              windows, bx, by)
+    n_seg = agg.shape[0]
+    dv = (np.asarray(vmax_s, np.float64)
+          - np.asarray(vmin_s, np.float64))[:, None]
+    w = agg[:, :, 0] * dv
+    qb = (np.array([0, n_seg], np.int64) if qbounds is None
+          else np.asarray(qbounds, np.int64))
+    suffix_w = np.empty_like(w)
+    for q in range(len(qb) - 1):
+        a, b = int(qb[q]), int(qb[q + 1])
+        if b > a:
+            suffix_w[a:b] = np.cumsum(w[a:b][::-1], axis=0)[::-1]
+    return agg, suffix_w
+
+
 # --------------------------------------------------------------------- #
 # jnp oracle
 # --------------------------------------------------------------------- #
@@ -169,6 +252,28 @@ def segment_window_bin_select_ref(xs, ys, vals, sids, window, grid,
                                          grid, valid, n_seg)
     w = agg[:, :, 0] * (vmax_s - vmin_s)[:, None]
     return agg, suffix_residual(w, "sum")
+
+
+def segment_window_bin_select_multi_ref(xs, ys, vals, sids, params, grid,
+                                        valid, n_seg, vmin_s, vmax_s,
+                                        qend):
+    """jnp oracle of the MULTI-window fused op: every segment masked and
+    binned by its own window via the gathered contract params
+    (``ref.window_bin_params`` rows — NOT the rescaled-float binning of
+    ``ref.segment_window_bin_agg_multi_ref``, so counts/extrema are
+    bit-identical to the host mirror), plus the per-span suffix-width
+    epilogue. ``qend`` is the per-segment exclusive span end (see
+    :func:`segmented_suffix`). Returns ``(agg (S, k, 4),
+    suffix_w (S, k))`` f32."""
+    bx, by = grid
+    sid_c, _ = ref._seg_key(sids, 0, n_seg, 1)
+    p = params[sid_c]
+    m, cid = window_bin_ids_params(xs, ys, p, bx, by)
+    if valid is not None:
+        m = m & valid
+    agg = ref.segment_bin_agg4(sids, cid, vals, m, n_seg, bx * by)
+    w = agg[:, :, 0] * (vmax_s - vmin_s)[:, None]
+    return agg, segmented_suffix(w, qend)
 
 
 # --------------------------------------------------------------------- #
@@ -295,3 +400,141 @@ def segment_window_bin_select_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
                              interpret=interpret)
     w = agg[:, :, 0] * (vmax_s - vmin_s)[:, None]
     return agg, suffix_residual(w, "sum")
+
+
+# --------------------------------------------------------------------- #
+# multi-window megakernel: per-segment OWN windows in one dispatch
+# --------------------------------------------------------------------- #
+
+def _make_fused_multi_kernel(group: int, bx: int, by: int):
+    nb = bx * by
+
+    def kernel(par_ref, x_ref, y_ref, v_ref, sid_ref, valid_ref,
+               out_ref):
+        g = pl.program_id(0)    # cell group (outer)
+        r = pl.program_id(1)    # row block (minor) — out block resident
+
+        @pl.when(r == 0)
+        def _init():
+            shp = out_ref.shape[:-1]
+            out_ref[:, :, 0] = jnp.zeros(shp, jnp.float32)
+            out_ref[:, :, 1] = jnp.zeros(shp, jnp.float32)
+            out_ref[:, :, 2] = jnp.full(shp, jnp.inf, jnp.float32)
+            out_ref[:, :, 3] = jnp.full(shp, -jnp.inf, jnp.float32)
+
+        xs = x_ref[...]
+        ys = y_ref[...]
+        vs = v_ref[...]
+        sid = sid_ref[...]
+        valid = valid_ref[...] != 0
+        for t in range(group):  # static unroll over the GROUP's segments
+            # per-segment window + HOST-derived cell sizes: the binning
+            # contract (ref.window_bin_params) — recomputing cw/ch from
+            # the f32 coords here would round differently than the host
+            # mirror and break the count cross-check
+            x0 = par_ref[t, 0]
+            y0 = par_ref[t, 1]
+            x1 = par_ref[t, 2]
+            y1 = par_ref[t, 3]
+            cw = par_ref[t, 4]
+            ch = par_ref[t, 5]
+            s_glob = (g * group + t).astype(jnp.float32)
+            inw = ((xs >= x0) & (xs <= x1) & (ys >= y0) & (ys <= y1)
+                   & valid & (sid == s_glob))
+            cx = jnp.clip(jnp.floor((xs - x0) / cw).astype(jnp.int32),
+                          0, bx - 1)
+            cy = jnp.clip(jnp.floor((ys - y0) / ch).astype(jnp.int32),
+                          0, by - 1)
+            cid = cy * bx + cx
+            for c in range(nb):  # …and window bins: group·nb reductions
+                m = inw & (cid == c)
+                i = t * nb + c
+                out_ref[0, i, 0] = out_ref[0, i, 0] + jnp.sum(
+                    m.astype(jnp.float32))
+                out_ref[0, i, 1] = out_ref[0, i, 1] + jnp.sum(
+                    jnp.where(m, vs, 0.0))
+                out_ref[0, i, 2] = jnp.minimum(
+                    out_ref[0, i, 2], jnp.min(jnp.where(m, vs, jnp.inf)))
+                out_ref[0, i, 3] = jnp.maximum(
+                    out_ref[0, i, 3],
+                    jnp.max(jnp.where(m, vs, -jnp.inf)))
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_seg", "bx", "by", "block_rows",
+                                    "seg_group", "interpret"))
+def fused_table_multi_pallas(xs2d, ys2d, vals2d, sid2d, valid2d, params,
+                             *, n_seg, bx, by,
+                             block_rows=DEFAULT_BLOCK_ROWS,
+                             seg_group=None, interpret=True):
+    """Multi-window megakernel: per-(segment, bin) ``(count, sum, min,
+    max)`` where segment s is masked AND binned by its OWN window, in
+    ONE kernel over the 2-D ``(cell_groups, row_blocks)`` grid.
+
+    ``params`` is the ``(n_seg, 6)`` f32 contract-param table from
+    ``ref.window_bin_params`` — the group's rows stream in beside the
+    operand planes (the ``segment_window_agg_multi`` window-row idiom,
+    widened to 6 columns so the in-kernel binning is bit-compatible
+    with the host rule). Grid planning as in :func:`fused_table_pallas`
+    (``param_cols=6`` in the VMEM model). Returns float32
+    ``(n_seg, bx·by, 4)``."""
+    nb = bx * by
+    assert n_seg <= MAX_SEGMENTS, n_seg
+    rows = xs2d.shape[0]
+    assert rows % block_rows == 0, (rows, block_rows)
+    group, n_groups, n_pad = plan_cell_groups(n_seg, nb,
+                                              block_rows=block_rows,
+                                              param_cols=6,
+                                              group=seg_group)
+    par = params.astype(jnp.float32).reshape(n_seg, 6)
+    if n_pad > n_seg:
+        # padded segment rows are never matched by any object's sid;
+        # all-ones params keep their dead binning arithmetic finite
+        par = jnp.concatenate(
+            [par, jnp.ones((n_pad - n_seg, 6), jnp.float32)])
+    valid2d = valid2d.astype(jnp.int8)
+
+    out = pl.pallas_call(
+        _make_fused_multi_kernel(group, bx, by),
+        grid=(n_groups, rows // block_rows),
+        in_specs=[
+            pl.BlockSpec((group, 6), lambda g, r: (g, 0)),  # params
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda g, r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, group * nb, 4),
+                               lambda g, r: (g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_groups, group * nb, 4),
+                                       jnp.float32),
+        interpret=interpret,
+    )(par, xs2d.astype(jnp.float32), ys2d.astype(jnp.float32),
+      vals2d.astype(jnp.float32), sid2d.astype(jnp.float32), valid2d)
+
+    return out.reshape(n_groups * group, nb, 4)[:n_seg]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_seg", "bx", "by", "block_rows",
+                                    "seg_group", "interpret"))
+def segment_window_bin_select_multi_pallas(xs2d, ys2d, vals2d, sid2d,
+                                           valid2d, params, vmin_s,
+                                           vmax_s, qend, *, n_seg, bx,
+                                           by,
+                                           block_rows=DEFAULT_BLOCK_ROWS,
+                                           seg_group=None,
+                                           interpret=True):
+    """Single-dispatch multi-window fused select: the
+    :func:`fused_table_multi_pallas` megakernel + the per-query-span
+    :func:`segmented_suffix` epilogue in one jit. Returns
+    ``(agg (S, bx·by, 4), suffix_w (S, bx·by))`` float32."""
+    agg = fused_table_multi_pallas(xs2d, ys2d, vals2d, sid2d, valid2d,
+                                   params, n_seg=n_seg, bx=bx, by=by,
+                                   block_rows=block_rows,
+                                   seg_group=seg_group,
+                                   interpret=interpret)
+    w = agg[:, :, 0] * (vmax_s - vmin_s)[:, None]
+    return agg, segmented_suffix(w, qend)

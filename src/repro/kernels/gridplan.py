@@ -58,6 +58,7 @@ def plan_cell_groups(n_seg: int, k: int, *,
                      block_rows: int = DEFAULT_BLOCK_ROWS,
                      n_planes: int = 4,
                      budget: int = VMEM_BUDGET,
+                     param_cols: int = 8,
                      group: int | None = None) -> Tuple[int, int, int]:
     """Size the outer (cell-group) grid axis for a grouped kernel call.
 
@@ -67,8 +68,11 @@ def plan_cell_groups(n_seg: int, k: int, *,
     outer axis, and ``n_seg_pad = group · n_groups`` (callers pad their
     per-segment parameter arrays to this row count; padded rows are
     never matched by any object's segment id and are sliced off the
-    result). ``group`` may be forced (tests use it to exercise the
-    multi-group path at small shapes).
+    result). ``param_cols`` is the per-segment f32 parameter width the
+    kernel streams alongside the group (4 for window rows, 6 for the
+    multi-window binning params of ``fused_select``; the default 8
+    bounds the split-edges kernels). ``group`` may be forced (tests use
+    it to exercise the multi-group path at small shapes).
     """
     if n_seg <= 0 or k <= 0:
         raise ValueError(f"need n_seg > 0 and k > 0, got {n_seg}, {k}")
@@ -80,7 +84,8 @@ def plan_cell_groups(n_seg: int, k: int, *,
         # back off until the program's resident set fits the budget
         # (streams dominate; this only ever triggers for huge k·group)
         while group > 1 and vmem_bytes(block_rows, group * k, n_planes,
-                                       param_floats=group * 8) > budget:
+                                       param_floats=group * param_cols
+                                       ) > budget:
             group -= 1
     else:
         group = max(1, min(int(group), n_seg))

@@ -495,6 +495,75 @@ def segment_window_bin_agg_multi(xs, ys, vals, boundaries, windows, *, bx,
         int(n), n_seg, bx, by, backend, interpret)
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("n_seg", "bx", "by", "backend",
+                                    "interpret", "seg_group"))
+def _segment_window_bin_select_multi_flat(xs, ys, vals, sids, params,
+                                          vmin_s, vmax_s, qend, n, n_seg,
+                                          bx, by, backend, interpret,
+                                          seg_group=None):
+    if backend == "jnp":
+        valid = jnp.arange(xs.shape[0]) < n
+        return fused_select.segment_window_bin_select_multi_ref(
+            xs, ys, vals, sids, params, (bx, by), valid, n_seg,
+            vmin_s, vmax_s, qend)
+    xs2, ys2, vs2, sid2, valid2 = pack2d(xs, ys, vals, sids, n=xs.shape[0])
+    valid2 = valid2 * (jnp.arange(valid2.size).reshape(valid2.shape) <
+                       n).astype(jnp.int8)
+    return fused_select.segment_window_bin_select_multi_pallas(
+        xs2, ys2, vs2, sid2, valid2, params, vmin_s, vmax_s, qend,
+        n_seg=n_seg, bx=bx, by=by, seg_group=seg_group,
+        interpret=interpret)
+
+
+def segment_window_bin_select_multi(xs, ys, vals, boundaries, windows,
+                                    vmin_s, vmax_s, qbounds=None, *, bx,
+                                    by, backend=None, interpret=True,
+                                    seg_group=None):
+    """Multi-window fused heatmap-selection primitive: per-segment
+    OWN-window per-bin ``(count, sum, min, max)`` PLUS per-query-span
+    selection suffix widths, in one pass — the serving tick's kernel.
+
+    :func:`segment_window_bin_agg_multi` with the selection epilogue of
+    :func:`segment_window_bin_select` fused in: ``windows`` is
+    ``(S, 4)`` (segment s masked and binned by its own window),
+    ``vmin_s/vmax_s`` are the per-segment sound value bounds in fold
+    order, and ``qbounds`` (``(n_q+1,)`` segment offsets, default one
+    span) cuts the packed segments into per-query spans. The second
+    return is ``suffix_w`` of shape ``(S, bx·by)`` — row s is the
+    residual per-bin CI width over the remaining UNFOLDED segments of
+    s's own span; each consumer appends its span's literal zero
+    terminal row (the φ=0 selection must see exact 0, never a
+    subtraction residue). Backend semantics as in
+    :func:`segment_window_agg_multi`: "np" is the f64 host mirror whose
+    ``agg`` is bit-for-bit ``segment_window_bin_agg_multi
+    (backend="np")`` and whose span rows match the single-window
+    ``segment_window_bin_select(backend="np")``; device backends bin
+    via the precomputed axis-index contract params
+    (``ref.window_bin_params``) so counts/extrema stay bit-identical to
+    the host rule (f32 sums/suffixes allclose). ``seg_group`` forces
+    the megakernel's segments-per-program group.
+    """
+    backend = backend or default_backend()
+    boundaries = np.asarray(boundaries, np.int64)
+    if backend == "np":
+        return fused_select.segment_window_bin_select_multi_np(
+            xs, ys, vals, boundaries, windows, bx, by, vmin_s, vmax_s,
+            qbounds)
+    n_seg = len(boundaries) - 1
+    n = int(boundaries[-1])
+    qb = (np.array([0, n_seg], np.int64) if qbounds is None
+          else np.asarray(qbounds, np.int64))
+    qend = np.repeat(qb[1:], np.diff(qb)).astype(np.int32)
+    params = ref.window_bin_params(windows, bx, by)
+    sids = np.repeat(np.arange(n_seg), np.diff(boundaries))
+    xs, ys, vals, sids = _bucket_pad(xs, ys, vals, sids, n=n)
+    return _segment_window_bin_select_multi_flat(
+        xs, ys, vals, sids, params,
+        np.asarray(vmin_s, np.float32), np.asarray(vmax_s, np.float32),
+        qend, int(n), n_seg, bx, by, backend, interpret, seg_group)
+
+
 def window_count(xs, ys, window, *, n=None, backend=None):
     """Count of objects in window (axis attributes only — no file access)."""
     agg = window_agg(xs, ys, jnp.zeros_like(jnp.asarray(xs, jnp.float32)),
@@ -512,4 +581,5 @@ __all__ = ["window_agg", "bin_agg", "segment_window_agg", "segment_bin_agg",
            "segment_bin_agg_edges", "segment_window_bin_agg",
            "segment_window_bin_select",
            "segment_window_agg_multi", "segment_window_bin_agg_multi",
+           "segment_window_bin_select_multi",
            "window_count", "window_mask_np", "pack2d", "default_backend"]

@@ -530,6 +530,31 @@ def window_bin_ids_np(xs, ys, window, bx, by):
     return m, cy * bx + cx
 
 
+def window_bin_params(windows, bx, by):
+    """Per-window axis-index binning parameters for the DEVICE kernels:
+    float32 ``(S, 6)`` rows ``(x0, y0, x1, y1, cw, ch)``.
+
+    THE binning contract. :func:`window_bin_ids_np` runs on float32
+    coordinates, so NumPy-2 weak promotion demotes its python-float
+    window scalars to f32 at every op — the mask compares and the
+    ``floor((x - x0) / cw)`` arithmetic are all f32 — but the cell
+    sizes ``cw/ch`` are derived in f64 FIRST and only then rounded.  A
+    kernel that recomputes ``(x1 - x0) / bx`` from f32 window coords
+    (the rescaled-float binning of the single-window kernels) rounds
+    differently and can land edge objects in the neighbouring bin.
+    Device kernels must instead take these host-precomputed params and
+    bin with ``clip(floor((x - x0) / cw), 0, bx-1)``: IEEE f32
+    subtract/divide/floor round identically under numpy and XLA, so the
+    device mask and bin ids are BIT-IDENTICAL to the host rule.
+    """
+    windows = np.asarray(windows, np.float64).reshape(-1, 4)
+    out = np.empty((len(windows), 6), np.float32)
+    out[:, :4] = windows
+    out[:, 4] = np.maximum((windows[:, 2] - windows[:, 0]) / bx, 1e-30)
+    out[:, 5] = np.maximum((windows[:, 3] - windows[:, 1]) / by, 1e-30)
+    return out
+
+
 def segment_window_bin_agg_np(xs, ys, vals, boundaries, window, bx, by):
     """Per-contiguous-segment, per-window-bin aggregates (f64 ``(S,K,4)``).
 

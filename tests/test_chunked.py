@@ -331,3 +331,82 @@ def test_ingest_mmap_override_without_dir_raises_value_error(tmp_path):
     # unknown per-call mode is rejected up front
     with pytest.raises(ValueError, match="unknown storage"):
         cds.ingest(x, y, cols, storage="parquet")
+
+
+def test_bin_memory_lru_survives_viewport_alternation():
+    """Regression for the single-slot registry rotation: alternating
+    viewports (the prefetch_crack pattern — predicted window warms up
+    while the current one is still hot) used to evict A's registry the
+    moment B was touched. With the LRU keeping ``bin_memory_slots``
+    registries, returning to A answers from memory: zero rows read.
+    ``bin_memory_slots=1`` restores the old rotation behaviour."""
+    def engine(**kw):
+        ds = make_synthetic_dataset(n=10_000, seed=9)
+        return AQPEngine(ds, cfg(min_split_count=100_000, **kw))
+
+    wa = (200.0, 200.0, 700.0, 700.0)
+    wb = (210.0, 200.0, 710.0, 700.0)
+    eng = engine()
+    first = eng.heatmap(wa, "mean", "a0", bins=(4, 4), phi=0.0)
+    eng.heatmap(wb, "mean", "a0", bins=(4, 4), phi=0.0)   # miss: rotate?
+    back = eng.heatmap(wa, "mean", "a0", bins=(4, 4), phi=0.0)
+    assert back.objects_read == 0 and back.read_calls == 0
+    np.testing.assert_allclose(back.values, first.values, rtol=1e-12)
+
+    # capacity eviction: slots distinct other viewports push A out
+    slots = eng.index.cfg.bin_memory_slots
+    for i in range(slots):
+        wi = (200.0 + 10.0 * (i + 2), 200.0, 700.0 + 10.0 * (i + 2), 700.0)
+        eng.heatmap(wi, "mean", "a0", bins=(4, 4), phi=0.0)
+    evicted = eng.heatmap(wa, "mean", "a0", bins=(4, 4), phi=0.0)
+    assert evicted.objects_read > 0
+
+    # slots=1: the pre-LRU single-slot rotation, warmth lost on return
+    eng1 = engine(bin_memory_slots=1)
+    eng1.heatmap(wa, "mean", "a0", bins=(4, 4), phi=0.0)
+    eng1.heatmap(wb, "mean", "a0", bins=(4, 4), phi=0.0)
+    back1 = eng1.heatmap(wa, "mean", "a0", bins=(4, 4), phi=0.0)
+    assert back1.objects_read > 0
+    np.testing.assert_allclose(back1.values, first.values, rtol=1e-12)
+
+
+# --------------------------------------------------------------------- #
+# satellite: per-chunk value-range (zone map) pruning
+# --------------------------------------------------------------------- #
+def test_value_range_pruning_minmax_exact():
+    """Chunks value-stratified on one attribute over the SAME spatial
+    footprint: bbox pruning gets nothing, but the ingest-time zone maps
+    prove two of three chunks cannot contain the window min (resp.
+    max) — exact answers, ``pruned_calls`` accounted, zero reads on the
+    pruned chunks. count/sum/mean never value-prune (every row still
+    contributes)."""
+    rng = np.random.default_rng(11)
+    cds = ChunkedDataset()
+    for lo in (0.0, 100.0, 200.0):
+        n = 3000
+        x = rng.uniform(0, DOMAIN, n).astype(np.float32)
+        y = rng.uniform(0, DOMAIN, n).astype(np.float32)
+        cds.ingest(x, y, {"a0": rng.uniform(lo, lo + 50, n).astype(
+            np.float32)})
+    eng = AQPEngine(cds, cfg())
+    w = (100.0, 100.0, 900.0, 900.0)
+
+    # mean first: no value pruning, and it pays all lazy-build cost so
+    # the later snapshots isolate pure query-time reads
+    r3 = eng.query(w, "mean", "a0", phi=0.0)
+    np.testing.assert_allclose(r3.value, eng.oracle(w, "mean", "a0"),
+                               rtol=1e-6)
+    assert r3.pruned_chunks == 0
+
+    before = {cid: cds.chunk(cid).stats.snapshot() for cid in (1, 2)}
+    r = eng.query(w, "min", "a0", phi=0.0)
+    assert r.exact and r.value == eng.oracle(w, "min", "a0")
+    assert r.pruned_chunks == 2
+    for cid in (1, 2):  # value-pruned: no refinement reads at all
+        d = cds.chunk(cid).stats.delta(before[cid])
+        assert d.rows_read == 0 and d.read_calls == 0
+        assert d.pruned_calls == 1
+
+    r2 = eng.query(w, "max", "a0", phi=0.0)
+    assert r2.exact and r2.value == eng.oracle(w, "max", "a0")
+    assert r2.pruned_chunks == 2

@@ -530,3 +530,172 @@ def test_fused_select_forced_multi_group(seg_group):
         backend="pallas", seg_group=seg_group)
     np.testing.assert_array_equal(np.asarray(base_agg), np.asarray(agg))
     np.testing.assert_array_equal(np.asarray(base_w), np.asarray(w))
+
+
+def _multi_setup(lens, rng_seed=29, degenerate_at=None):
+    """Segments + per-segment own windows + sound value intervals."""
+    xs, ys, vs, bounds = _segments(lens)
+    rng = np.random.default_rng(rng_seed)
+    n_seg = len(lens)
+    lo = rng.uniform(0, 50, (n_seg, 2))
+    wins = np.concatenate(
+        [lo, lo + rng.uniform(25, 45, (n_seg, 2))], axis=1
+    ).astype(np.float32)
+    if degenerate_at is not None:
+        wins[degenerate_at] = (2.0, 2.0, 2.0, 2.0)  # zero-area window
+    vmin_s = rng.uniform(-40, -10, n_seg).astype(np.float32)
+    vmax_s = vmin_s + rng.uniform(5, 60, n_seg).astype(np.float32)
+    return xs, ys, vs, bounds, wins, vmin_s, vmax_s
+
+
+@pytest.mark.parametrize("lens", [[1, 300], [0, 37, 500, 128, 3],
+                                  [1201, 0, 1799, 3001]])
+@pytest.mark.parametrize("grid", [(1, 1), (2, 2), (4, 3)])
+def test_fused_select_multi_backends_agree(lens, grid):
+    """Multi-window fused select: three-backend parity on both outputs,
+    with padded 2-D-grid tails (odd counts), empty segments, a
+    degenerate zero-area window, and a qbounds layout that includes an
+    EMPTY query span. Counts AND extrema are bit-equal across backends
+    (the contract-params binning, not the rescaled-float one)."""
+    bx, by = grid
+    xs, ys, vs, bounds, wins, vmin_s, vmax_s = _multi_setup(
+        lens, degenerate_at=len(lens) // 2)
+    n_seg, nb = len(lens), bx * by
+    # spans: [0, 1), [1, n-1), [n-1, n-1) empty, [n-1, n)
+    qb = np.array([0, 1, n_seg - 1, n_seg - 1, n_seg], np.int64)
+    outs = [ops.segment_window_bin_select_multi(
+        xs, ys, vs, bounds, wins, vmin_s, vmax_s, qbounds=qb,
+        bx=bx, by=by, backend=bk) for bk in ("np", "jnp", "pallas")]
+    (a_agg, a_w), (b_agg, b_w), (c_agg, c_w) = (
+        (np.asarray(agg), np.asarray(w)) for agg, w in outs)
+    np.testing.assert_allclose(a_agg, b_agg, rtol=1e-4, atol=2e-3)
+    np.testing.assert_allclose(b_agg, c_agg, rtol=1e-5, atol=2e-3)
+    for o in (b_agg, c_agg):  # counts and extrema: bit-equal
+        np.testing.assert_array_equal(a_agg[:, :, 0], o[:, :, 0])
+        np.testing.assert_array_equal(
+            a_agg[:, :, 2].astype(np.float32), o[:, :, 2])
+        np.testing.assert_array_equal(
+            a_agg[:, :, 3].astype(np.float32), o[:, :, 3])
+    # the np agg IS the established multi-window host mirror, bitwise
+    np.testing.assert_array_equal(a_agg, ref.segment_window_bin_agg_multi_np(
+        xs, ys, vs, bounds, wins, bx, by))
+    # suffix widths: (S, nb); each span's rows are its own f64 reversed
+    # cumsum of cnt·Δv, bit-for-bit on the np mirror
+    dv = (vmax_s - vmin_s).astype(np.float64)
+    per = a_agg[:, :, 0] * dv[:, None]
+    want = np.zeros((n_seg, nb))
+    for q in range(len(qb) - 1):
+        s, e = int(qb[q]), int(qb[q + 1])
+        if e > s:
+            want[s:e] = np.cumsum(per[s:e][::-1], axis=0)[::-1]
+    assert a_w.shape == (n_seg, nb)
+    np.testing.assert_array_equal(a_w, want)
+    np.testing.assert_allclose(a_w, b_w, rtol=1e-4, atol=2e-3)
+    np.testing.assert_allclose(b_w, c_w, rtol=1e-5, atol=2e-3)
+
+
+@pytest.mark.parametrize("lens", [[0, 37, 500, 128, 3], [600] * 5])
+def test_fused_select_multi_all_negative_values(lens):
+    """All-negative value plane through the multi-window kernel: maxima
+    must stay negative and bit-equal across the fused backends."""
+    bx = by = 2
+    xs, ys, vs, bounds, wins, vmin_s, vmax_s = _multi_setup(lens)
+    vs = -np.abs(vs) - 1.0
+    outs = [ops.segment_window_bin_select_multi(
+        xs, ys, vs, bounds, wins, vmin_s, vmax_s, bx=bx, by=by,
+        backend=bk) for bk in ("np", "jnp", "pallas")]
+    a = np.asarray(outs[0][0])
+    for agg, _ in outs[1:]:
+        agg = np.asarray(agg)
+        np.testing.assert_array_equal(a[:, :, 0], agg[:, :, 0])
+        np.testing.assert_array_equal(a[:, :, 2].astype(np.float32),
+                                      agg[:, :, 2])
+        np.testing.assert_array_equal(a[:, :, 3].astype(np.float32),
+                                      agg[:, :, 3])
+    assert (a[a[:, :, 0] > 0, 3] < 0).all()
+
+
+def test_fused_select_multi_empty_windows():
+    """Every per-segment window off the data domain: zero counts, ±inf
+    extrema, zero suffix widths on every backend (single default span —
+    qbounds omitted)."""
+    xs, ys, vs, bounds, wins, vmin_s, vmax_s = _multi_setup([64, 0, 129])
+    wins = wins + 500.0  # all windows off the [0, 100] domain
+    for bk in ("np", "jnp", "pallas"):
+        agg, w = ops.segment_window_bin_select_multi(
+            xs, ys, vs, bounds, wins, vmin_s, vmax_s, bx=2, by=2,
+            backend=bk)
+        agg, w = np.asarray(agg), np.asarray(w)
+        np.testing.assert_array_equal(agg[:, :, 0],
+                                      np.zeros_like(agg[:, :, 0]))
+        assert (agg[:, :, 2] > 0).all() and np.isinf(agg[:, :, 2]).all()
+        assert (agg[:, :, 3] < 0).all() and np.isinf(agg[:, :, 3]).all()
+        np.testing.assert_array_equal(w, np.zeros_like(w))
+
+
+@pytest.mark.parametrize("seg_group", [1, 2, 3])
+def test_fused_select_multi_forced_multi_group(seg_group):
+    """Forced cell-group sizes across the 2-D grid's outer axis must be
+    bit-identical to the planner's own choice for the multi kernel —
+    same row-block accumulation order per (t, c) cell, and the per-group
+    param rows must stream in aligned with their segments."""
+    lens = [301, 0, 512, 77, 1000]
+    xs, ys, vs, bounds, wins, vmin_s, vmax_s = _multi_setup(lens)
+    qb = np.array([0, 2, 5], np.int64)
+    base = ops.segment_window_bin_select_multi(
+        xs, ys, vs, bounds, wins, vmin_s, vmax_s, qbounds=qb,
+        bx=3, by=2, backend="pallas")
+    got = ops.segment_window_bin_select_multi(
+        xs, ys, vs, bounds, wins, vmin_s, vmax_s, qbounds=qb,
+        bx=3, by=2, backend="pallas", seg_group=seg_group)
+    np.testing.assert_array_equal(np.asarray(base[0]), np.asarray(got[0]))
+    np.testing.assert_array_equal(np.asarray(base[1]), np.asarray(got[1]))
+
+
+def test_window_bin_params_binning_contract():
+    """THE binning contract, property-tested: device binning from the
+    host-precomputed ``ref.window_bin_params`` rows is bit-identical to
+    ``ref.window_bin_ids_np`` on float32 coordinates — random windows,
+    points snapped onto closed window edges and interior grid lines,
+    plus a degenerate zero-area window — and both match
+    ``geometry.bin_cell_ids`` (the ownership rule) whenever coordinates
+    and cell sizes are exactly representable."""
+    from repro.core import geometry
+    from repro.kernels import fused_select
+    rng = np.random.default_rng(41)
+    bx, by = 5, 3
+    windows = [np.array([2.0, 2.0, 2.0, 2.0])]  # degenerate
+    for _ in range(12):
+        x0, y0 = rng.uniform(0, 50, 2)
+        windows.append(np.array([x0, y0, x0 + rng.uniform(0.01, 60),
+                                 y0 + rng.uniform(0.01, 60)]))
+    for win in windows:
+        xs = rng.uniform(-5, 115, 4096).astype(np.float32)
+        ys = rng.uniform(-5, 115, 4096).astype(np.float32)
+        # snap a slice of points onto the window edges and onto the
+        # host rule's own grid lines (the adversarial coordinates)
+        w32 = win.astype(np.float32)
+        xs[:64] = np.resize(w32[[0, 2]], 64)
+        ys[64:128] = np.resize(w32[[1, 3]], 64)
+        cw = np.float32(max((win[2] - win[0]) / bx, 1e-30))
+        ch = np.float32(max((win[3] - win[1]) / by, 1e-30))
+        xs[128:192] = (w32[0] + cw * np.arange(64, dtype=np.float32)
+                       % (bx + 1)).astype(np.float32)
+        ys[192:256] = (w32[1] + ch * np.arange(64, dtype=np.float32)
+                       % (by + 1)).astype(np.float32)
+        m_h, cid_h = ref.window_bin_ids_np(xs, ys, win, bx, by)
+        params = ref.window_bin_params(win[None, :], bx, by)
+        p = jnp.broadcast_to(jnp.asarray(params[0]), (len(xs), 6))
+        m_d, cid_d = fused_select.window_bin_ids_params(
+            jnp.asarray(xs), jnp.asarray(ys), p, bx, by)
+        m_d, cid_d = np.asarray(m_d), np.asarray(cid_d)
+        np.testing.assert_array_equal(m_h, m_d)
+        np.testing.assert_array_equal(cid_h[m_h], cid_d[m_d])
+    # exactly-representable case: host rule ≡ geometry ownership rule
+    win = np.array([0.0, 0.0, 80.0, 48.0])  # cw=16, ch=16 exactly
+    xs = (rng.integers(-16, 200, 4096) * 0.5).astype(np.float32)
+    ys = (rng.integers(-16, 120, 4096) * 0.5).astype(np.float32)
+    m_h, cid_h = ref.window_bin_ids_np(xs, ys, win, bx, by)
+    cid_g = geometry.bin_cell_ids(xs.astype(np.float64),
+                                  ys.astype(np.float64), win, bx, by)
+    np.testing.assert_array_equal(cid_h[m_h], cid_g[m_h])

@@ -416,3 +416,15 @@ def test_prefetch_consumes_only_leftover_budget():
     sv = _server(mode="batched", crack_budget=2, prefetch_rows=4_000)
     _pan_script(sv)
     assert sv.last_prefetch == []
+
+
+def test_batched_tick_hot_path_is_fused_multi():
+    """The heatmap serving tick's hot path must be the fused multi-window
+    op, not the retired per-segment host-mirror loop: serving may not
+    reference ``segment_window_bin_agg_multi_np`` at all (the batched ≡
+    sequential parity above proves the replacement answer-neutral)."""
+    import inspect
+    from repro.core import serving as serving_mod
+    src = inspect.getsource(serving_mod)
+    assert "segment_window_bin_agg_multi_np" not in src
+    assert "segment_window_bin_select_multi" in src
